@@ -1,0 +1,14 @@
+"""Figure 3: BSGF queries A1–A5 under SEQ / PAR / GREEDY (/1-ROUND)."""
+from __future__ import annotations
+
+from benchmarks.common import bench_family
+from repro.core import queries as Q
+
+
+def run(n_guard: int = 4096, n_cond: int = 4096, sel: float = 0.5):
+    results = []
+    for qid in ("A1", "A2", "A3", "A4", "A5"):
+        qs = Q.make_queries(qid)
+        db_np = Q.gen_db(qs, n_guard=n_guard, n_cond=n_cond, sel=sel)
+        results += bench_family(qid, qs, db_np)
+    return results

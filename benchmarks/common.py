@@ -1,0 +1,97 @@
+"""Shared benchmark harness.
+
+Each benchmark evaluates paper queries on synthetic data under several
+strategies and reports, per strategy:
+
+* measured net/total time (jobs re-run once warm so jit compilation does
+  not pollute timings; SimComm serializes shard work, so measured wall
+  time is the *total-time* proxy and Σ-round-max the *net-time* proxy —
+  DESIGN.md §8),
+* modeled total/net cost under both cost-constant sets (HADOOP Table 5 /
+  TPU v5e re-pricing),
+* exact engine counters (shuffled bytes, input rows).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core import queries as Q
+from repro.core.costmodel import HADOOP, TPU_V5E, stats_of_db
+from repro.core.executor import Executor, ExecutorConfig
+from repro.core.planner import (
+    Plan, plan_cost, plan_greedy, plan_one_round, plan_par, plan_seq, plan_sgf,
+)
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+
+DEFAULT_P = 8
+
+
+@dataclass
+class BenchResult:
+    name: str
+    strategy: str
+    net_s: float
+    total_s: float
+    model_total: float
+    model_net: float
+    tpu_total: float
+    jobs: int
+    rounds: int
+    bytes_shuffled: int
+    input_rows: int
+
+    def row(self) -> str:
+        return (
+            f"{self.name},{self.strategy},{self.net_s:.4f},{self.total_s:.4f},"
+            f"{self.model_total:.2f},{self.model_net:.2f},{self.tpu_total:.6f},"
+            f"{self.jobs},{self.rounds},{self.bytes_shuffled},{self.input_rows}"
+        )
+
+
+HEADER = ("name,strategy,net_s,total_s,model_total,model_net,tpu_total,"
+          "jobs,rounds,bytes_shuffled,input_rows")
+
+
+def run_plan(name: str, strategy: str, plan: Plan, db, P: int = DEFAULT_P) -> BenchResult:
+    stats = stats_of_db(db)
+    # warm run (jit compile), then measured run
+    Executor(dict(db), SimComm(P)).execute(plan)
+    ex = Executor(dict(db), SimComm(P))
+    env, report = ex.execute(plan)
+    modeled = plan_cost(plan, stats, HADOOP)
+    tpu = plan_cost(plan, stats, TPU_V5E)
+    return BenchResult(
+        name=name, strategy=strategy,
+        net_s=report.net_time, total_s=report.total_time,
+        model_total=modeled["total"], model_net=modeled["net"],
+        tpu_total=tpu["total"],
+        jobs=report.n_jobs, rounds=plan.n_rounds,
+        bytes_shuffled=report.bytes_shuffled(),
+        input_rows=report.input_rows(),
+    )
+
+
+def bsgf_plans(qs, db, *, include_seq=True, include_one_round=True):
+    stats = stats_of_db(db)
+    plans = {
+        "PAR": plan_par(qs),
+        "GREEDY": plan_greedy(qs, stats, HADOOP),
+    }
+    if include_seq and len(qs) == 1:
+        try:
+            plans["SEQ"] = plan_seq(qs[0])
+        except ValueError:
+            pass
+    if include_one_round:
+        plans["1ROUND"] = plan_one_round(qs)
+    return plans
+
+
+def bench_family(name: str, qs, db_np, P: int = DEFAULT_P, **plan_kw):
+    db = db_from_dict(db_np, P=P)
+    out = []
+    for strat, plan in bsgf_plans(qs, db, **plan_kw).items():
+        out.append(run_plan(name, strat, plan, db, P))
+    return out

@@ -1,0 +1,15 @@
+"""Figure 4: large BSGF queries B1 (16-atom conjunction) and B2
+(uniqueness query), including the 1-ROUND plan for B2 (single key)."""
+from __future__ import annotations
+
+from benchmarks.common import bench_family
+from repro.core import queries as Q
+
+
+def run(n_guard: int = 4096, n_cond: int = 4096, sel: float = 0.5):
+    results = []
+    for qid in ("B1", "B2"):
+        qs = Q.make_queries(qid)
+        db_np = Q.gen_db(qs, n_guard=n_guard, n_cond=n_cond, sel=sel)
+        results += bench_family(qid, qs, db_np)
+    return results

@@ -1,0 +1,58 @@
+"""Roofline/§Perf benchmark for the paper's own technique: one MSJ job
+lowered on the production mesh via shard_map, with the paper's
+optimizations toggled — (packing, bloom, fused 1-ROUND) — reporting
+exact shuffled bytes (the collective-term driver) and modeled TPU cost.
+
+This is the "most representative of the paper" hillclimb cell: the
+optimization sequence IS the paper's §5.1 list plus the beyond-paper
+generalized 1-ROUND and bloom prefilter (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import queries as Q
+from repro.core.executor import Executor, ExecutorConfig
+from repro.core.planner import plan_one_round, plan_par, plan_greedy
+from repro.core.costmodel import HADOOP, TPU_V5E, stats_of_db
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+
+
+@dataclass
+class Variant:
+    name: str
+    packing: bool
+    bloom_bits: int
+    strategy: str  # par | greedy | one_round
+
+
+VARIANTS = [
+    Variant("baseline(no-pack,PAR)", False, 0, "par"),
+    Variant("+packing", True, 0, "par"),
+    Variant("+greedy-grouping", True, 0, "greedy"),
+    Variant("+bloom", True, 8192, "greedy"),
+    Variant("+fused-1ROUND", True, 8192, "one_round"),
+]
+
+
+def run(n_guard: int = 8192, sel: float = 0.3, P: int = 16):
+    qs = Q.make_queries("A3")
+    db_np = Q.gen_db(qs, n_guard=n_guard, n_cond=n_guard, sel=sel)
+    db = db_from_dict(db_np, P=P)
+    from repro.core.planner import plan_par as _pp
+    out = []
+    for v in VARIANTS:
+        if v.strategy == "par":
+            plan = plan_par(qs)
+        elif v.strategy == "greedy":
+            plan = plan_greedy(qs, stats_of_db(db), HADOOP)
+        else:
+            plan = plan_one_round(qs)
+        cfgx = ExecutorConfig(packing=v.packing, bloom_bits=v.bloom_bits)
+        ex = Executor(dict(db), SimComm(P), cfgx)
+        env, report = ex.execute(plan)
+        s = report.summary()
+        out.append((v.name, s["bytes_shuffled"], s["input_rows"], s["jobs"],
+                    report.net_time, report.total_time))
+    return out

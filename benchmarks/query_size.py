@@ -1,0 +1,20 @@
+"""Figure 8: query-size scaling — A3-style star queries, 2..16 atoms."""
+from __future__ import annotations
+
+from benchmarks.common import bench_family
+from repro.core import queries as Q
+from repro.core.algebra import Atom, BSGF, all_of
+
+
+def star_query(n_atoms: int) -> BSGF:
+    atoms = [Atom(f"C{i}", "x") for i in range(n_atoms)]
+    return BSGF("Z", Q.XYZW, Atom("R", *Q.XYZW), all_of(*atoms))
+
+
+def run(n_guard: int = 4096):
+    results = []
+    for n_atoms in (2, 4, 8, 16):
+        qs = [star_query(n_atoms)]
+        db_np = Q.gen_db(qs, n_guard=n_guard, n_cond=n_guard, sel=0.5)
+        results += bench_family(f"star{n_atoms}", qs, db_np)
+    return results

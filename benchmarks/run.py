@@ -1,0 +1,67 @@
+"""Run every paper benchmark: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (DESIGN.md §8); results print as CSV.
+``--quick`` shrinks data sizes for CI-style runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    bsgf_strategies,
+    costmodel_ablation,
+    large_queries,
+    msj_roofline,
+    query_size,
+    scaling,
+    selectivity,
+    sgf_strategies,
+)
+from benchmarks.common import HEADER
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small data sizes")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names to run")
+    args = ap.parse_args(argv)
+    n = 1024 if args.quick else 4096
+
+    suites = {
+        "bsgf_strategies(Fig3)": lambda: bsgf_strategies.run(n_guard=n, n_cond=n),
+        "large_queries(Fig4)": lambda: large_queries.run(n_guard=n, n_cond=n),
+        "sgf_strategies(Fig5)": lambda: sgf_strategies.run(n_guard=n, n_cond=n),
+        "scaling(Fig7)": scaling.run,
+        "query_size(Fig8)": lambda: query_size.run(n_guard=n),
+        "selectivity(Tab3)": lambda: selectivity.run(n_guard=n),
+    }
+    if args.only:
+        keep = args.only.split(",")
+        suites = {k: v for k, v in suites.items() if any(s in k for s in keep)}
+
+    print(HEADER)
+    for name, fn in suites.items():
+        t0 = time.time()
+        for r in fn():
+            print(r.row(), flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    if not args.only or "ablation" in (args.only or ""):
+        results, acc = costmodel_ablation.run(n_guard=n // 2)
+        for r in results:
+            print(r.row(), flush=True)
+        print(f"# costmodel ranking accuracy: gumbo={acc['gumbo']:.3f} "
+              f"wang={acc['wang']:.3f}")
+
+    if not args.only or "msj" in (args.only or ""):
+        print("# msj_roofline (paper-technique perf ladder):")
+        print("# variant,bytes_shuffled,input_rows,jobs,net_s,total_s")
+        for row in msj_roofline.run(n_guard=n * 2):
+            print("# " + ",".join(str(x) for x in row), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Figure 7: data-size and cluster-size scaling on A3-style queries."""
+from __future__ import annotations
+
+from benchmarks.common import bench_family, run_plan
+from repro.core import queries as Q
+from repro.core.relation import db_from_dict
+from repro.core.costmodel import HADOOP, stats_of_db
+from repro.core.planner import plan_par, plan_greedy, plan_one_round, plan_seq
+
+
+def run():
+    qs = Q.make_queries("A3")
+    results = []
+    # (a) data scaling at fixed P
+    for n in (1024, 4096, 16384):
+        db_np = Q.gen_db(qs, n_guard=n, n_cond=n, sel=0.5)
+        for r in bench_family(f"A3-data{n}", qs, db_np, P=8):
+            results.append(r)
+    # (b) cluster scaling at fixed data
+    db_np = Q.gen_db(qs, n_guard=8192, n_cond=8192, sel=0.5)
+    for P in (2, 8, 32):
+        for r in bench_family(f"A3-P{P}", qs, db_np, P=P):
+            results.append(r)
+    # (c) data+cluster co-scaling (weak scaling)
+    for n, P in ((2048, 2), (8192, 8), (32768, 32)):
+        db_np = Q.gen_db(qs, n_guard=n, n_cond=n, sel=0.5)
+        for r in bench_family(f"A3-weak{n}x{P}", qs, db_np, P=P):
+            results.append(r)
+    return results

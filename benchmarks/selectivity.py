@@ -1,0 +1,15 @@
+"""Table 3: selectivity sweep (0.1 → 0.9) for A1–A3."""
+from __future__ import annotations
+
+from benchmarks.common import bench_family
+from repro.core import queries as Q
+
+
+def run(n_guard: int = 4096):
+    results = []
+    for qid in ("A1", "A2", "A3"):
+        qs = Q.make_queries(qid)
+        for sel in (0.1, 0.5, 0.9):
+            db_np = Q.gen_db(qs, n_guard=n_guard, n_cond=n_guard, sel=sel)
+            results += bench_family(f"{qid}-sel{sel}", qs, db_np)
+    return results

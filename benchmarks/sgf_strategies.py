@@ -1,0 +1,21 @@
+"""Figures 5/6: nested SGF queries C1–C4 under SEQUNIT / PARUNIT /
+GREEDY-SGF / 1-ROUND."""
+from __future__ import annotations
+
+from benchmarks.common import DEFAULT_P, run_plan
+from repro.core import queries as Q
+from repro.core.costmodel import HADOOP, stats_of_db
+from repro.core.planner import plan_sgf
+from repro.core.relation import db_from_dict
+
+
+def run(n_guard: int = 4096, n_cond: int = 4096, sel: float = 0.5):
+    results = []
+    for qid in ("C1", "C2", "C3", "C4"):
+        sgf = Q.make_sgf(qid)
+        db_np = Q.gen_db(sgf, n_guard=n_guard, n_cond=n_cond, sel=sel)
+        db = db_from_dict(db_np, P=DEFAULT_P)
+        for strat in ("sequnit", "parunit", "greedy", "one_round"):
+            plan = plan_sgf(sgf, strat, stats_of_db(db), HADOOP)
+            results.append(run_plan(qid, strat.upper(), plan, db))
+    return results

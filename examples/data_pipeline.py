@@ -1,0 +1,28 @@
+"""The paper's engine as a production data pipeline: corpus curation as
+a multi-semi-join workload, comparing evaluation strategies.
+
+    Keep := SELECT * FROM Docs(doc,domain,h1,h2)
+            WHERE NOT Dup(h1) AND NOT Dup(h2)
+              AND NOT Blocked(domain) AND Quality(doc)
+
+Run:  PYTHONPATH=src python examples/data_pipeline.py
+"""
+import time
+
+from repro.data import pipeline, synthetic
+
+rels = synthetic.corpus_relations(16384, dup_frac=0.25, blocked_frac=0.15, seed=3)
+print(f"corpus: {len(rels['Docs'])} docs, {len(rels['Dup'])} dup hashes, "
+      f"{len(rels['Blocked'])} blocked domains")
+
+baseline = None
+for strategy in ("par", "greedy", "one_round"):
+    t0 = time.time()
+    kept, summary = pipeline.filter_corpus(rels, P=8, strategy=strategy)
+    dt = time.time() - t0
+    if baseline is None:
+        baseline = kept
+    assert (kept == baseline).all(), "strategies disagree!"
+    print(f"{strategy:10s}: kept {len(kept):6d} docs  jobs={summary['jobs']}  "
+          f"shuffled={summary['bytes_shuffled']:9d}B  wall={dt:5.2f}s")
+print("all strategies agree ✓")

@@ -1,0 +1,54 @@
+"""Quickstart: evaluate the paper's running example (§1) end to end.
+
+    SELECT (x,y) FROM R(x,y) WHERE (S(x,y) OR S(y,x)) AND T(x,z)
+
+Builds a small synthetic database, plans the query under PAR / GREEDY /
+1-ROUND, executes each on an 8-shard simulated mesh, checks the results
+against the set-semantics oracle, and prints the paper's metrics.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import ref_engine
+from repro.core.algebra import And, Atom, BSGF, Or
+from repro.core.costmodel import HADOOP, stats_of_db
+from repro.core.executor import execute_plan
+from repro.core.planner import plan_greedy, plan_one_round, plan_par
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+
+P = 8
+rng = np.random.default_rng(0)
+db_np = {
+    "R": rng.integers(0, 64, (2000, 2)).astype(np.int32),
+    "S": rng.integers(0, 64, (1500, 2)).astype(np.int32),
+    "T": rng.integers(0, 64, (1000, 2)).astype(np.int32),
+}
+
+query = BSGF(
+    "Z", ("x", "y"), Atom("R", "x", "y"),
+    And(Or(Atom("S", "x", "y"), Atom("S", "y", "x")), Atom("T", "x", "z")),
+)
+print("query:", query)
+
+setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+want = ref_engine.eval_bsgf(setdb, query)
+print(f"oracle: |Z| = {len(want)}")
+
+db = db_from_dict(db_np, P=P)
+stats = stats_of_db(db)
+plans = {
+    "PAR     (one job per semi-join)": plan_par([query]),
+    "GREEDY  (gain-grouped MSJ jobs)": plan_greedy([query], stats, HADOOP),
+    "1-ROUND (fused MSJ+EVAL)       ": plan_one_round([query]),
+}
+for name, plan in plans.items():
+    env, report = execute_plan(db, plan, SimComm(P))
+    got = env["Z"].to_set()
+    assert got == want, f"{name}: WRONG RESULT"
+    s = report.summary()
+    print(f"{name}: |Z|={len(got):4d}  jobs={s['jobs']}  rounds={plan.n_rounds}  "
+          f"shuffled={s['bytes_shuffled']:8d}B  net={s['net_time']*1e3:7.1f}ms  "
+          f"total={s['total_time']*1e3:7.1f}ms")
+print("all plans agree with the oracle ✓")

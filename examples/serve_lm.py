@@ -1,0 +1,55 @@
+"""Serve a small model with continuously-batched requests.
+
+Mixed-length prompts arrive in a queue; the batcher fills decode slots,
+prefills each prompt, and steps all active slots together (per-slot
+position clocks).  Outputs are verified against unbatched generation.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch falcon-mamba-7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model
+from repro.serve.batcher import Batcher, Request
+from repro.serve.serve_step import greedy_generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--verify", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True, dtype="float32")
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    b = Batcher(cfg, params, max_batch=3, max_len=96)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 24))
+        r = Request(i, rng.integers(0, cfg.vocab, plen).astype(np.int32), args.max_new)
+        reqs.append(r)
+        b.submit(r)
+    t0 = time.time()
+    b.run()
+    dt = time.time() - t0
+    print(f"served {len(reqs)} requests in {dt:.2f}s")
+    for r in reqs:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
+        if args.verify:
+            batch = {"tokens": jnp.asarray(r.prompt[None, :], jnp.int32)}
+            want = greedy_generate(cfg, params, batch, steps=args.max_new, max_len=96)[0]
+            assert (np.asarray(want) == np.asarray(r.out)).all(), f"req {r.rid} mismatch"
+    print("continuous batching matches unbatched generation ✓")
+
+
+if __name__ == "__main__":
+    main()

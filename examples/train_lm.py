@@ -1,0 +1,70 @@
+"""End-to-end driver: SGF-filtered data pipeline → LM training.
+
+1. Build a synthetic corpus's metadata relations and filter them with the
+   paper's MSJ engine (the Keep query — data/pipeline.py).
+2. Train a ~smoke-scale model of the chosen architecture for a few
+   hundred steps on the surviving documents, with checkpointing.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --arch qwen3-0.6b --steps 200
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import pipeline, synthetic
+from repro.ft import supervisor
+from repro.models import model
+from repro.train import optimizer, train_step as ts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true", help="full (non-smoke) config")
+    args = ap.parse_args()
+
+    # --- stage 1: the paper's engine curates the corpus -------------------
+    rels = synthetic.corpus_relations(4096, seed=1)
+    kept, summary = pipeline.filter_corpus(rels, P=8, strategy="one_round")
+    print(f"[pipeline] kept {len(kept)}/4096 docs "
+          f"(jobs={summary['jobs']}, shuffled={summary['bytes_shuffled']}B)")
+
+    # --- stage 2: train on the surviving stream ---------------------------
+    cfg = get_config(args.arch, smoke=not args.full)
+    opt_cfg = optimizer.OptConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    state = ts.init_state(cfg, jax.random.PRNGKey(0), opt_cfg)
+    n = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"[train] {cfg.name}: {n/1e6:.2f}M params")
+    step_fn = jax.jit(ts.make_train_step(cfg, opt_cfg))
+
+    def batch_fn(step):
+        # sample doc ids from the kept set to seed the token stream
+        rng = np.random.default_rng(np.random.SeedSequence([7, step]))
+        seeds = rng.choice(kept, size=args.batch)
+        b = synthetic.token_batch(cfg, "train", args.batch, args.seq, step, seed=int(seeds[0]))
+        return b
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        t0 = time.time()
+        state, hist = supervisor.run_train_loop(
+            state, step_fn, batch_fn, steps=args.steps,
+            ckpt_dir=ckpt_dir, ckpt_every=max(args.steps // 4, 1), log_every=10,
+        )
+        dt = time.time() - t0
+    first, last = hist[0][1], hist[-1][1]
+    print(f"[train] loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({args.steps*args.batch*args.seq/dt:,.0f} tok/s)")
+    assert last < first, "loss did not improve"
+    print("ok ✓")
+
+
+if __name__ == "__main__":
+    main()

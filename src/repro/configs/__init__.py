@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    ShapeSpec,
+    SHAPES,
+    get_config,
+    list_archs,
+    shape_applicable,
+)

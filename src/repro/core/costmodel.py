@@ -1,0 +1,284 @@
+"""The MapReduce I/O cost model of Section 3.3, with the paper's refinement.
+
+The model prices one job as
+
+    cost_h + Σ_i cost_map(N_i, M_i) + cost_red(M, K)
+
+where the *refinement over Wang & Chan* (``cost_gumbo`` vs ``cost_wang``) is
+that the map-side sort/merge term is computed **per input partition**
+(Eq. 2) rather than on the aggregated map output (Eq. 3).  The two models
+disagree exactly when input relations have non-proportional map output
+ratios (e.g. a constant-filtered conditional atom next to a fan-out guard).
+
+Two constant presets are provided:
+
+* ``HADOOP`` — the paper's Table 5 (cost units per MB on the VSC cluster).
+* ``TPU_V5E`` — the same *structure* re-priced for one TPU v5e chip:
+  hdfs read/write ↦ HBM traffic at 819 GB/s, transfer ↦ ICI at ~50 GB/s
+  per link, local sort/merge ↦ on-chip passes over VMEM-resident buffers,
+  job overhead ↦ dispatch latency of a jitted program.  Units are seconds
+  per MB.  The *relative* trade-offs the planner reasons about (scan
+  sharing vs. merge amplification) survive the re-pricing; absolute values
+  are reported in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Mapping, Sequence
+
+from repro.core.algebra import SemiJoin
+
+BYTES_PER_CELL = 4  # engine values are int32
+MB = 1e6
+
+
+@dataclass(frozen=True)
+class CostConstants:
+    l_r: float  # local disk (TPU: on-chip) read cost per MB
+    l_w: float  # local disk write cost per MB
+    h_r: float  # hdfs (TPU: HBM) read cost per MB
+    h_w: float  # hdfs write cost per MB
+    t: float  # transfer (TPU: ICI) cost per MB
+    D: int  # external sort merge factor
+    buf_map: float  # map task buffer limit (MB)
+    buf_red: float  # reduce task buffer limit (MB)
+    cost_h: float  # per-job startup overhead
+    split_mb: float  # input split per mapper (Hadoop: 128MB)
+    red_mb: float  # intermediate data per reducer (Gumbo: 256MB)
+    meta_bytes: int = 16  # per-record map output metadata (Hadoop)
+
+
+#: Paper Table 5 (cost units per MB).
+HADOOP = CostConstants(
+    l_r=0.03,
+    l_w=0.085,
+    h_r=0.15,
+    h_w=0.25,
+    t=0.017,
+    D=10,
+    buf_map=409.0,
+    buf_red=512.0,
+    cost_h=10.0,
+    split_mb=128.0,
+    red_mb=256.0,
+)
+
+#: TPU v5e re-pricing, seconds per MB.
+#: HBM 819 GB/s -> 1/819e3 s/MB; ICI ~50 GB/s/link -> 1/50e3 s/MB;
+#: on-chip merge pass ~ 1 TB/s effective -> 1e-6 s/MB; dispatch ~ 100 us.
+#: buffers: VMEM-resident sort buffer ~ 64 MB of HBM staging per core.
+TPU_V5E = CostConstants(
+    l_r=1.0e-6,
+    l_w=1.0e-6,
+    h_r=1.0 / 819e3,
+    h_w=1.0 / 819e3,
+    t=1.0 / 50e3,
+    D=8,
+    buf_map=64.0,
+    buf_red=64.0,
+    cost_h=100e-6,
+    split_mb=256.0,
+    red_mb=256.0,
+)
+
+
+def _merge_passes(m_mb: float, meta_mb: float, workers: int, buf: float, D: int) -> float:
+    """log_D ⌈((M + M̂)/m) / buf⌉, clamped to ≥ 0 (no spill → no merge)."""
+    if m_mb <= 0:
+        return 0.0
+    spill = math.ceil(max(1.0, (m_mb + meta_mb) / max(workers, 1) / buf))
+    return max(0.0, math.log(spill, D))
+
+
+def cost_map(n_mb: float, m_mb: float, c: CostConstants, *, records: float = 0.0) -> float:
+    """Map-phase cost on one uniform input partition (Eq. cost_map)."""
+    meta_mb = records * c.meta_bytes / MB
+    mappers = max(1, math.ceil(n_mb / c.split_mb))
+    merge = (c.l_r + c.l_w) * m_mb * _merge_passes(m_mb, meta_mb, mappers, c.buf_map, c.D)
+    return c.h_r * n_mb + merge + c.l_w * m_mb
+
+
+def cost_red(m_mb: float, k_mb: float, c: CostConstants) -> float:
+    """Reduce-phase cost (Eq. cost_red)."""
+    reducers = max(1, math.ceil(m_mb / c.red_mb))
+    merge = (c.l_r + c.l_w) * m_mb * _merge_passes(m_mb, 0.0, reducers, c.buf_red, c.D)
+    return c.t * m_mb + merge + c.h_w * k_mb
+
+
+def map_phase_cost(
+    parts: Sequence[tuple[float, float, float]],
+    c: CostConstants,
+    *,
+    model: str = "gumbo",
+) -> float:
+    """Total map cost over input partitions ``(N_mb, M_mb, records)``.
+
+    ``model='gumbo'`` prices each partition separately (Eq. 2);
+    ``model='wang'`` prices the aggregate (Eq. 3) — the paper's ablation.
+    """
+    if model == "gumbo":
+        return sum(cost_map(n, m, c, records=r) for n, m, r in parts)
+    if model == "wang":
+        n = sum(p[0] for p in parts)
+        m = sum(p[1] for p in parts)
+        r = sum(p[2] for p in parts)
+        return cost_map(n, m, c, records=r)
+    raise ValueError(model)
+
+
+# --------------------------------------------------------------------------
+# Relation statistics
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RelStats:
+    rows: float
+    arity: int
+
+    @property
+    def mb(self) -> float:
+        return self.rows * self.arity * BYTES_PER_CELL / MB
+
+
+class Stats:
+    """Size statistics + selectivity estimates backing the planner.
+
+    ``sel[(guard_rel, cond_rel)]`` estimates the fraction of guard facts
+    surviving the semi-join (default 0.5, the paper's data generator
+    midpoint); Gumbo obtains these by simulating the map on a sample —
+    :func:`sample_stats` below does the analogue.
+    """
+
+    def __init__(
+        self,
+        rels: Mapping[str, RelStats],
+        sel: Mapping[tuple, float] | None = None,
+        default_sel: float = 0.5,
+    ):
+        self.rels = dict(rels)
+        self.sel = dict(sel or {})
+        self.default_sel = default_sel
+
+    def rel(self, name: str) -> RelStats:
+        return self.rels[name]
+
+    def selectivity(self, sj: SemiJoin) -> float:
+        return self.sel.get((sj.guard.rel, sj.cond_atom.rel), self.default_sel)
+
+    def out_rows(self, sj: SemiJoin) -> float:
+        return self.rels[sj.guard.rel].rows * self.selectivity(sj)
+
+    def register_output(self, name: str, rows: float, arity: int) -> None:
+        self.rels[name] = RelStats(rows=rows, arity=arity)
+
+
+def stats_of_db(db, sel=None, default_sel: float = 0.5) -> Stats:
+    """Exact row counts from a materialized database."""
+    rels = {
+        name: RelStats(rows=float(r.count()), arity=r.arity)
+        for name, r in db.items()
+    }
+    return Stats(rels, sel, default_sel)
+
+
+def sample_stats(db, sjs: Sequence[SemiJoin], *, sample: int = 1024) -> Stats:
+    """Sampling-based selectivity estimation (Gumbo §5.1 optimization (3)).
+
+    Simulates the map on ≤``sample`` guard rows per semi-join: the fraction
+    of sampled guard keys present in the conditional atom's key set.
+    """
+    import numpy as np
+
+    from repro.core.msj import conform_mask
+
+    stats = stats_of_db(db)
+    for sj in sjs:
+        g = db[sj.guard.rel]
+        k = db[sj.cond_atom.rel]
+        gkeypos = [sj.guard.positions_of(v)[0] for v in sj.key_vars]
+        kkeypos = [sj.cond_atom.positions_of(v)[0] for v in sj.key_vars]
+        gdata = np.asarray(g.data).reshape(-1, g.arity)
+        gvalid = np.asarray(g.valid).reshape(-1)
+        kdata = np.asarray(k.data).reshape(-1, k.arity)
+        kconf = np.asarray(
+            conform_mask(
+                k.data.reshape(-1, k.arity),
+                k.valid.reshape(-1),
+                sj.cond_atom.conform_pattern(),
+            )
+        )
+        gkeys = gdata[gvalid][:, gkeypos]
+        if len(gkeys) > sample:
+            idx = np.random.default_rng(0).choice(len(gkeys), sample, replace=False)
+            gkeys = gkeys[idx]
+        kkeys = {tuple(r) for r in kdata[kconf][:, kkeypos]}
+        frac = (
+            float(np.mean([tuple(r) in kkeys for r in gkeys])) if len(gkeys) else 0.0
+        )
+        stats.sel[(sj.guard.rel, sj.cond_atom.rel)] = frac
+    return stats
+
+
+# --------------------------------------------------------------------------
+# Job costing (Eqs. 5–7)
+# --------------------------------------------------------------------------
+
+
+def msj_job_cost(
+    sjs: Sequence[SemiJoin],
+    stats: Stats,
+    c: CostConstants = HADOOP,
+    *,
+    model: str = "gumbo",
+    packing: bool = True,
+) -> float:
+    """Cost of evaluating the set S in ONE MSJ job (Eq. 5, generalized).
+
+    Guard relations are scanned once each and emit one Req per semi-join
+    they guard; distinct Assert *signatures* are emitted once (conditional
+    name sharing).  With ``packing``, messages carry (key, tuple-id) rather
+    than the tuple (Gumbo optimizations (1)+(2)); the modeled Req/Assert
+    record width is the join-key width + routing metadata.
+    """
+    from repro.core.msj import make_spec
+
+    spec = make_spec(list(sjs))
+    msg_mb_per_row = spec.msg_width * BYTES_PER_CELL / MB
+
+    parts: list[tuple[float, float, float]] = []
+    # one partition per distinct guard relation
+    by_guard: dict[str, int] = {}
+    for info in spec.sj_info:
+        by_guard[info.guard_rel] = by_guard.get(info.guard_rel, 0) + 1
+    for rel, n_req in by_guard.items():
+        rs = stats.rel(rel)
+        if packing:
+            m = rs.rows * n_req * msg_mb_per_row
+        else:
+            m = rs.rows * n_req * max(msg_mb_per_row, rs.mb / max(rs.rows, 1))
+        parts.append((rs.mb, m, rs.rows * n_req))
+    # one partition per distinct Assert signature
+    for sig in spec.sigs:
+        rs = stats.rel(sig.rel)
+        parts.append((rs.mb, rs.rows * msg_mb_per_row, rs.rows))
+
+    m_total = sum(p[1] for p in parts)
+    k_mb = sum(
+        stats.out_rows(sj) * len(sj.out_vars) * BYTES_PER_CELL / MB for sj in sjs
+    )
+    return c.cost_h + map_phase_cost(parts, c, model=model) + cost_red(m_total, k_mb, c)
+
+
+def eval_job_cost(
+    input_sizes: Sequence[RelStats],
+    out_mb: float,
+    c: CostConstants = HADOOP,
+    *,
+    model: str = "gumbo",
+) -> float:
+    """Cost of one EVAL job over X_0..X_n (Eq. 7)."""
+    parts = [(rs.mb, rs.mb, rs.rows) for rs in input_sizes]
+    m_total = sum(p[1] for p in parts)
+    return c.cost_h + map_phase_cost(parts, c, model=model) + cost_red(m_total, out_mb, c)

@@ -1,0 +1,162 @@
+"""The EVAL operator — one job evaluating Boolean combinations
+``Z_u := X0_u ∧ φ_u(X1_u ... Xn_u)`` (paper Section 4.3).
+
+Every row of every input relation is routed by a hash of its *tuple*
+(one all_to_all); on the receiving shard rows are grouped by
+``(unit, tuple)`` with a single lexicographic sort, each group's membership
+bitmask is formed with a segment-OR, and the Boolean formula is applied to
+the bitmask — exactly the paper's reducer, vectorized.
+
+Multiple EVAL units (one per BSGF query of a stratum) share the job, which
+is how the planner amortizes job overhead across the queries of one level.
+Output relations are distinct-tuple sets (the reducer groups by tuple).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algebra import Atom, Cond, eval_cond
+from repro.core.msj import _lex_order
+from repro.core.relation import Relation
+from repro.engine import hashing, shuffle
+from repro.engine.comm import Comm, run_pipeline
+
+
+@dataclass(frozen=True)
+class EvalUnit:
+    """``name := π_{out_pos}(x0 ∧ cond)`` where cond's atoms map to the xs.
+
+    ``out_pos`` (optional) projects the output onto a subset of the x0
+    tuple's columns *after* the Boolean combination — required for
+    soundness under negation when the query's SELECT list drops guard
+    variables (see planner.py module docstring).
+    """
+
+    name: str
+    x0: str  # relation name of the guard-projection input
+    xs: tuple[str, ...]  # relation names of X_1..X_n (atom order)
+    atoms: tuple[Atom, ...]  # conditional atoms, aligned with xs
+    cond: Cond | None
+    out_pos: tuple[int, ...] | None = None
+
+
+def run_eval(
+    env: dict[str, Relation],
+    units: Sequence[EvalUnit],
+    comm: Comm,
+    *,
+    forward_cap: int | None = None,
+):
+    """Execute one EVAL job. Returns ``({name: Relation}, stats)``."""
+    P = comm.P
+    units = tuple(units)
+    max_members = max(1 + len(u.xs) for u in units)
+    arities = []
+    for u in units:
+        a = env[u.x0].arity
+        for x in u.xs:
+            if env[x].arity != a:
+                raise ValueError(f"arity mismatch in EVAL unit {u.name}")
+        arities.append(a)
+    A = max(arities)
+
+    inputs: list[tuple[int, int, str]] = []  # (unit, member, relname)
+    for ui, u in enumerate(units):
+        inputs.append((ui, 0, u.x0))
+        for mi, x in enumerate(u.xs):
+            inputs.append((ui, mi + 1, x))
+    rel_names = sorted({name for _, _, name in inputs})
+
+    cap_s = forward_cap or max(1, sum(env[name].cap for _, _, name in inputs))
+    W = A + 2  # [unit, member, tuple cols...]
+
+    def stage_map(sid, local_db):
+        msgs, valid, dest = [], [], []
+        for ui, mi, name in inputs:
+            rel = local_db[name]
+            tup = rel.data
+            if rel.arity < A:
+                tup = jnp.concatenate(
+                    [tup, jnp.zeros((rel.cap, A - rel.arity), jnp.int32)], axis=1
+                )
+            h = hashing.hash_cols(tup[:, : arities[ui]], salt=ui)
+            msgs.append(
+                jnp.concatenate(
+                    [
+                        jnp.full((rel.cap, 1), ui, jnp.int32),
+                        jnp.full((rel.cap, 1), mi, jnp.int32),
+                        tup,
+                    ],
+                    axis=1,
+                )
+            )
+            valid.append(rel.valid)
+            dest.append(hashing.bucket_of(h, P))
+        msgs = jnp.concatenate(msgs, 0)
+        valid = jnp.concatenate(valid, 0)
+        dest = jnp.concatenate(dest, 0)
+        sent = valid.sum().astype(jnp.int32)
+        buf, bufvalid, ovf, _ = shuffle.partition(msgs, valid, dest, P, cap_s)
+        return (buf, bufvalid), (ovf, sent)
+
+    def stage_reduce(sid, args):
+        (recv, recv_valid), (ovf, sent) = args
+        flat, ok = shuffle.flatten_recv(recv, recv_valid)
+        n = flat.shape[0]
+        unit = jnp.where(ok, flat[:, 0], jnp.int32(2**30))
+        member = flat[:, 1]
+        tup = flat[:, 2:]
+        order = _lex_order([unit] + [tup[:, k] for k in range(A)])
+        unit_s, mem_s, tup_s, ok_s = unit[order], member[order], tup[order], ok[order]
+        new_grp = jnp.ones((n,), bool)
+        if n > 1:
+            diff = (unit_s[1:] != unit_s[:-1]) | (tup_s[1:] != tup_s[:-1]).any(axis=1)
+            new_grp = jnp.concatenate([jnp.ones((1,), bool), diff])
+        gid = jnp.cumsum(new_grp.astype(jnp.int32)) - 1
+        onehot = (
+            (mem_s[:, None] == jnp.arange(max_members, dtype=jnp.int32)[None, :])
+            & ok_s[:, None]
+        ).astype(jnp.int32)
+        group_mask = jax.ops.segment_max(onehot, gid, num_segments=n)  # (n, M)
+        row_mask = group_mask[gid].astype(bool)
+
+        # distinct-output leader: the first member-0 row of each group.
+        flag = ok_s & (mem_s == 0)
+        csum = jnp.cumsum(flag.astype(jnp.int32))
+        excl = csum - flag.astype(jnp.int32)
+        pos = jnp.arange(n, dtype=jnp.int32)
+        g_start = jax.ops.segment_min(pos, gid, num_segments=n)
+        base = excl[g_start]  # member-0 rows seen before this group
+        is_leader = flag & ((csum - 1 - base[gid]) == 0)
+
+        outs = {}
+        for ui, u in enumerate(units):
+            leaf = {a: row_mask[:, mi + 1] for mi, a in enumerate(u.atoms)}
+            formula_ok = (
+                eval_cond(u.cond, leaf) if u.cond is not None else jnp.ones((n,), bool)
+            )
+            zok = is_leader & (unit_s == ui) & row_mask[:, 0] & formula_ok
+            cols = (
+                list(u.out_pos)
+                if u.out_pos is not None
+                else list(range(arities[ui]))
+            )
+            outs[u.name] = Relation(u.name, tup_s[:, cols], zok)
+        stats = {
+            "overflow": ovf,
+            "sent_fwd": sent,
+            "recv_fwd": ok.sum().astype(jnp.int32),
+            "hits": jnp.int32(0),
+        }
+        return None, (outs, stats)
+
+    stacked = {name: env[name] for name in rel_names}
+    outputs, stats = run_pipeline(comm, [stage_map, stage_reduce], stacked)
+    stats = {k: jnp.asarray(v).sum() for k, v in stats.items()}
+    stats["bytes_fwd"] = stats["sent_fwd"] * W * 4
+    stats["bytes_bwd"] = jnp.int32(0)
+    return outputs, stats

@@ -1,0 +1,232 @@
+"""Round-based plan executor with net/total time accounting.
+
+Runs a :class:`~repro.core.planner.Plan` against a database, job by job,
+through the comm runner (SimComm on CPU, MeshComm on a device mesh).
+
+Timing semantics on this container (see DESIGN.md §8): a SimComm job
+serializes the work of all P shards onto the host, so a job's wall time is
+a proxy for the paper's *total time* contribution; the round structure
+gives the *net time* proxy ``Σ_rounds max_job``.  Modeled costs (the cost
+model with either constant set) are reported alongside by the benchmarks.
+
+Fault-tolerance hooks: jobs raise :class:`CapacityFault` on exact shuffle
+overflow; the supervisor (ft/supervisor.py) retries with doubled capacity
+and re-dispatches straggler jobs.  ``on_job`` lets callers inject faults.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algebra import BSGF
+from repro.core.eval_op import EvalUnit, run_eval
+from repro.core.msj import FusedQuery, conform_mask, run_msj
+from repro.core.planner import EvalJob, Job, MSJJob, Plan
+from repro.core.relation import Relation
+from repro.engine.comm import Comm
+
+
+class CapacityFault(RuntimeError):
+    """A shuffle bucket overflowed its static capacity (exact detection)."""
+
+    def __init__(self, job, overflow: int):
+        super().__init__(f"{job}: shuffle overflow of {overflow} messages")
+        self.job = job
+        self.overflow = overflow
+
+
+@dataclass
+class JobRecord:
+    job: Job
+    round_idx: int
+    wall: float
+    stats: dict
+    attempts: int = 1
+
+
+@dataclass
+class Report:
+    records: list[JobRecord] = field(default_factory=list)
+
+    @property
+    def total_time(self) -> float:
+        return sum(r.wall for r in self.records)
+
+    @property
+    def net_time(self) -> float:
+        by_round: dict[int, float] = {}
+        for r in self.records:
+            by_round[r.round_idx] = max(by_round.get(r.round_idx, 0.0), r.wall)
+        return sum(by_round.values())
+
+    def bytes_shuffled(self) -> int:
+        return int(
+            sum(r.stats.get("bytes_fwd", 0) + r.stats.get("bytes_bwd", 0) for r in self.records)
+        )
+
+    def input_rows(self) -> int:
+        return int(sum(r.stats.get("input_rows", 0) for r in self.records))
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.records)
+
+    def summary(self) -> dict:
+        return {
+            "net_time": self.net_time,
+            "total_time": self.total_time,
+            "jobs": self.n_jobs,
+            "bytes_shuffled": self.bytes_shuffled(),
+            "input_rows": self.input_rows(),
+        }
+
+
+def guard_projection(rel: Relation, q: BSGF, name: str) -> Relation:
+    """π_{guard vars}(σ_conform(guard)) — the X0 input of an EVAL unit."""
+    pattern = q.guard.conform_pattern()
+    out_pos = [q.guard.positions_of(v)[0] for v in q.guard.vars]
+    data = rel.data.reshape(-1, rel.arity)
+    valid = rel.valid.reshape(-1)
+    conf = conform_mask(data, valid, pattern)
+    P = rel.P
+    proj = data[:, out_pos].reshape(P, rel.cap, len(out_pos))
+    return Relation(name, proj, conf.reshape(P, rel.cap))
+
+
+def _fused_query_of(q: BSGF, job: MSJJob) -> FusedQuery:
+    atom_to_sj = {}
+    for a in q.atoms:
+        for i, sj in enumerate(job.sjs):
+            if sj.guard == q.guard and sj.cond_atom == a:
+                atom_to_sj[a] = i
+                break
+        else:
+            raise ValueError(f"fused query {q.name}: atom {a} not in job {job}")
+    return FusedQuery(
+        name=q.name,
+        cond=q.cond,
+        atom_to_sj=atom_to_sj,
+        guard_rel=q.guard.rel,
+        guard_pattern=q.guard.conform_pattern(),
+        out_pos=tuple(q.guard.positions_of(v)[0] for v in q.out_vars),
+    )
+
+
+@dataclass
+class ExecutorConfig:
+    packing: bool = True
+    bloom_bits: int = 0
+    compact: bool = True
+    cap_slack: float = 1.0  # 1.0 = no-overflow bound; <1 risks CapacityFault
+    max_retries: int = 3
+
+
+class Executor:
+    """Executes plans; the unit the fault supervisor wraps."""
+
+    def __init__(self, db: dict[str, Relation], comm: Comm, config: ExecutorConfig | None = None):
+        self.env: dict[str, Relation] = dict(db)
+        self.comm = comm
+        self.config = config or ExecutorConfig()
+
+    # -- single jobs -------------------------------------------------------
+    def run_job(self, job: Job, *, cap_override: int | None = None) -> tuple[dict, dict]:
+        if isinstance(job, MSJJob):
+            fused = tuple(_fused_query_of(q, job) for q in job.fused)
+            cap = cap_override
+            if cap is None and self.config.cap_slack < 1.0:
+                from repro.core.msj import default_forward_cap, make_spec
+
+                cap = default_forward_cap(
+                    make_spec(list(job.sjs)), self.env, self.comm.P, self.config.cap_slack
+                )
+            outs, stats = run_msj(
+                self.env,
+                list(job.sjs),
+                self.comm,
+                packing=self.config.packing,
+                fused=fused,
+                bloom_bits=self.config.bloom_bits,
+                forward_cap=cap,
+            )
+            stats["input_rows"] = sum(
+                int(self.env[r].count()) for r in _msj_input_rels(job, self.env)
+            )
+            return outs, stats
+        # EVAL job
+        env = dict(self.env)
+        units = []
+        input_rows = 0
+        for q, xin in zip(job.queries, job.atom_inputs):
+            x0 = f"{q.name}#G"
+            env[x0] = guard_projection(self.env[q.guard.rel], q, x0)
+            out_pos = tuple(q.guard.vars.index(v) for v in q.out_vars)
+            units.append(
+                EvalUnit(q.name, x0, tuple(xin), tuple(q.atoms), q.cond, out_pos)
+            )
+            input_rows += int(env[x0].count()) + sum(int(self.env[x].count()) for x in xin)
+        outs, stats = run_eval(env, units, self.comm)
+        stats["input_rows"] = input_rows
+        return outs, stats
+
+    def run_job_ft(self, job: Job, on_job: Callable | None = None) -> tuple[dict, dict, int]:
+        """Run with overflow-retry (the executor-level fault path)."""
+        attempts = 0
+        cap = None
+        while True:
+            attempts += 1
+            if on_job is not None:
+                on_job(job, attempts)
+            outs, stats = self.run_job(job, cap_override=cap)
+            ovf = int(stats.get("overflow", 0))
+            if ovf == 0:
+                return outs, stats, attempts
+            if attempts > self.config.max_retries:
+                raise CapacityFault(job, ovf)
+            # exact overflow count known: double the largest bucket bound
+            cap = (cap or 1) * 2 if cap else None
+            self.config = ExecutorConfig(
+                **{**self.config.__dict__, "cap_slack": 1.0}
+            )
+
+    # -- whole plans ---------------------------------------------------------
+    def execute(self, plan: Plan, *, on_job: Callable | None = None) -> tuple[dict, Report]:
+        report = Report()
+        for ri, rnd in enumerate(plan.rounds):
+            for job in rnd.jobs:
+                t0 = time.perf_counter()
+                outs, stats, attempts = self.run_job_ft(job, on_job)
+                for v in outs.values():
+                    jax.block_until_ready(v.data)
+                wall = time.perf_counter() - t0
+                for name, rel in outs.items():
+                    if self.config.compact:
+                        rel = rel.compacted()
+                    self.env[name] = rel
+                report.records.append(
+                    JobRecord(job, ri, wall, {k: int(v) for k, v in stats.items()}, attempts)
+                )
+        return self.env, report
+
+
+def _msj_input_rels(job: MSJJob, env) -> set[str]:
+    rels = set()
+    for sj in job.sjs:
+        rels.add(sj.guard.rel)
+        rels.add(sj.cond_atom.rel)
+    return rels
+
+
+def execute_plan(
+    db: dict[str, Relation],
+    plan: Plan,
+    comm: Comm,
+    config: ExecutorConfig | None = None,
+) -> tuple[dict[str, Relation], Report]:
+    """One-shot convenience wrapper."""
+    ex = Executor(db, comm, config)
+    return ex.execute(plan)

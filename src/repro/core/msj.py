@@ -1,0 +1,499 @@
+"""The multi-semi-join operator MSJ(S) — the paper's core contribution,
+adapted from Hadoop MapReduce to an SPMD TPU mesh.
+
+One MSJ *job* evaluates a set of semi-join equations
+``S = {X_i := π_x̄i(α_i ⋉ κ_i)}`` with:
+
+* **map stage** (per shard, vectorized): guard facts conforming to α_i emit
+  Req messages keyed by the join key; conditional facts conforming to κ_i
+  emit Assert messages. Assert messages are tagged by *signature* so
+  semi-joins whose conditional atoms accept the same facts with the same key
+  projection share Asserts (the paper's "conditional name sharing").
+* **shuffle**: radix partition by ``hash(signature, key) % P`` +
+  ``all_to_all`` (ICI), replacing Hadoop's sort-based shuffle.
+* **probe stage** (the reducer): Req keys probe the Assert build side
+  (sort-merge in jnp, or the Pallas ``msj_probe`` kernel on TPU).
+* **route-back**: hit bits return to the origin shard via a second
+  ``all_to_all`` and are scattered into a guard-aligned bitmap.
+
+The route-back replaces the paper's materialize-then-EVAL dataflow with a
+guard-aligned bitmap, which both supports the faithful plan (materialize
+X_i then run EVAL) and a *generalized 1-ROUND* plan (apply the Boolean
+formula locally — beyond-paper, see DESIGN.md §7).
+
+**Message packing** (paper §5.1 optimization (1)): Req/Assert messages are
+deduplicated per (signature, key) with an exact lexicographic sort; the
+group leader is shuffled and hit bits are re-expanded through the leader
+index on the way back. Optimization (2) (tuple ids instead of tuples) is
+inherent: Req messages carry ``(origin_shard, row)`` only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algebra import Atom, Cond, SemiJoin, eval_cond
+from repro.core.relation import Relation
+from repro.engine import hashing, shuffle
+from repro.engine.comm import Comm, SimComm, run_pipeline
+
+KIND_ASSERT = 0
+KIND_REQ = 1
+
+
+# --------------------------------------------------------------------------
+# Static spec derived from the semi-join set
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class _SjInfo:
+    guard_rel: str
+    guard_pattern: tuple
+    guard_keypos: tuple[int, ...]  # positions of key vars in the guard atom
+    out_pos: tuple[int, ...]  # positions of out vars in the guard atom
+    sig_id: int
+
+
+@dataclass(frozen=True)
+class _SigInfo:
+    rel: str
+    pattern: tuple
+    keypos: tuple[int, ...]  # positions of key vars in the conditional atom
+
+
+@dataclass(frozen=True)
+class MSJSpec:
+    sjs: tuple[SemiJoin, ...]
+    sj_info: tuple[_SjInfo, ...]
+    sigs: tuple[_SigInfo, ...]
+    key_width: int  # KW: max join-key arity over signatures
+
+    @property
+    def n_sj(self) -> int:
+        return len(self.sjs)
+
+    @property
+    def msg_width(self) -> int:
+        # [kind, tag, key*KW, src_shard, src_row]
+        return self.key_width + 4
+
+    @property
+    def guard_rels(self) -> tuple[str, ...]:
+        seen: list[str] = []
+        for info in self.sj_info:
+            if info.guard_rel not in seen:
+                seen.append(info.guard_rel)
+        return tuple(seen)
+
+
+def make_spec(sjs: Sequence[SemiJoin]) -> MSJSpec:
+    sigs: list[tuple] = []
+    sig_infos: list[_SigInfo] = []
+    sj_infos: list[_SjInfo] = []
+    for sj in sjs:
+        sig = sj.signature()
+        if sig in sigs:
+            sid = sigs.index(sig)
+        else:
+            sid = len(sigs)
+            sigs.append(sig)
+            keypos = tuple(sj.cond_atom.positions_of(v)[0] for v in sj.key_vars)
+            sig_infos.append(
+                _SigInfo(
+                    rel=sj.cond_atom.rel,
+                    pattern=sj.cond_atom.conform_pattern(),
+                    keypos=keypos,
+                )
+            )
+        gkeypos = tuple(sj.guard.positions_of(v)[0] for v in sj.key_vars)
+        outpos = tuple(sj.guard.positions_of(v)[0] for v in sj.out_vars)
+        sj_infos.append(
+            _SjInfo(
+                guard_rel=sj.guard.rel,
+                guard_pattern=sj.guard.conform_pattern(),
+                guard_keypos=gkeypos,
+                out_pos=outpos,
+                sig_id=sid,
+            )
+        )
+    kw = max([len(s.keypos) for s in sig_infos], default=0)
+    return MSJSpec(
+        sjs=tuple(sjs),
+        sj_info=tuple(sj_infos),
+        sigs=tuple(sig_infos),
+        key_width=max(kw, 1),
+    )
+
+
+# --------------------------------------------------------------------------
+# Shard-local primitives
+# --------------------------------------------------------------------------
+
+
+def conform_mask(data: jnp.ndarray, valid: jnp.ndarray, pattern: tuple) -> jnp.ndarray:
+    """Rows of ``data`` conforming to an atom's pattern (constants equal,
+    repeated variables equal)."""
+    m = valid
+    for i, p in enumerate(pattern):
+        if p[0] == "const":
+            m = m & (data[:, i] == jnp.int32(p[1]))
+        else:
+            j = p[1]
+            if j != i:
+                m = m & (data[:, i] == data[:, j])
+    return m
+
+
+def _pad_keys(keys: jnp.ndarray, kw: int) -> jnp.ndarray:
+    n, k = keys.shape
+    if k == kw:
+        return keys
+    return jnp.concatenate([keys, jnp.zeros((n, kw - k), jnp.int32)], axis=1)
+
+
+def _lex_order(cols: list[jnp.ndarray]) -> jnp.ndarray:
+    """Stable lexicographic argsort over multiple int32/bool key columns
+    (most-significant first)."""
+    n = cols[0].shape[0]
+    order = jnp.arange(n, dtype=jnp.int32)
+    for c in reversed(cols):
+        c = c.astype(jnp.int32)
+        order = order[jnp.argsort(c[order], stable=True)]
+    return order
+
+
+def _dedup_by_key(
+    keys: jnp.ndarray, active: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact (sig-local) key dedup — the message-packing optimization.
+
+    Returns ``(is_leader, rep_row)``: ``is_leader[i]`` marks the first active
+    row of each distinct key; ``rep_row[i]`` is the row index of row i's
+    group leader (identity for inactive rows).
+    """
+    n, kw = keys.shape
+    inact = (~active).astype(jnp.int32)
+    order = _lex_order([inact] + [keys[:, k] for k in range(kw)])
+    keys_s = keys[order]
+    act_s = active[order]
+    neq_prev = jnp.ones((n,), bool)
+    if n > 1:
+        diff = (keys_s[1:] != keys_s[:-1]).any(axis=1)
+        neq_prev = jnp.concatenate([jnp.ones((1,), bool), diff])
+    is_leader_s = act_s & neq_prev
+    # leader row (original index) for each sorted position, propagated
+    # through the run via a cumulative max over flagged positions.
+    pos = jnp.arange(n, dtype=jnp.int32)
+    leader_pos_s = jax.lax.cummax(jnp.where(is_leader_s, pos, -1))
+    leader_pos_s = jnp.maximum(leader_pos_s, 0)
+    rep_s = order[leader_pos_s]
+    is_leader = jnp.zeros((n,), bool).at[order].set(is_leader_s)
+    rep = jnp.zeros((n,), jnp.int32).at[order].set(rep_s)
+    rep = jnp.where(active, rep, jnp.arange(n, dtype=jnp.int32))
+    return is_leader, rep
+
+
+def probe_sorted(
+    build_sig: jnp.ndarray,
+    build_keys: jnp.ndarray,
+    build_ok: jnp.ndarray,
+    probe_sig: jnp.ndarray,
+    probe_keys: jnp.ndarray,
+    probe_ok: jnp.ndarray,
+) -> jnp.ndarray:
+    """Sort-merge existence probe: for each probe row, does any build row
+    share its (signature, key)?  O(n log n), vmappable; the pure-jnp
+    counterpart of the Pallas ``msj_probe`` kernel."""
+    nb = build_sig.shape[0]
+    np_ = probe_sig.shape[0]
+    kw = build_keys.shape[1]
+    sig = jnp.concatenate([build_sig, probe_sig]).astype(jnp.int32)
+    keys = jnp.concatenate([build_keys, probe_keys]).astype(jnp.int32)
+    ok = jnp.concatenate([build_ok, probe_ok])
+    is_build = jnp.concatenate(
+        [jnp.ones((nb,), bool), jnp.zeros((np_,), bool)]
+    )
+    sig = jnp.where(ok, sig, jnp.int32(2**30))  # inactive rows to the end
+    order = _lex_order([sig] + [keys[:, k] for k in range(kw)])
+    sig_s, keys_s, build_s, ok_s = sig[order], keys[order], is_build[order], ok[order]
+    n = nb + np_
+    new_grp = jnp.ones((n,), bool)
+    if n > 1:
+        diff = (sig_s[1:] != sig_s[:-1]) | (keys_s[1:] != keys_s[:-1]).any(axis=1)
+        new_grp = jnp.concatenate([jnp.ones((1,), bool), diff])
+    gid = jnp.cumsum(new_grp.astype(jnp.int32)) - 1
+    has_build = jax.ops.segment_max(
+        (build_s & ok_s).astype(jnp.int32), gid, num_segments=n
+    )
+    hit_s = has_build[gid].astype(bool) & ok_s & ~build_s
+    hit = jnp.zeros((n,), bool).at[order].set(hit_s)
+    return hit[nb:]
+
+
+def probe_dense(
+    build_sig, build_keys, build_ok, probe_sig, probe_keys, probe_ok
+) -> jnp.ndarray:
+    """Quadratic all-pairs probe (tiny-input oracle for tests)."""
+    eq_sig = probe_sig[:, None] == build_sig[None, :]
+    eq_key = (probe_keys[:, None, :] == build_keys[None, :, :]).all(-1)
+    m = eq_sig & eq_key & probe_ok[:, None] & build_ok[None, :]
+    return m.any(axis=1)
+
+
+# --------------------------------------------------------------------------
+# The MSJ job
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FusedQuery:
+    """A BSGF whose semi-joins all live in this MSJ job; its Boolean formula
+    is applied locally on the returned bitmap (generalized 1-ROUND)."""
+
+    name: str
+    cond: Cond
+    atom_to_sj: dict  # Atom -> sj index within the spec
+    guard_rel: str
+    guard_pattern: tuple
+    out_pos: tuple[int, ...]
+
+
+def default_forward_cap(spec: MSJSpec, db: dict, P: int, slack: float = 1.0) -> int:
+    """Safe per-destination bucket capacity for the forward shuffle.
+
+    ``slack=1.0`` is the no-assumption bound (everything to one shard);
+    smaller values trade memory for overflow risk, which the supervisor
+    handles by retrying with a larger capacity.
+    """
+    total = 0
+    for info in spec.sj_info:
+        total += db[info.guard_rel].cap
+    for sig in spec.sigs:
+        total += db[sig.rel].cap
+    if slack >= 1.0 or P == 1:
+        return max(total, 1)
+    # slack < 1 undersizes buckets proportionally (memory saving, overflow
+    # risk); the supervisor retries at slack=1.0 on detection
+    return max(1, int(total * slack) + 1)
+
+
+def run_msj(
+    db: dict[str, Relation],
+    sjs: Sequence[SemiJoin],
+    comm: Comm,
+    *,
+    packing: bool = True,
+    fused: Sequence[FusedQuery] = (),
+    probe_fn: Callable = probe_sorted,
+    forward_cap: int | None = None,
+    bloom_bits: int = 0,
+):
+    """Evaluate MSJ(S). Returns ``(outputs, stats)``.
+
+    ``outputs`` maps each equation's output name to a materialized
+    :class:`Relation` (guard-row aligned), plus one relation per fused
+    query. ``stats`` carries exact message counts / shuffled bytes /
+    overflow counters for the cost model and the fault supervisor.
+    """
+    spec = make_spec(sjs)
+    P = comm.P
+    KW = spec.key_width
+    W = spec.msg_width
+    cap_s = forward_cap or default_forward_cap(spec, db, P)
+
+    rel_names = sorted({i.guard_rel for i in spec.sj_info} | {s.rel for s in spec.sigs})
+    sig_of_sj = jnp.asarray([i.sig_id for i in spec.sj_info], jnp.int32)
+
+    # ---------------- stage 0 (optional): bloom prefilter ----------------
+    # Build a per-shard bloom filter over Assert keys, all-reduce(OR) it, and
+    # drop Req messages whose key cannot match — trades one small all-reduce
+    # for forward-shuffle bytes (beyond-paper; see DESIGN.md §7).
+    use_bloom = bloom_bits > 0
+
+    def _assert_keys(local_db):
+        akeys, asigs, amask = [], [], []
+        for s_id, sig in enumerate(spec.sigs):
+            rel = local_db[sig.rel]
+            conf = conform_mask(rel.data, rel.valid, sig.pattern)
+            keys = _pad_keys(
+                rel.data[:, list(sig.keypos)]
+                if sig.keypos
+                else jnp.zeros((rel.cap, 0), jnp.int32),
+                KW,
+            )
+            akeys.append(keys)
+            asigs.append(jnp.full((rel.cap,), s_id, jnp.int32))
+            amask.append(conf)
+        return (
+            jnp.concatenate(akeys, 0),
+            jnp.concatenate(asigs, 0),
+            jnp.concatenate(amask, 0),
+        )
+
+    def stage_bloom(sid, local_db):
+        from repro.kernels.bloom import ops as bloom_ops
+
+        keys, sigs_arr, mask = _assert_keys(local_db)
+        words = bloom_ops.build(keys, sigs_arr, mask, bloom_bits)
+        # broadcast-by-all_to_all: every destination receives our words;
+        # the next stage ORs over sources == an all-reduce(OR).
+        bcast = jnp.broadcast_to(words[None], (P,) + words.shape)
+        return (bcast,), local_db
+
+    # ---------------- stage 1: map + forward partition ----------------
+    def stage_map(sid, carry_in):
+        if use_bloom:
+            (recv_words,), local_db = carry_in
+            bloom_words = recv_words.max(axis=0)  # OR-reduce over sources
+            from repro.kernels.bloom import ops as bloom_ops
+        else:
+            local_db, bloom_words = carry_in, None
+        msgs_list, valid_list, dest_list = [], [], []
+        conf_by_sj, rep_by_sj = [], []
+
+        # Req messages per semi-join
+        for i, info in enumerate(spec.sj_info):
+            rel = local_db[info.guard_rel]
+            conf = conform_mask(rel.data, rel.valid, info.guard_pattern)
+            keys = _pad_keys(
+                rel.data[:, list(info.guard_keypos)]
+                if info.guard_keypos
+                else jnp.zeros((rel.cap, 0), jnp.int32),
+                KW,
+            )
+            conf_by_sj.append(conf)
+            send = conf
+            if use_bloom:
+                sig_col = jnp.full((rel.cap,), info.sig_id, jnp.int32)
+                send = send & bloom_ops.probe(bloom_words, keys, sig_col, bloom_bits)
+            if packing:
+                is_leader, rep = _dedup_by_key(keys, send)
+                rep_by_sj.append(rep)
+                send = is_leader
+            else:
+                rep_by_sj.append(jnp.arange(rel.cap, dtype=jnp.int32))
+            h = hashing.hash_cols(keys, salt=info.sig_id)
+            dest = hashing.bucket_of(h, P)
+            rows = jnp.arange(rel.cap, dtype=jnp.int32)
+            msg = jnp.stack(
+                [
+                    jnp.full((rel.cap,), KIND_REQ, jnp.int32),
+                    jnp.full((rel.cap,), i, jnp.int32),
+                ]
+                + [keys[:, k] for k in range(KW)]
+                + [jnp.full((rel.cap,), 0, jnp.int32) + sid, rows],
+                axis=1,
+            )
+            msgs_list.append(msg)
+            valid_list.append(send)
+            dest_list.append(dest)
+
+        # Assert messages per signature
+        for s_id, sig in enumerate(spec.sigs):
+            rel = local_db[sig.rel]
+            conf = conform_mask(rel.data, rel.valid, sig.pattern)
+            keys = _pad_keys(
+                rel.data[:, list(sig.keypos)]
+                if sig.keypos
+                else jnp.zeros((rel.cap, 0), jnp.int32),
+                KW,
+            )
+            send = conf
+            if packing:
+                is_leader, _ = _dedup_by_key(keys, conf)
+                send = is_leader
+            h = hashing.hash_cols(keys, salt=s_id)
+            dest = hashing.bucket_of(h, P)
+            zeros = jnp.zeros((rel.cap,), jnp.int32)
+            msg = jnp.stack(
+                [
+                    jnp.full((rel.cap,), KIND_ASSERT, jnp.int32),
+                    jnp.full((rel.cap,), s_id, jnp.int32),
+                ]
+                + [keys[:, k] for k in range(KW)]
+                + [zeros, zeros],
+                axis=1,
+            )
+            msgs_list.append(msg)
+            valid_list.append(send)
+            dest_list.append(dest)
+
+        msgs = jnp.concatenate(msgs_list, 0)
+        valid = jnp.concatenate(valid_list, 0)
+        dest = jnp.concatenate(dest_list, 0)
+        send_count = valid.sum().astype(jnp.int32)
+        buf, bufvalid, ovf, _counts = shuffle.partition(msgs, valid, dest, P, cap_s)
+        carry = (local_db, tuple(conf_by_sj), tuple(rep_by_sj), ovf, send_count, bloom_words)
+        return (buf, bufvalid), carry
+
+    # ---------------- stage 2: probe + backward partition ----------------
+    def stage_probe(sid, args):
+        (recv, recv_valid), carry = args
+        local_db, confs, reps, ovf_fwd, sent_fwd, bloom_words = carry
+        flat, flat_ok = shuffle.flatten_recv(recv, recv_valid)
+        kind = flat[:, 0]
+        tag = flat[:, 1]
+        keys = flat[:, 2 : 2 + KW]
+        src = flat[:, 2 + KW]
+        row = flat[:, 3 + KW]
+        is_build = flat_ok & (kind == KIND_ASSERT)
+        is_probe = flat_ok & (kind == KIND_REQ)
+        probe_sigs = sig_of_sj[jnp.clip(tag, 0, spec.n_sj - 1)]
+        hits = probe_fn(tag, keys, is_build, probe_sigs, keys, is_probe)
+        back_valid = is_probe & hits
+        back = jnp.stack([row, tag], axis=1)
+        bbuf, bbvalid, ovf_b, _ = shuffle.partition(back, back_valid, src, P, cap_s)
+        recv_count = flat_ok.sum().astype(jnp.int32)
+        hit_count = back_valid.sum().astype(jnp.int32)
+        carry2 = (local_db, confs, reps, ovf_fwd, sent_fwd, recv_count, hit_count)
+        return (bbuf, bbvalid), carry2
+
+    # ---------------- stage 3: scatter + outputs ----------------
+    def stage_out(sid, args):
+        (recv, recv_valid), carry = args
+        local_db, confs, reps, ovf_fwd, sent_fwd, recv_count, hit_count = carry
+        flat, flat_ok = shuffle.flatten_recv(recv, recv_valid)
+        rows, sj_ids = flat[:, 0], flat[:, 1]
+        bits_by_sj = []
+        for i, info in enumerate(spec.sj_info):
+            gcap = local_db[info.guard_rel].cap
+            sel = flat_ok & (sj_ids == i)
+            bm = jnp.zeros((gcap,), bool).at[rows].max(sel, mode="drop")
+            # expand from packing leaders back to all rows of the key group
+            bits = bm[reps[i]] & confs[i]
+            bits_by_sj.append(bits)
+
+        outputs = {}
+        for i, (sj, info) in enumerate(zip(spec.sjs, spec.sj_info)):
+            rel = local_db[info.guard_rel]
+            proj = rel.data[:, list(info.out_pos)]
+            outputs[sj.out] = Relation(sj.out, proj, bits_by_sj[i])
+        for fq in fused:
+            rel = local_db[fq.guard_rel]
+            gconf = conform_mask(rel.data, rel.valid, fq.guard_pattern)
+            leaf = {a: bits_by_sj[idx] for a, idx in fq.atom_to_sj.items()}
+            ok = gconf & eval_cond(fq.cond, leaf) if fq.cond is not None else gconf
+            proj = rel.data[:, list(fq.out_pos)]
+            outputs[fq.name] = Relation(fq.name, proj, ok)
+
+        stats = {
+            "overflow": ovf_fwd,
+            "sent_fwd": sent_fwd,
+            "recv_fwd": recv_count,
+            "hits": hit_count,
+        }
+        return None, (outputs, stats)
+
+    stacked = {name: db[name] for name in rel_names}
+    stages = ([stage_bloom] if use_bloom else []) + [stage_map, stage_probe, stage_out]
+    outputs, stats = run_pipeline(comm, stages, stacked)
+    # aggregate stats over shards (sim mode leaves a leading P axis)
+    stats = {k: jnp.asarray(v).sum() for k, v in stats.items()}
+    stats["bytes_fwd"] = stats["sent_fwd"] * W * 4
+    stats["bytes_bwd"] = stats["hits"] * 2 * 4
+    return outputs, stats

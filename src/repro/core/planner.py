@@ -1,0 +1,534 @@
+"""Query planners: GREEDY-BSGF, GREEDY-SGF, brute-force OPT, and the
+SEQ / PAR / GREEDY / 1-ROUND strategies of Section 5.
+
+Plan IR
+-------
+A :class:`Plan` is a sequence of :class:`Round`s; jobs within a round run
+in parallel on the cluster (one MR "wave"), rounds are barriers.  Two job
+kinds mirror the paper's operators:
+
+* :class:`MSJJob` — one multi-semi-join job.  ``sjs`` are the equations to
+  evaluate; ``fused`` are BSGF queries whose Boolean formula is applied
+  *inside* the job on the route-back bitmap (the 1-ROUND path, generalized
+  beyond the paper's shared-key condition — DESIGN.md §7).
+* :class:`EvalJob` — one EVAL job computing ``Z := X0 ∧ φ`` for one or
+  more BSGF queries of a stratum.
+
+Correctness note (negation vs. projection): the paper's §4.4 projects each
+X_i to the query's output variables w̄ *before* EVAL.  Under negation that
+is unsound when w̄ drops a guard variable the condition depends on (two
+guard rows collapsing onto one output tuple can disagree on C).  Our plans
+therefore project X_i to the **full guard-variable tuple** and EVAL
+projects to w̄ at output; the fused 1-ROUND path is row-aligned and
+unaffected.  See DESIGN.md §2 and tests/test_planner.py.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Callable, Iterable, Sequence
+
+from repro.core.algebra import (
+    Atom,
+    BSGF,
+    Cond,
+    Not,
+    Or,
+    SGF,
+    SemiJoin,
+    cond_atoms,
+)
+from repro.core.costmodel import (
+    CostConstants,
+    HADOOP,
+    RelStats,
+    Stats,
+    BYTES_PER_CELL,
+    eval_job_cost,
+    msj_job_cost,
+)
+
+MB = 1e6
+
+
+# --------------------------------------------------------------------------
+# Plan IR
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MSJJob:
+    sjs: tuple[SemiJoin, ...]
+    fused: tuple[BSGF, ...] = ()
+
+    def __repr__(self):
+        f = f" fused={[q.name for q in self.fused]}" if self.fused else ""
+        return f"MSJ({[s.out for s in self.sjs]}{f})"
+
+
+@dataclass(frozen=True)
+class EvalJob:
+    queries: tuple[BSGF, ...]
+    # per query: name of the X relation backing each conditional atom
+    atom_inputs: tuple[tuple[str, ...], ...]
+
+    def __repr__(self):
+        return f"EVAL({[q.name for q in self.queries]})"
+
+
+Job = MSJJob | EvalJob
+
+
+@dataclass(frozen=True)
+class Round:
+    jobs: tuple[Job, ...]
+
+
+@dataclass(frozen=True)
+class Plan:
+    rounds: tuple[Round, ...]
+
+    @property
+    def n_jobs(self) -> int:
+        return sum(len(r.jobs) for r in self.rounds)
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    def __repr__(self):
+        lines = [f"Plan({self.n_rounds} rounds, {self.n_jobs} jobs)"]
+        for i, r in enumerate(self.rounds):
+            lines.append(f"  round {i}: " + "; ".join(map(repr, r.jobs)))
+        return "\n".join(lines)
+
+
+def concat_plans(plans: Iterable[Plan]) -> Plan:
+    rounds: list[Round] = []
+    for p in plans:
+        rounds.extend(p.rounds)
+    return Plan(tuple(rounds))
+
+
+# --------------------------------------------------------------------------
+# Semi-join pooling for a stratum (set of BSGF queries)
+# --------------------------------------------------------------------------
+
+
+def full_guard_vars(q: BSGF) -> tuple[str, ...]:
+    return q.guard.vars
+
+
+def pooled_semijoins(queries: Sequence[BSGF]) -> tuple[list[SemiJoin], dict]:
+    """Distinct semi-joins of a stratum + per-(query, atom) output names.
+
+    Equations project to the *full guard tuple* (see module docstring).
+    Two (guard, atom) pairs are merged into one equation — the paper's
+    "lower number of distinct semi-joins" effect for same-level queries.
+    """
+    pool: dict[tuple, SemiJoin] = {}
+    atom_x: dict[tuple[str, Atom], str] = {}
+    for q in queries:
+        for a in q.atoms:
+            key = (q.guard, a)
+            if key not in pool:
+                sj = SemiJoin(
+                    out=f"X{len(pool)}@{q.guard.rel}|{a.rel}",
+                    out_vars=full_guard_vars(q),
+                    guard=q.guard,
+                    cond_atom=a,
+                )
+                pool[key] = sj
+            atom_x[(q.name, a)] = pool[key].out
+    return list(pool.values()), atom_x
+
+
+def eval_job_for(queries: Sequence[BSGF], atom_x: dict) -> EvalJob:
+    return EvalJob(
+        queries=tuple(queries),
+        atom_inputs=tuple(
+            tuple(atom_x[(q.name, a)] for a in q.atoms) for q in queries
+        ),
+    )
+
+
+# --------------------------------------------------------------------------
+# BSGF-OPT: gain-greedy + brute force (Theorem 1: NP-complete)
+# --------------------------------------------------------------------------
+
+CostFn = Callable[[Sequence[SemiJoin]], float]
+
+
+def default_costfn(
+    stats: Stats, consts: CostConstants = HADOOP, *, model: str = "gumbo"
+) -> CostFn:
+    return lambda group: msj_job_cost(list(group), stats, consts, model=model)
+
+
+def gain(si: Sequence[SemiJoin], sj: Sequence[SemiJoin], costfn: CostFn) -> float:
+    return costfn(si) + costfn(sj) - costfn(list(si) + list(sj))
+
+
+def greedy_group(sjs: Sequence[SemiJoin], costfn: CostFn) -> list[list[SemiJoin]]:
+    """GREEDY-BSGF: start from singletons, repeatedly merge the pair with
+    the largest positive gain."""
+    groups: list[list[SemiJoin]] = [[s] for s in sjs]
+    while len(groups) > 1:
+        best, best_pair = 0.0, None
+        for i in range(len(groups)):
+            for j in range(i + 1, len(groups)):
+                g = gain(groups[i], groups[j], costfn)
+                if g > best:
+                    best, best_pair = g, (i, j)
+        if best_pair is None:
+            break
+        i, j = best_pair
+        groups[i] = groups[i] + groups[j]
+        del groups[j]
+    return groups
+
+
+def _set_partitions(items: list):
+    """All set partitions (Bell-number enumeration; use for ≤ ~8 items)."""
+    if not items:
+        yield []
+        return
+    first, rest = items[0], items[1:]
+    for part in _set_partitions(rest):
+        for i in range(len(part)):
+            yield part[:i] + [[first] + part[i]] + part[i + 1 :]
+        yield [[first]] + part
+
+
+def brute_force_group(
+    sjs: Sequence[SemiJoin], costfn: CostFn
+) -> tuple[list[list[SemiJoin]], float]:
+    """OPT(Q): exhaustive BSGF-OPT (exponential; small queries only)."""
+    best, best_cost = None, float("inf")
+    for part in _set_partitions(list(sjs)):
+        c = sum(costfn(g) for g in part)
+        if c < best_cost:
+            best, best_cost = part, c
+    return best, best_cost
+
+
+# --------------------------------------------------------------------------
+# Strategies for one stratum (a set of independent BSGF queries)
+# --------------------------------------------------------------------------
+
+
+def _is_literal(c: Cond) -> bool:
+    return isinstance(c, Atom) or (isinstance(c, Not) and isinstance(c.child, Atom))
+
+
+def _conj_literals(c: Cond) -> list[Cond] | None:
+    """Flatten a pure conjunction of literals, else None."""
+    if _is_literal(c):
+        return [c]
+    if hasattr(c, "left") and type(c).__name__ == "And":
+        l = _conj_literals(c.left)
+        r = _conj_literals(c.right)
+        if l is not None and r is not None:
+            return l + r
+    return None
+
+
+def _disj_of_conjs(c: Cond) -> list[list[Cond]] | None:
+    """Flatten a top-level disjunction of conjunctions of literals."""
+    conj = _conj_literals(c)
+    if conj is not None:
+        return [conj]
+    if isinstance(c, Or):
+        l = _disj_of_conjs(c.left)
+        r = _disj_of_conjs(c.right)
+        if l is not None and r is not None:
+            return l + r
+    return None
+
+
+def plan_par(queries: Sequence[BSGF]) -> Plan:
+    """PAR: every distinct semi-join in its own MSJ job, one EVAL round."""
+    sjs, atom_x = pooled_semijoins(queries)
+    r1 = Round(tuple(MSJJob((s,)) for s in sjs))
+    r2 = Round((eval_job_for(queries, atom_x),))
+    if not sjs:  # condition-free queries
+        return Plan((r2,))
+    return Plan((r1, r2))
+
+
+def plan_greedy(
+    queries: Sequence[BSGF],
+    stats: Stats,
+    consts: CostConstants = HADOOP,
+    *,
+    model: str = "gumbo",
+    optimal: bool = False,
+) -> Plan:
+    """GREEDY (GOPT) / brute-force (OPT) grouping + one EVAL round."""
+    sjs, atom_x = pooled_semijoins(queries)
+    costfn = default_costfn(stats, consts, model=model)
+    if not sjs:
+        return Plan((Round((eval_job_for(queries, atom_x),)),))
+    if optimal:
+        groups, _ = brute_force_group(sjs, costfn)
+    else:
+        groups = greedy_group(sjs, costfn)
+    r1 = Round(tuple(MSJJob(tuple(g)) for g in groups))
+    r2 = Round((eval_job_for(queries, atom_x),))
+    return Plan((r1, r2))
+
+
+def plan_one_round(queries: Sequence[BSGF], *, faithful: bool = False) -> Plan:
+    """1-ROUND: one MSJ job with the Boolean formulas fused in.
+
+    ``faithful=True`` enforces the paper's applicability condition (all
+    conditional atoms of a query share one join key, or the condition uses
+    only disjunction/negation); the generalized route-back fusion works for
+    any BSGF and is the default.
+    """
+    if faithful:
+        for q in queries:
+            keys = {tuple(q.join_key(a)) for a in q.atoms}
+            if len(keys) > 1:
+                raise ValueError(
+                    f"1-ROUND (faithful) needs a shared join key; {q.name} has {keys}"
+                )
+    sjs, _ = pooled_semijoins(queries)
+    return Plan((Round((MSJJob(tuple(sjs), fused=tuple(queries)),)),))
+
+
+def plan_seq(q: BSGF) -> Plan:
+    """SEQ: the classic semi-join reducer chain.
+
+    Conjunctions chain ``guard ⋉ κ1 ⋉ κ2 ...`` (anti-join for negated
+    literals), narrowing the guard each round.  A top-level disjunction of
+    conjunctions runs one chain per disjunct (in parallel) + a final union
+    EVAL.  Other shapes have no sequential plan (paper footnote 4).
+    """
+    if q.cond is None:
+        return plan_one_round([q])
+    disj = _disj_of_conjs(q.cond)
+    if disj is None:
+        raise ValueError(f"no sequential plan for non-DNF-able condition {q.cond}")
+
+    gvars = q.guard.vars
+    chains: list[list[BSGF]] = []
+    for ci, conj in enumerate(disj):
+        prev_atom = q.guard
+        chain: list[BSGF] = []
+        for li, lit in enumerate(conj):
+            last = li == len(conj) - 1
+            single = len(disj) == 1
+            name = (
+                q.name
+                if (last and single)
+                else f"{q.name}~c{ci}s{li}"
+            )
+            out_vars = q.out_vars if (last and single) else gvars
+            chain.append(BSGF(name, out_vars, prev_atom, lit))
+            prev_atom = Atom(name, *gvars)
+        chains.append(chain)
+
+    depth = max(len(c) for c in chains)
+    rounds = []
+    for d in range(depth):
+        jobs = []
+        for chain in chains:
+            if d < len(chain):
+                step = chain[d]
+                sjs, _ = pooled_semijoins([step])
+                jobs.append(MSJJob(tuple(sjs), fused=(step,)))
+        rounds.append(Round(tuple(jobs)))
+    if len(chains) > 1:
+        # union of the chain outputs: Z := guard-projection ∧ (OR of chains)
+        atoms = [Atom(c[-1].name, *gvars) for c in chains]
+        union_q = BSGF(q.name, q.out_vars, q.guard, _or_all(atoms))
+        atom_x = {(q.name, a): a.rel for a in atoms}
+        rounds.append(Round((eval_job_for([union_q], atom_x),)))
+    return Plan(tuple(rounds))
+
+
+def _or_all(atoms: Sequence[Atom]) -> Cond:
+    out: Cond = atoms[0]
+    for a in atoms[1:]:
+        out = Or(out, a)
+    return out
+
+
+# --------------------------------------------------------------------------
+# SGF-OPT: multiway topological sorts (Theorem 2: NP-complete)
+# --------------------------------------------------------------------------
+
+
+def overlap(q: BSGF, stratum: Sequence[BSGF]) -> int:
+    rels = set()
+    for p in stratum:
+        rels |= p.relations
+    return len(q.relations & rels)
+
+
+def greedy_sgf(sgf: SGF) -> list[list[BSGF]]:
+    """GREEDY-SGF: the blue/red multiway-topological-sort heuristic
+    (Section 4.6), maximizing relation overlap within strata."""
+    deps = sgf.dependency_graph()  # name -> set of predecessor names
+    blue = {q.name for q in sgf}
+    strata: list[list[BSGF]] = []
+    placed: dict[str, int] = {}  # name -> stratum index
+
+    while blue:
+        # D: blue vertices with no blue predecessors
+        D = [n for n in blue if not (deps[n] & blue)]
+        D.sort(key=lambda n: [q.name for q in sgf].index(n))
+        u = None
+        best = (0, None)  # (overlap, stratum index)
+        for cand in D:
+            q = sgf.by_name(cand)
+            lo = max((placed[p] + 1 for p in deps[cand]), default=0)
+            for i in range(lo, len(strata)):
+                ov = overlap(q, strata[i])
+                if ov > best[0]:
+                    best = (ov, i)
+                    u = cand
+        if u is None:
+            u = D[0]
+            q = sgf.by_name(u)
+            lo = max((placed[p] + 1 for p in deps[u]), default=0)
+            if lo >= len(strata):
+                strata.append([])
+            # no positive overlap anywhere valid: open a new stratum at the end
+            idx = len(strata) - 1 if lo <= len(strata) - 1 and not strata[-1] else None
+            if idx is None:
+                strata.append([])
+                idx = len(strata) - 1
+            strata[idx].append(q)
+            placed[u] = idx
+        else:
+            q = sgf.by_name(u)
+            strata[best[1]].append(q)
+            placed[u] = best[1]
+        blue.remove(u)
+    return [s for s in strata if s]
+
+
+def levels_of(sgf: SGF) -> list[list[BSGF]]:
+    """PARUNIT strata: classic level-by-level topological layering."""
+    deps = sgf.dependency_graph()
+    level: dict[str, int] = {}
+    for q in sgf:  # definition order is a valid topological order
+        level[q.name] = max((level[p] + 1 for p in deps[q.name]), default=0)
+    n_levels = max(level.values(), default=0) + 1
+    return [[q for q in sgf if level[q.name] == lv] for lv in range(n_levels)]
+
+
+def brute_force_sgf(
+    sgf: SGF, stratum_cost: Callable[[Sequence[BSGF]], float]
+) -> tuple[list[list[BSGF]], float]:
+    """OPT over all multiway topological sorts (tiny queries only)."""
+    names = [q.name for q in sgf]
+    deps = sgf.dependency_graph()
+    best, best_cost = None, float("inf")
+
+    def valid(strata: list[list[str]]) -> bool:
+        pos = {n: i for i, s in enumerate(strata) for n in s}
+        return all(pos[p] < pos[n] for n in names for p in deps[n])
+
+    for part in _set_partitions(names):
+        for order in itertools.permutations(part):
+            strata = [list(s) for s in order]
+            if not valid(strata):
+                continue
+            c = sum(stratum_cost([sgf.by_name(n) for n in s]) for s in strata)
+            if c < best_cost:
+                best, best_cost = [
+                    [sgf.by_name(n) for n in s] for s in strata
+                ], c
+    return best, best_cost
+
+
+# --------------------------------------------------------------------------
+# Full-SGF strategies (Section 5.3)
+# --------------------------------------------------------------------------
+
+
+def plan_sgf(
+    sgf: SGF,
+    strategy: str,
+    stats: Stats | None = None,
+    consts: CostConstants = HADOOP,
+    *,
+    model: str = "gumbo",
+) -> Plan:
+    """SEQUNIT / PARUNIT / GREEDY (=GREEDY-SGF) / ONE_ROUND plans."""
+    if strategy == "sequnit":
+        strata = [[q] for q in sgf]
+        return concat_plans(plan_par(s) for s in strata)
+    if strategy == "parunit":
+        return concat_plans(plan_par(s) for s in levels_of(sgf))
+    if strategy == "greedy":
+        assert stats is not None, "GREEDY-SGF needs statistics"
+        strata = greedy_sgf(sgf)
+        plans = []
+        for s in strata:
+            plans.append(plan_greedy(s, stats, consts, model=model))
+            _register_stratum_outputs(s, stats)
+        return concat_plans(plans)
+    if strategy == "one_round":
+        strata = levels_of(sgf)
+        return concat_plans(plan_one_round(s) for s in strata)
+    raise ValueError(strategy)
+
+
+def _register_stratum_outputs(queries: Sequence[BSGF], stats: Stats) -> None:
+    """Feed estimated output sizes forward so later strata can be costed."""
+    for q in queries:
+        rows = stats.rel(q.guard.rel).rows
+        est = rows
+        for a in q.atoms:  # crude independence estimate
+            est *= stats.sel.get((q.guard.rel, a.rel), stats.default_sel) ** 0.5
+        stats.register_output(q.name, max(est, 1.0), len(q.out_vars))
+
+
+# --------------------------------------------------------------------------
+# Modeled plan cost (total / net) — what the experiments report
+# --------------------------------------------------------------------------
+
+
+def job_cost(
+    job: Job, stats: Stats, consts: CostConstants = HADOOP, *, model: str = "gumbo"
+) -> float:
+    if isinstance(job, MSJJob):
+        c = msj_job_cost(list(job.sjs), stats, consts, model=model)
+        for q in job.fused:
+            stats.register_output(
+                q.name, stats.rel(q.guard.rel).rows * stats.default_sel, len(q.out_vars)
+            )
+        for sj in job.sjs:
+            stats.register_output(sj.out, stats.out_rows(sj), len(sj.out_vars))
+        return c
+    # EVAL: X0 (guard projection) + the X_i inputs per query
+    sizes: list[RelStats] = []
+    out_mb = 0.0
+    for q, xin in zip(job.queries, job.atom_inputs):
+        g = stats.rel(q.guard.rel)
+        sizes.append(RelStats(rows=g.rows, arity=len(q.guard.vars)))
+        for name in xin:
+            sizes.append(stats.rel(name))
+        out_rows = g.rows * stats.default_sel
+        stats.register_output(q.name, out_rows, len(q.out_vars))
+        out_mb += out_rows * len(q.out_vars) * BYTES_PER_CELL / MB
+    return eval_job_cost(sizes, out_mb, consts, model=model)
+
+
+def plan_cost(
+    plan: Plan, stats: Stats, consts: CostConstants = HADOOP, *, model: str = "gumbo"
+) -> dict:
+    """Modeled total/net cost; net = Σ_rounds max_job (parallel waves)."""
+    import copy
+
+    st = copy.deepcopy(stats)
+    total, net = 0.0, 0.0
+    for r in plan.rounds:
+        costs = [job_cost(j, st, consts, model=model) for j in r.jobs]
+        total += sum(costs)
+        net += max(costs) if costs else 0.0
+    return {"total": total, "net": net, "rounds": plan.n_rounds, "jobs": plan.n_jobs}

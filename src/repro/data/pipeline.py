@@ -1,0 +1,58 @@
+"""SGF-powered corpus filtering — where the paper's engine meets the LM.
+
+Corpus curation *is* a multi-semi-join workload: "keep documents whose
+fingerprints are not in the dedup list, whose domain is not blocked, and
+that pass quality" is the SGF query
+
+    Keep := SELECT (doc, domain, h1, h2) FROM Docs(doc, domain, h1, h2)
+            WHERE NOT Dup(h1) AND NOT Dup(h2)
+              AND NOT Blocked(domain) AND Quality(doc);
+
+evaluated here with the same MSJ/EVAL plans (PAR / GREEDY / 1-ROUND) the
+paper benchmarks, on the same mesh that trains the model.  The returned
+keep-mask drives the training data loader.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.algebra import And, Atom, BSGF, Not, all_of
+from repro.core.costmodel import HADOOP, stats_of_db
+from repro.core.executor import execute_plan
+from repro.core.planner import plan_greedy, plan_one_round, plan_par
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+
+
+def keep_query() -> BSGF:
+    return BSGF(
+        "Keep",
+        ("doc", "domain", "h1", "h2"),
+        Atom("Docs", "doc", "domain", "h1", "h2"),
+        all_of(
+            Not(Atom("Dup", "h1")),
+            Not(Atom("Dup", "h2")),
+            Not(Atom("Blocked", "domain")),
+            Atom("Quality", "doc"),
+        ),
+    )
+
+
+def filter_corpus(
+    relations: dict[str, np.ndarray],
+    *,
+    P: int = 8,
+    strategy: str = "one_round",
+) -> tuple[np.ndarray, dict]:
+    """Evaluate the keep-query; returns (kept doc ids, executor summary)."""
+    q = keep_query()
+    db = db_from_dict(relations, P=P)
+    if strategy == "par":
+        plan = plan_par([q])
+    elif strategy == "greedy":
+        plan = plan_greedy([q], stats_of_db(db), HADOOP)
+    else:
+        plan = plan_one_round([q])
+    env, report = execute_plan(db, plan, SimComm(P))
+    kept = np.asarray(sorted(t[0] for t in env["Keep"].to_set()), np.int64)
+    return kept, report.summary()

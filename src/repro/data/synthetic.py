@@ -1,0 +1,72 @@
+"""Synthetic data: deterministic token streams + corpus metadata relations.
+
+Token batches are seeded per step, so restarts resume the exact stream
+(checkpoint/restart equivalence depends on this).  ``corpus_relations``
+builds the relational *metadata* view of a synthetic corpus — documents,
+hash-duplicate and blocklist relations — that the SGF data pipeline
+(data/pipeline.py) filters with multi-semi-join plans.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def token_batch(cfg, shape_kind: str, batch: int, seq: int, step: int, *, seed: int = 0):
+    """One (batch, seq) int32 token batch, deterministic in (seed, step)."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)}
+    if cfg.family == "vlm":
+        out["tokens"] = out["tokens"][:, : seq - cfg.frontend_tokens]
+        out["embeds"] = jnp.asarray(
+            rng.normal(0, 0.1, (batch, cfg.frontend_tokens, cfg.d_model)),
+            jnp.dtype(cfg.dtype),
+        )
+    elif cfg.family == "audio":
+        out["tokens"] = out["tokens"][:, : (seq * 3) // 4]
+        out["embeds"] = jnp.asarray(
+            rng.normal(0, 0.1, (batch, seq // 4, cfg.d_model)), jnp.dtype(cfg.dtype)
+        )
+    return out
+
+
+def make_batch_fn(cfg, batch: int, seq: int, *, seed: int = 0):
+    return lambda step: token_batch(cfg, "train", batch, seq, step, seed=seed)
+
+
+def corpus_relations(
+    n_docs: int = 4096,
+    *,
+    dup_frac: float = 0.2,
+    blocked_frac: float = 0.1,
+    n_domains: int = 64,
+    seed: int = 0,
+) -> dict[str, np.ndarray]:
+    """Metadata relations for a synthetic crawl:
+
+    * ``Docs(doc, domain, h1, h2)`` — document id, source domain and two
+      content fingerprints (shingle hashes).
+    * ``Dup(h)`` — fingerprints seen in an earlier crawl (dedup list).
+    * ``Blocked(domain)`` — domain blocklist.
+    * ``Quality(doc)`` — docs passing the quality classifier.
+    """
+    rng = np.random.default_rng(seed)
+    hash_space = n_docs * 4
+    docs = np.stack(
+        [
+            np.arange(n_docs),
+            rng.integers(0, n_domains, n_docs),
+            rng.integers(0, hash_space, n_docs),
+            rng.integers(0, hash_space, n_docs),
+        ],
+        axis=1,
+    ).astype(np.int32)
+    n_dup = int(n_docs * dup_frac)
+    dup_hashes = np.unique(
+        np.concatenate([docs[:n_dup, 2], rng.integers(0, hash_space, n_dup)])
+    ).astype(np.int32)[:, None]
+    blocked = rng.choice(n_domains, int(n_domains * blocked_frac), replace=False)
+    blocked = blocked.astype(np.int32)[:, None]
+    quality = rng.choice(n_docs, int(n_docs * 0.8), replace=False)
+    quality = np.sort(quality).astype(np.int32)[:, None]
+    return {"Docs": docs, "Dup": dup_hashes, "Blocked": blocked, "Quality": quality}

@@ -1,0 +1,1 @@
+"""Distributed runtime substrate: hashing, sharding, shuffle, comm runners."""

@@ -1,0 +1,47 @@
+"""Vectorized 32-bit hashing for join keys.
+
+All engine values are int32; keys are (possibly multi-column) int32 tuples.
+Routing uses a mixed 32-bit hash; *matching* always compares the exact key
+columns, so hash collisions only affect load balance, never correctness.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_M1 = jnp.uint32(0x7FEB352D)
+_M2 = jnp.uint32(0x846CA68B)
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Low-bias 32-bit finalizer (triple32-style)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 15)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_cols(cols: jnp.ndarray, salt: int = 0) -> jnp.ndarray:
+    """Hash rows of an ``(N, K)`` int32 array into ``(N,)`` uint32.
+
+    Columns are folded left-to-right with a golden-ratio combine, so the
+    hash depends on column order (keys are ordered tuples).
+    """
+    if cols.ndim == 1:
+        cols = cols[:, None]
+    h = jnp.full((cols.shape[0],), jnp.uint32(salt) ^ _GOLDEN, jnp.uint32)
+    for k in range(cols.shape[1]):
+        h = mix32(h ^ (cols[:, k].astype(jnp.uint32) + _GOLDEN + (h << 6) + (h >> 2)))
+    return h
+
+
+def bucket_of(h: jnp.ndarray, num_buckets: int) -> jnp.ndarray:
+    """Map uint32 hashes to [0, num_buckets).
+
+    Plain modulo; the bias for bucket counts ≪ 2^32 is negligible and it
+    avoids uint64 (kept off: jax x64 is disabled engine-wide).
+    """
+    return (h % jnp.uint32(num_buckets)).astype(jnp.int32)

@@ -1,0 +1,35 @@
+"""Elastic rescaling: move a run to a different mesh shape.
+
+Two pieces:
+
+* **Model state** — :func:`reshard_state` re-puts every leaf under the
+  new mesh's NamedSharding (checkpoint.load already does this from disk;
+  this is the in-memory path for live rescale).
+* **Engine relations** — :func:`repartition_relation` re-partitions an
+  SGF relation's rows over a new shard count (P changes with cluster
+  size); row placement is hash/block-based so results are identical.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.core.relation import Relation
+
+
+def reshard_state(state, specs, new_mesh):
+    def put(leaf, spec):
+        return jax.device_put(np.asarray(leaf), NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(put, state, specs)
+
+
+def repartition_relation(rel: Relation, new_P: int, *, partition: str = "block") -> Relation:
+    rows = np.asarray(rel.data).reshape(-1, rel.arity)
+    valid = np.asarray(rel.valid).reshape(-1)
+    return Relation.from_numpy(rel.name, rows[valid], P=new_P, partition=partition)
+
+
+def repartition_db(db: dict, new_P: int) -> dict:
+    return {name: repartition_relation(r, new_P) for name, r in db.items()}

@@ -1,0 +1,149 @@
+"""Fault supervisor: retries, straggler re-dispatch, and fault injection.
+
+Wraps the SGF plan :class:`~repro.core.executor.Executor`:
+
+* **capacity faults** — exact shuffle-overflow detection already raises
+  :class:`CapacityFault`; the supervisor re-plans the job with doubled
+  forward capacity (Hadoop's "task retry with more memory" analogue).
+* **injected faults** — ``fault_rate`` makes jobs raise
+  :class:`SimulatedFault` (a stand-in for preempted / failed workers);
+  the supervisor retries up to ``max_restarts`` times per job.
+* **stragglers** — jobs slower than ``straggler_factor ×`` the round's
+  median are speculatively re-dispatched and the fastest attempt wins —
+  job-level speculative execution (tasks are short on TPU, so whole-job
+  re-dispatch replaces Hadoop's per-task speculation).
+
+The same class supervises the training loop via :func:`run_train_loop`:
+checkpoint every N steps, crash injection, resume-from-latest.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.executor import CapacityFault, Executor, JobRecord, Report
+
+
+class SimulatedFault(RuntimeError):
+    pass
+
+
+@dataclass
+class FTConfig:
+    fault_rate: float = 0.0
+    straggler_factor: float = 3.0
+    speculative: bool = True
+    max_restarts: int = 5
+    seed: int = 0
+
+
+@dataclass
+class FTStats:
+    faults_injected: int = 0
+    retries: int = 0
+    speculative_redispatches: int = 0
+    capacity_retries: int = 0
+
+
+class Supervisor:
+    def __init__(self, executor: Executor, config: FTConfig | None = None):
+        self.ex = executor
+        self.cfg = config or FTConfig()
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self.stats = FTStats()
+
+    def _run_with_faults(self, job):
+        attempts = 0
+        while True:
+            attempts += 1
+            try:
+                if self.rng.random() < self.cfg.fault_rate:
+                    self.stats.faults_injected += 1
+                    raise SimulatedFault(f"injected fault on {job}")
+                return self.ex.run_job(job)
+            except (SimulatedFault, CapacityFault) as e:
+                if isinstance(e, CapacityFault):
+                    self.stats.capacity_retries += 1
+                self.stats.retries += 1
+                if attempts > self.cfg.max_restarts:
+                    raise
+
+    def execute(self, plan) -> tuple[dict, Report]:
+        import jax
+
+        report = Report()
+        for ri, rnd in enumerate(plan.rounds):
+            walls, results = [], []
+            for job in rnd.jobs:
+                t0 = time.perf_counter()
+                outs, stats = self._run_with_faults(job)
+                for v in outs.values():
+                    jax.block_until_ready(v.data)
+                walls.append(time.perf_counter() - t0)
+                results.append((job, outs, stats))
+            # straggler mitigation: re-dispatch jobs ≫ the round median
+            if self.cfg.speculative and len(walls) > 1:
+                med = float(np.median(walls))
+                for i, (job, outs, stats) in enumerate(results):
+                    if walls[i] > self.cfg.straggler_factor * max(med, 1e-9):
+                        self.stats.speculative_redispatches += 1
+                        t0 = time.perf_counter()
+                        outs2, stats2 = self._run_with_faults(job)
+                        for v in outs2.values():
+                            jax.block_until_ready(v.data)
+                        w2 = time.perf_counter() - t0
+                        if w2 < walls[i]:  # fastest attempt wins
+                            walls[i] = w2
+                            results[i] = (job, outs2, stats2)
+            for (job, outs, stats), wall in zip(results, walls):
+                for name, rel in outs.items():
+                    if self.ex.config.compact:
+                        rel = rel.compacted()
+                    self.ex.env[name] = rel
+                report.records.append(
+                    JobRecord(job, ri, wall, {k: int(v) for k, v in stats.items()})
+                )
+        return self.ex.env, report
+
+
+def run_train_loop(
+    state,
+    train_step,
+    batches,
+    *,
+    steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 50,
+    crash_at: int | None = None,
+    log_every: int = 10,
+    mesh=None,
+):
+    """Checkpointed training loop with optional crash injection + resume.
+
+    Returns (state, history).  If a checkpoint exists in ``ckpt_dir`` the
+    loop resumes after its step — calling this twice around a simulated
+    crash exercises the restart path end to end (tests/test_ft.py).
+    """
+    import jax
+
+    from repro.ckpt import checkpoint
+
+    start = 0
+    last = checkpoint.latest_step(ckpt_dir)
+    if last is not None:
+        state = checkpoint.load(ckpt_dir, last, state, mesh=mesh)
+        start = last
+    history = []
+    for step in range(start, steps):
+        batch = batches(step)
+        state, metrics = train_step(state, batch)
+        if crash_at is not None and step + 1 == crash_at:
+            raise SimulatedFault(f"injected crash at step {crash_at}")
+        if (step + 1) % ckpt_every == 0 or step + 1 == steps:
+            jax.block_until_ready(state["params"])
+            checkpoint.save(ckpt_dir, step + 1, state, mesh=mesh)
+        if (step + 1) % log_every == 0:
+            history.append((step + 1, float(metrics["loss"])))
+    return state, history

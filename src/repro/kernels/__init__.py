@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the engine's compute hot-spots.
+
+Each kernel package has kernel.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd wrapper / engine-facing API) and ref.py (pure oracle);
+tests/test_kernels.py sweeps shapes and asserts exact agreement in
+interpret mode (the TPU lowering path is the same code).
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.bloom import ops, ref  # noqa: F401

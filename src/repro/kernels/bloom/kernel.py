@@ -1,0 +1,128 @@
+"""Pallas TPU kernels: gather-free bloom filter build + probe.
+
+The bloom prefilter (DESIGN.md §7) drops Req messages whose join key cannot
+match any Assert key *before* the forward all_to_all, trading a small
+all-reduce(OR) of the filter for shuffle bytes.
+
+TPU adaptation: a classic bloom filter is scatter (build) + gather (probe)
+on single bits — both hostile to the TPU vector unit.  Both kernels are
+reformulated as *dense lane-aligned compares against an iota of bit
+indices*, the standard one-hot trick for small-table lookups on MXU/VPU
+hardware:
+
+* build:  ``filter[b] = OR_{i,j} (pos[i,j] == b)`` — each (bit-tile,
+  row-tile) grid step compares a VMEM tile of positions against the tile's
+  global bit indices and OR-accumulates into the resident filter tile.
+* probe: ``found[i,j] = OR_b (pos[i,j] == b) & filter[b]`` — same compare,
+  reduced over the bit axis instead, accumulated per (row, probe) lane.
+
+The filter is laid out ``(n_words, 128)`` int32 with one *bit per lane
+element* (0/1).  This spends 32× the memory of packed words, but keeps the
+all-reduce(OR) expressible as an integer max-reduce and both kernels free
+of bit twiddling; the filter is ≤ a few hundred KB either way.
+
+Layout contract (prepared by ops.py):
+  * positions: ``(N, 128)`` int32, probe j's bit index in column j
+    (j < NPROBE); inactive rows hold -1 (matches no bit).
+  * filter:    ``(n_words, 128)`` int32 0/1, bit b at ``(b // 128, b % 128)``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+NPROBE = 2  # hash functions per key
+
+
+def _bit_iota(tw: int, w_tile: jnp.ndarray) -> jnp.ndarray:
+    """Global bit index of each (row, lane) element of a filter tile."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (tw, LANES), 0)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tw, LANES), 1)
+    return (w_tile * tw + row) * LANES + lane
+
+
+def _build_kernel(tw: int, pos_ref, out_ref):
+    """Grid (w_tiles, n_tiles); filter tile resident across the row sweep."""
+    w, n = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bits = _bit_iota(tw, w)
+    acc = out_ref[...]
+    for j in range(NPROBE):
+        pos_j = pos_ref[:, j]  # (TN,)
+        eq = pos_j[:, None, None] == bits[None, :, :]  # (TN, TW, 128)
+        acc = acc | eq.any(axis=0).astype(jnp.int32)
+    out_ref[...] = acc
+
+
+def _probe_kernel(tw: int, pos_ref, filt_ref, out_ref):
+    """Grid (n_tiles, w_tiles); per-row accumulator resident across bits."""
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bits = _bit_iota(tw, w)
+    filt = filt_ref[...] > 0  # (TW, 128)
+    acc = out_ref[...]
+    for j in range(NPROBE):
+        pos_j = pos_ref[:, j]
+        eq = pos_j[:, None, None] == bits[None, :, :]  # (TN, TW, 128)
+        found = (eq & filt[None, :, :]).any(axis=(1, 2)).astype(jnp.int32)
+        acc = acc.at[:, j].max(found)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_words", "tn", "tw", "interpret"))
+def build_blocked(
+    pos: jnp.ndarray,  # (N, 128) int32, -1 = inactive
+    *,
+    n_words: int,
+    tn: int = 256,
+    tw: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    n = pos.shape[0]
+    grid = (pl.cdiv(n_words, tw), pl.cdiv(n, tn))
+    return pl.pallas_call(
+        functools.partial(_build_kernel, tw),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tn, LANES), lambda w, i: (i, 0))],
+        out_specs=pl.BlockSpec((tw, LANES), lambda w, i: (w, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_words, LANES), jnp.int32),
+        interpret=interpret,
+    )(pos)
+
+
+@functools.partial(jax.jit, static_argnames=("tn", "tw", "interpret"))
+def probe_blocked(
+    pos: jnp.ndarray,  # (N, 128) int32
+    filt: jnp.ndarray,  # (n_words, 128) int32 0/1
+    *,
+    tn: int = 256,
+    tw: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (N, 128) int32; column j holds probe j's bit-found flag."""
+    n = pos.shape[0]
+    n_words = filt.shape[0]
+    grid = (pl.cdiv(n, tn), pl.cdiv(n_words, tw))
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, tw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, LANES), lambda i, w: (i, 0)),
+            pl.BlockSpec((tw, LANES), lambda i, w: (w, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, LANES), lambda i, w: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, LANES), jnp.int32),
+        interpret=interpret,
+    )(pos, filt)

@@ -1,0 +1,82 @@
+"""jit'd wrappers for the bloom build/probe kernels.
+
+``build``/``probe`` are what ``run_msj`` calls (see msj.py stage_bloom /
+stage_map).  ``impl='jnp'`` (default) runs a mathematically identical
+scatter/gather path — fast under the engine's vmap on CPU; ``impl='pallas'``
+runs the gather-free Pallas kernels (interpret=True on CPU, compiled on
+TPU).  Equivalence of the two paths is asserted in
+tests/test_kernels.py against kernels/bloom/ref.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.engine import hashing
+from repro.kernels.bloom import kernel
+
+LANES = kernel.LANES
+NPROBE = kernel.NPROBE
+
+# module-level default, flipped to "pallas" on TPU by launch scripts
+DEFAULT_IMPL = "jnp"
+
+
+def n_words(bits: int) -> int:
+    return max(1, (bits + LANES - 1) // LANES)
+
+
+def positions(keys: jnp.ndarray, sigs: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(N, NPROBE) int32 bit positions for each (sig, key) row."""
+    rows = jnp.concatenate([sigs.astype(jnp.int32)[:, None], keys], axis=1)
+    b = n_words(bits) * LANES
+    cols = [
+        hashing.bucket_of(hashing.hash_cols(rows, salt=1000 + j), b)
+        for j in range(NPROBE)
+    ]
+    return jnp.stack(cols, axis=1)
+
+
+def _pad_pos(pos: jnp.ndarray, mask: jnp.ndarray | None) -> jnp.ndarray:
+    """Embed the active mask (-1 = inactive) and pad to 128 lanes."""
+    if mask is not None:
+        pos = jnp.where(mask[:, None], pos, -1)
+    n, k = pos.shape
+    return jnp.pad(pos, ((0, 0), (0, LANES - k)), constant_values=-1)
+
+
+def build(
+    keys: jnp.ndarray,
+    sigs: jnp.ndarray,
+    mask: jnp.ndarray,
+    bits: int,
+    *,
+    impl: str | None = None,
+) -> jnp.ndarray:
+    """Build the (n_words, 128) int32 0/1 filter over active (sig, key) rows."""
+    impl = impl or DEFAULT_IMPL
+    pos = positions(keys, sigs, bits)
+    nw = n_words(bits)
+    if impl == "pallas":
+        return kernel.build_blocked(_pad_pos(pos, mask), n_words=nw)
+    flat = jnp.zeros((nw * LANES,), jnp.int32)
+    upd = jnp.broadcast_to(mask[:, None], pos.shape).astype(jnp.int32)
+    flat = flat.at[pos.reshape(-1)].max(upd.reshape(-1))
+    return flat.reshape(nw, LANES)
+
+
+def probe(
+    filt: jnp.ndarray,
+    keys: jnp.ndarray,
+    sigs: jnp.ndarray,
+    bits: int,
+    *,
+    impl: str | None = None,
+) -> jnp.ndarray:
+    """(N,) bool — True iff all NPROBE bits for the row are set (maybe-match)."""
+    impl = impl or DEFAULT_IMPL
+    pos = positions(keys, sigs, bits)
+    if impl == "pallas":
+        found = kernel.probe_blocked(_pad_pos(pos, None), filt)
+        return (found[:, :NPROBE] > 0).all(axis=1)
+    flat = filt.reshape(-1)
+    return (flat[pos] > 0).all(axis=1)

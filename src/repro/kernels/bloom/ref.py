@@ -1,0 +1,31 @@
+"""Pure-numpy oracle for the bloom kernels.
+
+Bit positions are computed with the same hashing as ops.py; build/probe are
+naive python/numpy loops — the ground truth for both the jnp and the Pallas
+implementations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.bloom import ops
+
+
+def build(keys, sigs, mask, bits: int) -> np.ndarray:
+    pos = np.asarray(ops.positions(keys, sigs, bits))
+    nw = ops.n_words(bits)
+    flat = np.zeros((nw * ops.LANES,), np.int32)
+    for i in range(pos.shape[0]):
+        if bool(np.asarray(mask)[i]):
+            for j in range(pos.shape[1]):
+                flat[pos[i, j]] = 1
+    return flat.reshape(nw, ops.LANES)
+
+
+def probe(filt, keys, sigs, bits: int) -> np.ndarray:
+    pos = np.asarray(ops.positions(keys, sigs, bits))
+    flat = np.asarray(filt).reshape(-1)
+    out = np.zeros((pos.shape[0],), bool)
+    for i in range(pos.shape[0]):
+        out[i] = all(flat[pos[i, j]] > 0 for j in range(pos.shape[1]))
+    return out

@@ -1,0 +1,1 @@
+from repro.kernels.msj_probe import ops, ref  # noqa: F401

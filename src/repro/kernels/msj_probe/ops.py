@@ -1,0 +1,48 @@
+"""jit'd wrapper for the blocked MSJ probe kernel.
+
+Exposes :func:`probe` with the engine's ``probe_fn`` signature
+(build_sig, build_keys, build_ok, probe_sig, probe_keys, probe_ok) -> hits,
+so it is a drop-in alternative to ``msj.probe_sorted`` (the sort-merge jnp
+path used on CPU) inside ``run_msj``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.msj_probe import kernel
+
+LANES = kernel.LANES
+
+
+def pack_rows(sig: jnp.ndarray, keys: jnp.ndarray, ok: jnp.ndarray) -> jnp.ndarray:
+    """Pack (sig, keys, ok) into the kernel's (N, 128) int32 layout."""
+    n, kw = keys.shape
+    assert kw + 2 <= LANES, f"key width {kw} too large for one lane row"
+    cols = [sig.astype(jnp.int32)[:, None], keys.astype(jnp.int32)]
+    cols.append(ok.astype(jnp.int32)[:, None])
+    packed = jnp.concatenate(cols, axis=1)
+    pad = LANES - packed.shape[1]
+    return jnp.pad(packed, ((0, 0), (0, pad)))
+
+
+def probe(
+    build_sig: jnp.ndarray,
+    build_keys: jnp.ndarray,
+    build_ok: jnp.ndarray,
+    probe_sig: jnp.ndarray,
+    probe_keys: jnp.ndarray,
+    probe_ok: jnp.ndarray,
+    *,
+    tp: int = 256,
+    tb: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Existence probe: hits[i] = any build row with equal (sig, key)."""
+    kw = build_keys.shape[1]
+    n_cols = kw + 1  # sig + key columns; validity lives at column n_cols
+    build = pack_rows(build_sig, build_keys, build_ok)
+    probe_p = pack_rows(probe_sig, probe_keys, probe_ok)
+    hits = kernel.probe_blocked(
+        probe_p, build, n_cols=n_cols, tp=tp, tb=tb, interpret=interpret
+    )
+    return hits[:, 0].astype(bool) & probe_ok

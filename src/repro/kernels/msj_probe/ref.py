@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the MSJ probe kernel: quadratic all-pairs compare."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def probe(
+    build_sig: jnp.ndarray,
+    build_keys: jnp.ndarray,
+    build_ok: jnp.ndarray,
+    probe_sig: jnp.ndarray,
+    probe_keys: jnp.ndarray,
+    probe_ok: jnp.ndarray,
+) -> jnp.ndarray:
+    eq_sig = probe_sig[:, None] == build_sig[None, :]
+    eq_key = (probe_keys[:, None, :] == build_keys[None, :, :]).all(-1)
+    m = eq_sig & eq_key & probe_ok[:, None] & build_ok[None, :]
+    return m.any(axis=1)

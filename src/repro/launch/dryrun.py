@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production mesh and derive the roofline terms from the compiled artifact.
+
+The two lines above MUST stay first — jax locks the device count at first
+init, and the dry-run (and only the dry-run) needs 512 placeholder host
+devices to build the (2,16,16) multi-pod mesh.
+
+Per cell:
+  1. resolve config + shape, check applicability (long_500k skip rules);
+  2. build the jitted step:  train_4k → train_step (fwd+bwd+AdamW),
+     prefill_32k → prefill serve_step, decode shapes → one-token
+     decode serve_step against a full cache;
+  3. ``.lower().compile()`` under the production mesh with the model's
+     partition specs as in_shardings;
+  4. record ``memory_analysis()`` (proves per-chip fit),
+     ``cost_analysis()``, and the trip-count-aware HLO analysis
+     (launch/hlo.py) feeding the three-term roofline (§Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] --out results.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.launch import hlo as hlo_lib
+from repro.launch import roofline as roofline_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import model
+from repro.train import optimizer, train_step as ts
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               overrides: dict | None = None):
+    """Returns (lowered, cfg, shape, mesh). Raises on inapplicable shapes."""
+    cfg = get_config(arch, **(overrides or {}))
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"skip: {reason}")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch = model.input_specs(cfg, shape)
+    from repro.models import layers
+
+    layers.set_activation_batch_axes(
+        model.batch_axes(mesh), mesh,
+        seq_axis="model" if cfg.seq_shard else None,
+    )
+
+    if shape.kind == "train":
+        opt_cfg = optimizer.OptConfig()
+        state = jax.eval_shape(
+            lambda: ts.init_state(cfg, jax.random.PRNGKey(0), opt_cfg)
+        )
+        sspecs = ts.state_specs(cfg, state, mesh)
+        bspecs = model.batch_specs(cfg, batch, mesh)
+        step = ts.make_train_step(cfg, opt_cfg, microbatches=cfg.train_microbatches)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_named(mesh, sspecs), _named(mesh, bspecs)),
+            donate_argnums=(0,),
+        )
+        with mesh:
+            lowered = jitted.lower(state, batch)
+    elif shape.kind == "prefill":
+        params = jax.eval_shape(lambda: model.init_params(cfg, jax.random.PRNGKey(0)))
+        pspecs = model.partition_specs(cfg, params, mesh)
+        bspecs = model.batch_specs(cfg, batch, mesh)
+        fn = lambda p, b: model.prefill(cfg, p, b, shape.seq_len)  # noqa: E731
+        jitted = jax.jit(fn, in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)))
+        with mesh:
+            lowered = jitted.lower(params, batch)
+    else:  # decode
+        params = jax.eval_shape(lambda: model.init_params(cfg, jax.random.PRNGKey(0)))
+        pspecs = model.partition_specs(cfg, params, mesh)
+        cache = batch.pop("cache")
+        cspecs = model.cache_specs(cfg, cache, mesh)
+        tspecs = model.batch_specs(cfg, batch, mesh)
+        fn = lambda p, c, t: model.decode_step(cfg, p, c, t)  # noqa: E731
+        jitted = jax.jit(
+            fn,
+            in_shardings=(
+                _named(mesh, pspecs), _named(mesh, cspecs),
+                _named(mesh, tspecs["tokens"]),
+            ),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(params, cache, batch["tokens"])
+    return lowered, cfg, shape, mesh
+
+
+def _bf16_legalization_bytes(hlo_text: str) -> int:
+    """Bytes of ≥512 MB f32 buffers that are pure converts of same-shape
+    bf16 values — XLA:CPU's bf16 legalization of loop-carried stacks."""
+    import re
+
+    seen = set()
+    for m in re.finditer(
+        r"= f32\[([\d,]+)\][^\n]*?(?:convert|wrapped_convert[\w\.]*)\(", hlo_text
+    ):
+        n = 1
+        for d in m.group(1).split(","):
+            n *= int(d)
+        if n * 4 >= 512 * 2**20:
+            # dedupe by dims: the fusion call-site and its computation body
+            # ROOT describe the same buffer
+            seen.add((m.group(1), n * 4))
+    return sum(b for _, b in seen)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             overrides: dict | None = None, verbose: bool = True) -> dict:
+    t0 = time.time()
+    lowered, cfg, shape, mesh = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, overrides=overrides
+    )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    costs = hlo_lib.analyze_hlo(hlo_text)
+    legal_bytes = _bf16_legalization_bytes(hlo_text)
+    chips = mesh.devices.size
+    rl = roofline_lib.build(
+        cfg, shape, "x".join(map(str, mesh.devices.shape)), chips,
+        costs.flops, costs.bytes, costs.coll_bytes, costs.coll_counts,
+    )
+    per_chip_hbm = (
+        mem.argument_size_in_bytes + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+    )
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "chips": chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "per_chip_bytes": int(per_chip_hbm),
+        "per_chip_gb": round(per_chip_hbm / 2**30, 3),
+        # XLA:CPU legalizes bf16 loop stacks to f32 (TPU stores bf16
+        # natively); projection removes those staging copies — see
+        # EXPERIMENTS.md §Dry-run caveats.
+        "tpu_projected_gb": round(max(per_chip_hbm - legal_bytes, 0) / 2**30, 3),
+        "arg_gb": round(mem.argument_size_in_bytes / 2**30, 3),
+        "temp_gb": round(mem.temp_size_in_bytes / 2**30, 3),
+        "xla_flops_per_chip": ca.get("flops", 0.0),
+        "roofline": rl.to_dict(),
+    }
+    if verbose:
+        print(json.dumps(rec, indent=None, default=str))
+        print(f"  memory_analysis: {mem}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--moe-impl", default=None, choices=["dense", "sort"])
+    ap.add_argument(
+        "--set", action="append", default=[],
+        help="config override key=value (int/float/bool auto-parsed)",
+    )
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.moe_impl:
+        overrides["moe_impl"] = args.moe_impl
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "True"):
+            v = True
+        if v in ("false", "False"):
+            v = False
+        overrides[k] = v
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        cfg = get_config(arch)
+        ok, reason = shape_applicable(cfg, shape)
+        if not ok:
+            print(f"SKIP {arch} x {shape}: {reason}")
+            results.append(
+                {"arch": arch, "shape": shape, "status": "skip", "reason": reason}
+            )
+            continue
+        print(f"=== {arch} x {shape} (multi_pod={args.multi_pod}) ===", flush=True)
+        try:
+            ov = dict(overrides)
+            if cfg.family == "moe" and "moe_impl" not in ov:
+                pass  # keep config default (dense baseline)
+            results.append(
+                run_cell(arch, shape, multi_pod=args.multi_pod, overrides=ov)
+            )
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            results.append(
+                {"arch": arch, "shape": shape, "status": "error", "error": str(e)}
+            )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"done: {len(results)} cells, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,298 @@
+"""Post-optimization HLO analyzer: FLOPs, HBM bytes, collective bytes.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis visits a
+``while`` body ONCE, so an 80-layer ``lax.scan`` model is undercounted
+80× (verified in tests/test_hlo.py).  This analyzer walks the compiled
+module from ENTRY, multiplying loop bodies by their trip counts (read
+from the ``known_trip_count`` backend_config XLA attaches to jax scans,
+with a condition-constant fallback) and recursing through fusions, calls
+and conditionals.
+
+Cost model per instruction (post-SPMD module = per-chip numbers):
+
+* ``dot``         — 2 · |result| · Π(lhs contracting dims) FLOPs
+* fusion          — bytes touched = the fusion's operands + result (inner
+  instructions live in registers/VMEM); FLOPs recurse into the fused
+  computation with elementwise ops at 1 FLOP/element
+* collectives     — ring-model link bytes per chip:
+  all-gather ``|out|−|in|``; reduce-scatter ``|in|−|out|``;
+  all-reduce ``2·|in|·(N−1)/N``; all-to-all ``|in|·(N−1)/N``;
+  collective-permute ``|in|``
+* ``while``       — trip × (body + condition)
+
+Shard-local shapes × trip counts make these the per-chip totals the
+roofline (launch/roofline.py) consumes directly.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# opcodes costing ~1 flop per output element
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "rsqrt", "sqrt", "power", "compare", "select", "and", "or",
+    "xor", "not", "sine", "cosine", "atan2", "floor", "ceil", "round-nearest-afz",
+    "remainder", "sign", "logistic", "cbrt", "erf", "clamp",
+}
+_ZERO_COST = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy", "reshape",
+    "transpose", "broadcast", "slice", "dynamic-slice", "dynamic-update-slice",
+    "concatenate", "pad", "reverse", "gather", "scatter", "convert",
+    "reduce", "rng-bit-generator", "custom-call", "optimization-barrier",
+    "domain", "copy-start", "copy-done", "send", "recv", "infeed", "outfeed",
+}
+
+
+def _type_bytes_elems(type_str: str) -> tuple[float, float]:
+    """Total (bytes, elements) of a possibly-tuple HLO type string."""
+    bytes_, elems = 0.0, 0.0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return bytes_, elems
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0  # HBM traffic (operands + results of fused units)
+    coll_bytes: float = 0.0  # per-chip link bytes, ring model
+    coll_counts: dict = field(default_factory=dict)
+    coll_by_kind_bytes: dict = field(default_factory=dict)
+
+    def add(self, other: "Costs", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        self.coll_bytes += other.coll_bytes * times
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * times
+        for k, v in other.coll_by_kind_bytes.items():
+            self.coll_by_kind_bytes[k] = self.coll_by_kind_bytes.get(k, 0) + v * times
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    line: str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\("
+)
+
+
+def _parse_operands(line: str) -> list[str]:
+    m = re.search(r"\w+\((.*)$", line)
+    if not m:
+        return []
+    depth, buf, args = 0, "", []
+    for ch in m.group(1):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                args.append(buf)
+                break
+            depth -= 1
+        elif ch == "," and depth == 0:
+            args.append(buf)
+            buf = ""
+            continue
+        buf += ch
+    return [re.sub(r"^.*%", "", a.strip()) for a in args if "%" in a]
+
+
+def parse_module(hlo_text: str) -> tuple[dict, str]:
+    """Split the module into computations; returns ({name: [Instr]}, entry)."""
+    comps: dict[str, list[_Instr]] = {}
+    entry = None
+    cur: list[_Instr] | None = None
+    cur_name = None
+    for line in hlo_text.splitlines():
+        header = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{", line)
+        if header:
+            cur_name = header.group(2)
+            cur = []
+            comps[cur_name] = cur
+            if header.group(1):
+                entry = cur_name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.append(
+                _Instr(m.group(1), m.group(2), m.group(3), _parse_operands(line), line)
+            )
+    if entry is None:  # single unnamed entry fallback
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _trip_count(instr: _Instr, comps: dict) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', instr.line)
+    if m:
+        return int(m.group(1))
+    # fallback: max integer constant in the condition computation
+    m = re.search(r"condition=%([\w\.\-]+)", instr.line)
+    if m and m.group(1) in comps:
+        consts = [
+            int(c)
+            for i in comps[m.group(1)]
+            for c in re.findall(r"constant\((\d+)\)", i.line)
+        ]
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _called(instr: _Instr, attr: str) -> str | None:
+    m = re.search(attr + r"=%([\w\.\-]+)", instr.line)
+    return m.group(1) if m else None
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_module(hlo_text)
+        self._shapes: dict[tuple[str, str], str] = {}
+        for cname, instrs in self.comps.items():
+            for i in instrs:
+                self._shapes[(cname, i.name)] = i.type_str
+        self._memo: dict[tuple[str, bool], Costs] = {}
+
+    def _operand_bytes(self, cname: str, instr: _Instr) -> float:
+        total = 0.0
+        for op in instr.operands:
+            t = self._shapes.get((cname, op))
+            if t:
+                total += _type_bytes_elems(t)[0]
+        return total
+
+    def _dot_flops(self, cname: str, instr: _Instr) -> float:
+        out_bytes, out_elems = _type_bytes_elems(instr.type_str)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+        contract = 1.0
+        if m and instr.operands:
+            lhs_t = self._shapes.get((cname, instr.operands[0]))
+            if lhs_t:
+                tm = _TYPE_RE.search(lhs_t)
+                if tm and tm.group(2):
+                    dims = [int(d) for d in tm.group(2).split(",")]
+                    for d in m.group(1).split(","):
+                        if d:
+                            contract *= dims[int(d)]
+        return 2.0 * out_elems * contract
+
+    def analyze(self, cname: str | None = None, *, fused: bool = False) -> Costs:
+        cname = cname or self.entry
+        key = (cname, fused)
+        if key in self._memo:
+            return self._memo[key]
+        total = Costs()
+        for instr in self.comps.get(cname, []):
+            op = instr.opcode
+            out_bytes, out_elems = _type_bytes_elems(instr.type_str)
+            if op == "while":
+                trips = _trip_count(instr, self.comps)
+                body = _called(instr, "body")
+                cond = _called(instr, "condition")
+                if body:
+                    total.add(self.analyze(body, fused=fused), trips)
+                if cond:
+                    total.add(self.analyze(cond, fused=fused), trips)
+            elif op == "fusion":
+                callee = _called(instr, "calls")
+                if callee:
+                    inner = self.analyze(callee, fused=True)
+                    total.flops += inner.flops
+                    total.coll_bytes += inner.coll_bytes
+                if not fused:
+                    total.bytes += out_bytes + self._operand_bytes(cname, instr)
+            elif op in ("call", "conditional", "async-start"):
+                for attr in ("to_apply", "branch_computations", "called_computations", "calls"):
+                    callee = _called(instr, attr)
+                    if callee:
+                        total.add(self.analyze(callee, fused=fused))
+                if not fused:
+                    total.bytes += out_bytes + self._operand_bytes(cname, instr)
+            elif op in _COLLECTIVES:
+                in_bytes = self._operand_bytes(cname, instr)
+                n = _group_size(instr.line, 1)
+                if op == "all-gather":
+                    link = max(out_bytes - in_bytes, 0.0)
+                elif op == "reduce-scatter":
+                    link = max(in_bytes - out_bytes, 0.0)
+                elif op == "all-reduce":
+                    link = 2.0 * in_bytes * (n - 1) / max(n, 1)
+                elif op == "all-to-all":
+                    link = in_bytes * (n - 1) / max(n, 1)
+                else:  # collective-permute
+                    link = in_bytes
+                total.coll_bytes += link
+                total.coll_counts[op] = total.coll_counts.get(op, 0) + 1
+                total.coll_by_kind_bytes[op] = (
+                    total.coll_by_kind_bytes.get(op, 0) + link
+                )
+                if not fused:
+                    total.bytes += out_bytes + in_bytes
+            elif op == "dot":
+                total.flops += self._dot_flops(cname, instr)
+                if not fused:
+                    total.bytes += out_bytes + self._operand_bytes(cname, instr)
+            elif op == "convolution":
+                # rough: 2 * |out| * (kernel elems / out-channels)
+                total.flops += 2.0 * out_elems
+                if not fused:
+                    total.bytes += out_bytes + self._operand_bytes(cname, instr)
+            else:
+                if op in _ELEMENTWISE:
+                    total.flops += out_elems
+                elif op == "reduce" or op.startswith("reduce-"):
+                    total.flops += self._operand_bytes(cname, instr) / 4.0
+                if op not in ("parameter", "constant", "tuple", "get-tuple-element") and not fused:
+                    total.bytes += out_bytes + self._operand_bytes(cname, instr)
+        self._memo[key] = total
+        return total
+
+
+def analyze_hlo(hlo_text: str) -> Costs:
+    return HloAnalyzer(hlo_text).analyze()

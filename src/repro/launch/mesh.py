@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization, and smoke tests import this module under a 1-device CPU.
+
+Mesh layout: ``(data=16, model=16)`` per pod (256 chips, a v5e pod slice);
+multi-pod adds a leading ``pod`` axis — ``(pod=2, data=16, model=16)`` =
+512 chips.  Batch and FSDP shard over (pod, data); tensor-parallel over
+model (kept inside a pod: the model axis maps to the fastest ICI links,
+while the pod axis carries only data-parallel gradient reductions over
+DCN — the standard multi-pod layout).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a (data, model) mesh (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

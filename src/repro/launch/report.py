@@ -1,0 +1,50 @@
+"""Render dry-run sweep JSONs as a roofline table.
+
+    python -m repro.launch.report dryrun_single_pod.json [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--md", action="store_true", help="markdown output")
+    args = ap.parse_args()
+    rows = json.load(open(args.path))
+    hdr = ["arch", "shape", "GB/chip", "TPU GB", "t_comp", "t_mem", "t_coll",
+           "bottleneck", "useful", "rl_frac"]
+    if args.md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(f"{hdr[0]:22s} {hdr[1]:12s} " + " ".join(f"{h:>9s}" for h in hdr[2:]))
+    n_ok = n_skip = n_err = 0
+    for r in rows:
+        if r["status"] == "skip":
+            n_skip += 1
+            cells = [r["arch"], r["shape"]] + ["—"] * 7 + ["SKIP"]
+        elif r["status"] == "error":
+            n_err += 1
+            cells = [r["arch"], r["shape"]] + ["—"] * 7 + ["ERROR"]
+        else:
+            n_ok += 1
+            rl = r["roofline"]
+            cells = [
+                r["arch"], r["shape"], f"{r['per_chip_gb']:.2f}",
+                f"{r.get('tpu_projected_gb', 0):.2f}",
+                f"{rl['t_compute']:.3g}", f"{rl['t_memory']:.3g}",
+                f"{rl['t_collective']:.3g}", rl["bottleneck"],
+                f"{rl['useful_flop_ratio']:.3f}", f"{rl['roofline_frac']:.4f}",
+            ]
+        if args.md:
+            print("| " + " | ".join(cells) + " |")
+        else:
+            print(f"{cells[0]:22s} {cells[1]:12s} " + " ".join(f"{c:>9s}" for c in cells[2:]))
+    print(f"\n{n_ok} ok, {n_skip} skip, {n_err} error")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Three-term roofline model over the compiled dry-run artifact.
+
+Per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs    / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes    / (chips × 819 GB/s HBM)
+    collective = coll_bytes   / (chips × 50 GB/s/link ICI)
+
+All three in seconds; HLO_* are aggregate (per-chip analyzer totals ×
+chips), so the chips in the denominator cancel back to per-chip time.
+The bottleneck is the max term; ``roofline_frac`` is
+``MODEL_FLOPS_time / max_term`` — the fraction of the step's lower bound
+spent on useful model FLOPs (6·N·D for training, 2·N·D forward-only),
+i.e. an MFU lower bound from the compiled module alone.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e)
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # aggregate over chips
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_counts: dict
+    # seconds
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_flop_ratio: float  # MODEL_FLOPS / HLO_FLOPs
+    roofline_frac: float  # MODEL_FLOPS time / dominant term
+    step_lower_bound_s: float
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """6·N·D for train (fwd+bwd), 2·N·D forward-only for serving;
+    N = active params for MoE."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def build(cfg: ArchConfig, shape: ShapeSpec, mesh_desc: str, chips: int,
+          per_chip_flops: float, per_chip_bytes: float,
+          per_chip_coll_bytes: float, coll_counts: dict) -> Roofline:
+    agg_flops = per_chip_flops * chips
+    agg_bytes = per_chip_bytes * chips
+    agg_coll = per_chip_coll_bytes * chips
+    t_c = agg_flops / (chips * PEAK_FLOPS)
+    t_m = agg_bytes / (chips * HBM_BW)
+    t_x = agg_coll / (chips * LINK_BW)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    lb = max(terms.values())
+    mf = model_flops(cfg, shape)
+    t_useful = mf / (chips * PEAK_FLOPS)
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_desc, chips=chips,
+        hlo_flops=agg_flops, hlo_bytes=agg_bytes, coll_bytes=agg_coll,
+        coll_counts=dict(coll_counts),
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck,
+        model_flops=mf,
+        useful_flop_ratio=mf / max(agg_flops, 1.0),
+        roofline_frac=t_useful / max(lb, 1e-30),
+        step_lower_bound_s=lb,
+    )

@@ -1,0 +1,219 @@
+"""Encoder–decoder transformer (seamless-m4t family).
+
+The speech frontend is a STUB per the brief: the encoder consumes
+precomputed frame embeddings ``batch['embeds']`` (B, T_a, d_model).  The
+decoder is a standard causal transformer with cross-attention to the
+encoder output; serving caches the decoder self-attention KV plus the
+(static) cross-attention KV computed once at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kvcache
+from repro.models import layers as layers_mod
+from repro.models.layers import (
+    attention,
+    decode_attention,
+    dense_init,
+    gelu_ffn,
+    init_attn,
+    qkv_project,
+    rmsnorm,
+)
+from repro.models.transformer import ce_loss, _remat
+
+
+def _init_ffn(key, d, dff):
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, d, dff), "w2": dense_init(k2, dff, d)}
+
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, cfg.enc_layers + cfg.dec_layers + 3)
+
+    def enc_layer(k):
+        a, b = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((cfg.d_model,)),
+            "attn": init_attn(a, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim),
+            "ln2": jnp.ones((cfg.d_model,)),
+            "mlp": _init_ffn(b, cfg.d_model, cfg.d_ff),
+        }
+
+    def dec_layer(k):
+        a, b, c = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.ones((cfg.d_model,)),
+            "self_attn": init_attn(a, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim),
+            "lnx": jnp.ones((cfg.d_model,)),
+            "cross_attn": init_attn(b, cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim),
+            "ln2": jnp.ones((cfg.d_model,)),
+            "mlp": _init_ffn(c, cfg.d_model, cfg.d_ff),
+        }
+
+    enc = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[enc_layer(ks[i]) for i in range(cfg.enc_layers)]
+    )
+    dec = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[dec_layer(ks[cfg.enc_layers + i]) for i in range(cfg.dec_layers)],
+    )
+    return {
+        "embed": jax.random.normal(ks[-1], (cfg.vocab, cfg.d_model)) * 0.02,
+        "enc_layers": enc,
+        "enc_norm": jnp.ones((cfg.d_model,)),
+        "dec_layers": dec,
+        "final_norm": jnp.ones((cfg.d_model,)),
+        "lm_head": dense_init(ks[-2], cfg.d_model, cfg.vocab),
+    }
+
+
+def encode(cfg, params, embeds):
+    """Bidirectional encoder over stub frame embeddings (B, T_a, d)."""
+    x = embeds.astype(jnp.dtype(cfg.dtype))
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    def body(x, lp):
+        x = layers_mod.constrain_batch(x)
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.rmsnorm_eps)
+        q, k, v = qkv_project(
+            lp["attn"], h, cfg.n_heads, cfg.n_kv, cfg.head_dim, positions,
+            theta=cfg.rope_theta,
+        )
+        o = attention(q, k, v, causal=False, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        x = x + o.reshape(B, T, -1) @ lp["attn"]["wo"].astype(x.dtype)
+        h = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.rmsnorm_eps)
+        m = lp["mlp"]
+        return x + gelu_ffn(h, m["w1"].astype(x.dtype), m["w2"].astype(x.dtype)), None
+
+    from repro.models.transformer import _cast_stack
+    x, _ = jax.lax.scan(_remat(cfg, body), x, _cast_stack(cfg, params["enc_layers"]))
+    return rmsnorm(x, params["enc_norm"].astype(x.dtype), cfg.rmsnorm_eps)
+
+
+def _cross_kv(lp, enc_out, cfg):
+    B, T, _ = enc_out.shape
+    k = (enc_out @ lp["cross_attn"]["wk"].astype(enc_out.dtype)).reshape(
+        B, T, cfg.n_kv, cfg.head_dim
+    )
+    v = (enc_out @ lp["cross_attn"]["wv"].astype(enc_out.dtype)).reshape(
+        B, T, cfg.n_kv, cfg.head_dim
+    )
+    return k, v
+
+
+def decode_full(cfg, params, tokens, enc_out, *, collect_kv=False):
+    """Teacher-forced decoder pass. Returns (hidden, self-kv or None)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        x = layers_mod.constrain_batch(x)
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.rmsnorm_eps)
+        q, k, v = qkv_project(
+            lp["self_attn"], h, cfg.n_heads, cfg.n_kv, cfg.head_dim, positions,
+            theta=cfg.rope_theta,
+        )
+        o = attention(q, k, v, causal=True, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        x = x + o.reshape(B, S, -1) @ lp["self_attn"]["wo"].astype(x.dtype)
+        # cross attention (bidirectional over encoder output)
+        h = rmsnorm(x, lp["lnx"].astype(x.dtype), cfg.rmsnorm_eps)
+        qx = (h @ lp["cross_attn"]["wq"].astype(x.dtype)).reshape(
+            B, S, cfg.n_heads, cfg.head_dim
+        )
+        kx, vx = _cross_kv(lp, enc_out, cfg)
+        ox = attention(qx, kx, vx, causal=False, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        x = x + ox.reshape(B, S, -1) @ lp["cross_attn"]["wo"].astype(x.dtype)
+        h = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.rmsnorm_eps)
+        m = lp["mlp"]
+        x = x + gelu_ffn(h, m["w1"].astype(x.dtype), m["w2"].astype(x.dtype))
+        return x, (k, v) if collect_kv else None
+
+    from repro.models.transformer import _cast_stack
+    x, kvs = jax.lax.scan(_remat(cfg, body), x, _cast_stack(cfg, params["dec_layers"]))
+    return rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.rmsnorm_eps), kvs
+
+
+def loss_fn(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["embeds"])
+    hidden, _ = decode_full(cfg, params, batch["tokens"], enc_out)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    targets = jnp.concatenate([tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], 1)
+    mask = jnp.concatenate(
+        [jnp.ones((B, S - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)], 1
+    )
+    return ce_loss(cfg, hidden, params["lm_head"], targets, mask)
+
+
+def init_cache(cfg, batch: int, max_len: int, cross_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "self_k": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+        "self_v": jnp.zeros((cfg.dec_layers, batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+        "cross_k": jnp.zeros((cfg.dec_layers, batch, cross_len, cfg.n_kv, cfg.head_dim), dtype),
+        "cross_v": jnp.zeros((cfg.dec_layers, batch, cross_len, cfg.n_kv, cfg.head_dim), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(cfg, params, batch, max_len: int):
+    enc_out = encode(cfg, params, batch["embeds"])
+    hidden, kvs = decode_full(cfg, params, batch["tokens"], enc_out, collect_kv=True)
+    B, S = batch["tokens"].shape
+    T_a = enc_out.shape[1]
+    cache = init_cache(cfg, B, max_len, T_a)
+    cache["self_k"] = cache["self_k"].at[:, :, :S].set(kvs[0])
+    cache["self_v"] = cache["self_v"].at[:, :, :S].set(kvs[1])
+
+    def xkv(_, lp):
+        return None, _cross_kv(lp, enc_out, cfg)
+
+    _, (cks, cvs) = jax.lax.scan(xkv, None, params["dec_layers"])
+    cache["cross_k"], cache["cross_v"] = cks, cvs
+    cache["len"] = jnp.full((B,), S, jnp.int32)
+    logits = (hidden[:, -1] @ params["lm_head"].astype(hidden.dtype)).astype(jnp.float32)
+    return cache, logits
+
+
+def decode_step(cfg, params, cache, tokens):
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]  # (B, 1, d)
+    length = cache["len"]
+    B = x.shape[0]
+    T_a = cache["cross_k"].shape[2]
+
+    def body(x, ins):
+        lp, kc, vc, ck, cv = ins
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.rmsnorm_eps)
+        pos = jnp.broadcast_to(jnp.asarray(length), (B,))[:, None]
+        q, k, v = qkv_project(
+            lp["self_attn"], h, cfg.n_heads, cfg.n_kv, cfg.head_dim, pos,
+            theta=cfg.rope_theta,
+        )
+        kc, vc = kvcache.cache_write_token(kc, vc, k, v, length)
+        o = decode_attention(q, kc, vc, jnp.minimum(length + 1, kc.shape[1]))
+        x = x + o.reshape(B, 1, -1) @ lp["self_attn"]["wo"].astype(x.dtype)
+        h = rmsnorm(x, lp["lnx"].astype(x.dtype), cfg.rmsnorm_eps)
+        qx = (h @ lp["cross_attn"]["wq"].astype(x.dtype)).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim
+        )
+        ox = decode_attention(qx, ck, cv, T_a)
+        x = x + ox.reshape(B, 1, -1) @ lp["cross_attn"]["wo"].astype(x.dtype)
+        h = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.rmsnorm_eps)
+        m = lp["mlp"]
+        x = x + gelu_ffn(h, m["w1"].astype(x.dtype), m["w2"].astype(x.dtype))
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]),
+    )
+    x = rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.rmsnorm_eps)
+    logits = (x[:, -1] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return dict(cache, self_k=ks, self_v=vs, len=length + 1), logits

@@ -1,0 +1,137 @@
+"""Flash attention with a custom VJP — the memory-correct training path.
+
+``jax.grad`` through a scanned online-softmax attention *saves the score
+matrices for backward*, stacking an S×S-equivalent f32 buffer across the
+KV scan (measured: 16 GB/chip on qwen3-0.6b train_4k — see EXPERIMENTS.md
+§Perf iteration 1).  The fix is the standard flash-attention backward:
+save only (o, lse) per query and *recompute* per-block scores from q,k,v
+inside the gradient, chunk by chunk.
+
+Internal layout: (B, Hkv, G, S, D) with G = Hq/Hkv query groups per KV
+head, so GQA never materializes repeated K/V.  All score math in f32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _fit_chunk(n: int, chunk: int) -> int:
+    c = min(chunk, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, q_chunk, kv_chunk):
+    """q: (B,Hkv,G,Sq,D); k/v: (B,Hkv,Sk,D) -> (o, lse)."""
+    B, Hkv, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    cq = _fit_chunk(Sq, q_chunk)
+    ck = _fit_chunk(Sk, kv_chunk)
+    nq, nk = Sq // cq, Sk // ck
+
+    qs = q.reshape(B, Hkv, G, nq, cq, D).transpose(3, 0, 1, 2, 4, 5)
+    ks = k.reshape(B, Hkv, nk, ck, D).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, Hkv, nk, ck, D).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_iq):
+        qi, iq = qi_iq
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(carry, ki_vi_ik):
+            m_prev, l_prev, acc = carry
+            (ki, vi), ik = ki_vi_ik
+            k_pos = ik * ck + jnp.arange(ck)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi, ki).astype(jnp.float32) * scale
+            s = jnp.where(_mask(q_pos, k_pos, causal, window)[None, None, None], s, NEG_INF)
+            m_cur = jnp.maximum(m_prev, s.max(-1))
+            alpha = jnp.exp(m_prev - m_cur)
+            p = jnp.exp(s - m_cur[..., None])
+            l_cur = l_prev * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(qi.dtype), vi
+            ).astype(jnp.float32)
+            return (m_cur, l_cur, acc), None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, cq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), ((ks, vs), jnp.arange(nk)))
+        o = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (o, lse)
+
+    _, (os_, lses) = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    o = os_.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv, G, Sq, D)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, Hkv, G, Sq)
+    return o, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=0, q_offset=0,
+                    q_chunk=512, kv_chunk=1024):
+    o, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, q_chunk, kv_chunk)
+    return o
+
+
+def _fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk):
+    o, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, q_chunk, kv_chunk)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd(causal, window, q_offset, q_chunk, kv_chunk, res, do):
+    """Outer scan over KV chunks (dk/dv emitted per chunk), dq accumulated
+    in an f32 carry — the standard flash backward loop order.  Per-step
+    transients are (B,Hkv,G,Sq,ck); nothing S×S is ever live."""
+    q, k, v, o, lse = res
+    B, Hkv, G, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    ck = _fit_chunk(Sk, kv_chunk)
+    nk = Sk // ck
+
+    delta = jnp.einsum(
+        "bhgqd,bhgqd->bhgq", do.astype(jnp.float32), o.astype(jnp.float32)
+    )
+    q_pos = q_offset + jnp.arange(Sq)
+    ks = k.reshape(B, Hkv, nk, ck, D).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, Hkv, nk, ck, D).transpose(2, 0, 1, 3, 4)
+    do32 = do.astype(jnp.float32)
+
+    def kv_step(dq_acc, ins):
+        ki, vi, ik = ins
+        k_pos = ik * ck + jnp.arange(ck)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q, ki).astype(jnp.float32) * scale
+        s = jnp.where(_mask(q_pos, k_pos, causal, window)[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # (B,Hkv,G,Sq,ck) f32
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", do32, vi.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, ki.astype(jnp.float32))
+        dk_i = jnp.einsum("bhgqk,bhgqd->bhkd", ds, q.astype(jnp.float32))
+        dv_i = jnp.einsum("bhgqk,bhgqd->bhkd", p, do32)
+        return dq_acc, (dk_i, dv_i)
+
+    dq0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_step, dq0, (ks, vs, jnp.arange(nk)))
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, Sk, D)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(B, Hkv, Sk, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,275 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+The stack is ``n_groups = n_layers // period`` groups of ``period``
+Mamba-2 blocks, each group preceded by the shared attention block (weights
+reused at every invocation — one parameter set, ``n_groups`` KV caches),
+plus ``n_layers % period`` trailing Mamba-2 blocks.  As in Zamba2, the
+shared block sees ``concat(hidden, original_embeddings)`` and operates at
+width 2·d_model; its output projects back to d_model and adds to the
+residual stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kvcache, ssm
+from repro.models import layers as layers_mod
+from repro.models.layers import (
+    attention,
+    decode_attention,
+    dense_init,
+    init_attn,
+    qkv_project,
+    rmsnorm,
+    swiglu,
+)
+from repro.models.transformer import ce_loss, _remat
+
+
+def n_groups(cfg) -> tuple[int, int]:
+    g = cfg.n_layers // cfg.shared_attn_period
+    tail = cfg.n_layers - g * cfg.shared_attn_period
+    return g, tail
+
+
+def shared_head_dim(cfg) -> int:
+    return 2 * cfg.d_model // cfg.n_heads
+
+
+def init_shared_block(cfg, key):
+    d2 = 2 * cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "ln1": jnp.ones((d2,)),
+        "attn": init_attn(ks[0], d2, cfg.n_heads, cfg.n_kv, shared_head_dim(cfg), d_in=d2),
+        "ln2": jnp.ones((d2,)),
+        "mlp": {
+            "w1": dense_init(ks[1], d2, cfg.d_ff),
+            "w3": dense_init(ks[2], d2, cfg.d_ff),
+            "w2": dense_init(ks[3], cfg.d_ff, d2),
+        },
+        "down": dense_init(ks[4], d2, cfg.d_model),
+    }
+
+
+def _mamba_layer_init(cfg, key):
+    return {
+        "ln": jnp.ones((cfg.d_model,)),
+        "mamba": ssm.init_mamba2(
+            key, cfg.d_model, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand, conv=cfg.ssm_conv,
+        ),
+    }
+
+
+def init_params(cfg, key):
+    g, tail = n_groups(cfg)
+    per = cfg.shared_attn_period
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    ls = [_mamba_layer_init(cfg, ks[i]) for i in range(cfg.n_layers)]
+    grouped = jax.tree.map(
+        lambda *xs: jnp.stack(xs).reshape((g, per) + xs[0].shape),
+        *ls[: g * per],
+    )
+    params = {
+        "embed": jax.random.normal(ks[-1], (cfg.vocab, cfg.d_model)) * 0.02,
+        "groups": grouped,
+        "shared": init_shared_block(cfg, ks[-3]),
+        "final_norm": jnp.ones((cfg.d_model,)),
+        "lm_head": dense_init(ks[-2], cfg.d_model, cfg.vocab),
+    }
+    if tail:
+        params["tail"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *ls[g * per :]
+        )
+    return params
+
+
+# -- shared attention block -------------------------------------------------
+
+
+def shared_block_fwd(cfg, sp, x, x0, positions, *, collect_kv=False):
+    x = layers_mod.constrain_batch(x)
+    h0 = jnp.concatenate([x, x0], axis=-1)
+    h = rmsnorm(h0, sp["ln1"].astype(x.dtype), cfg.rmsnorm_eps)
+    q, k, v = qkv_project(
+        sp["attn"], h, cfg.n_heads, cfg.n_kv, shared_head_dim(cfg), positions,
+        theta=cfg.rope_theta,
+    )
+    o = attention(q, k, v, causal=True, window=cfg.window,
+                  q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    B, S = x.shape[:2]
+    h1 = h0 + o.reshape(B, S, -1) @ sp["attn"]["wo"].astype(x.dtype)
+    h2 = rmsnorm(h1, sp["ln2"].astype(x.dtype), cfg.rmsnorm_eps)
+    m = sp["mlp"]
+    h1 = h1 + swiglu(h2, m["w1"].astype(x.dtype), m["w3"].astype(x.dtype), m["w2"].astype(x.dtype))
+    out = x + h1 @ sp["down"].astype(x.dtype)
+    return (out, (k, v)) if collect_kv else (out, None)
+
+
+def shared_block_decode(cfg, sp, x, x0, k_cache, v_cache, length):
+    h0 = jnp.concatenate([x, x0], axis=-1)  # (B, 1, 2d)
+    h = rmsnorm(h0, sp["ln1"].astype(x.dtype), cfg.rmsnorm_eps)
+    pos = jnp.broadcast_to(jnp.asarray(length), (x.shape[0],))[:, None]
+    q, k, v = qkv_project(
+        sp["attn"], h, cfg.n_heads, cfg.n_kv, shared_head_dim(cfg), pos,
+        theta=cfg.rope_theta,
+    )
+    k_cache, v_cache = kvcache.cache_write_token(k_cache, v_cache, k, v, length)
+    T = k_cache.shape[1]
+    valid = jnp.minimum(length + 1, T)
+    o = decode_attention(q, k_cache, v_cache, valid)
+    B = x.shape[0]
+    h1 = h0 + o.reshape(B, 1, -1) @ sp["attn"]["wo"].astype(x.dtype)
+    h2 = rmsnorm(h1, sp["ln2"].astype(x.dtype), cfg.rmsnorm_eps)
+    m = sp["mlp"]
+    h1 = h1 + swiglu(h2, m["w1"].astype(x.dtype), m["w3"].astype(x.dtype), m["w2"].astype(x.dtype))
+    return x + h1 @ sp["down"].astype(x.dtype), k_cache, v_cache
+
+
+# -- full model ---------------------------------------------------------------
+
+
+def _mamba_body(cfg):
+    def body(x, lp):
+        x = layers_mod.constrain_batch(x)
+        h = rmsnorm(x, lp["ln"].astype(x.dtype), cfg.rmsnorm_eps)
+        y = ssm.mamba2(
+            lp["mamba"], h, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+        )
+        return x + y, None
+
+    return body
+
+
+def forward(cfg, params, batch):
+    tokens = batch["tokens"]
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    x0 = x
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mb = _remat(cfg, _mamba_body(cfg))
+
+    def group_body(x, gp):
+        x, _ = shared_block_fwd(cfg, params["shared"], x, x0, positions)
+        x, _ = jax.lax.scan(mb, x, gp)
+        return x, None
+
+    from repro.models.transformer import _cast_stack
+    x, _ = jax.lax.scan(group_body, x, _cast_stack(cfg, params["groups"]))
+    if "tail" in params:
+        x, _ = jax.lax.scan(mb, x, _cast_stack(cfg, params["tail"]))
+    return rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.rmsnorm_eps)
+
+
+def loss_fn(cfg, params, batch):
+    hidden = forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    targets = jnp.concatenate([tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], 1)
+    mask = jnp.concatenate(
+        [jnp.ones((B, S - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)], 1
+    )
+    return ce_loss(cfg, hidden, params["lm_head"], targets, mask)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    g, tail = n_groups(cfg)
+    per = cfg.shared_attn_period
+    di = cfg.ssm_expand * cfg.d_model
+    H = di // cfg.ssm_head_dim
+    conv_ch = di + 2 * cfg.ssm_state
+    T = kvcache.attn_cache_len(max_len, cfg.decode_window or cfg.window)
+    dtype = jnp.dtype(cfg.dtype)
+    cache = {
+        "attn_k": jnp.zeros((g, batch, T, cfg.n_kv, shared_head_dim(cfg)), dtype),
+        "attn_v": jnp.zeros((g, batch, T, cfg.n_kv, shared_head_dim(cfg)), dtype),
+        "conv": jnp.zeros((g, per, batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((g, per, batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if tail:
+        cache["conv_tail"] = jnp.zeros((tail, batch, cfg.ssm_conv - 1, conv_ch), dtype)
+        cache["ssm_tail"] = jnp.zeros(
+            (tail, batch, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        )
+    return cache
+
+
+def prefill(cfg, params, batch, max_len: int):
+    """Prompt pass collecting shared-attn KV + per-layer SSM states."""
+    tokens = batch["tokens"]
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    x0 = x
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def mamba_pf(x, lp):
+        h = rmsnorm(x, lp["ln"].astype(x.dtype), cfg.rmsnorm_eps)
+        y, c = ssm.mamba2_prefill(
+            lp["mamba"], h, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+        )
+        return x + y, (c["conv"], c["ssm"])
+
+    def group_body(x, gp):
+        x, kv = shared_block_fwd(
+            cfg, params["shared"], x, x0, positions, collect_kv=True
+        )
+        x, states = jax.lax.scan(mamba_pf, x, gp)
+        return x, (kv, states)
+
+    x, ((ks, vs), (convs, ssms)) = jax.lax.scan(group_body, x, params["groups"])
+    cache = init_cache(cfg, B, max_len)
+    attn = kvcache.cache_write_prefill(
+        {"k": cache["attn_k"], "v": cache["attn_v"], "len": cache["len"]}, ks, vs
+    )
+    cache = dict(cache, attn_k=attn["k"], attn_v=attn["v"], conv=convs, ssm=ssms)
+    if "tail" in params:
+        x, (ct, st) = jax.lax.scan(mamba_pf, x, params["tail"])
+        cache["conv_tail"], cache["ssm_tail"] = ct, st
+    cache["len"] = jnp.full((B,), S, jnp.int32)
+    x = rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.rmsnorm_eps)
+    logits = (x[:, -1] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return cache, logits
+
+
+def decode_step(cfg, params, cache, tokens):
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]  # (B, 1, d)
+    x0 = x
+    length = cache["len"]
+
+    def mamba_step(x, ins):
+        lp, conv, st = ins
+        h = rmsnorm(x, lp["ln"].astype(x.dtype), cfg.rmsnorm_eps)
+        c, y = ssm.mamba2_decode(
+            lp["mamba"], {"conv": conv, "ssm": st}, h[:, 0],
+            d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+        )
+        return x + y[:, None], (c["conv"], c["ssm"])
+
+    def group_step(x, ins):
+        gp, kc, vc, conv, st = ins
+        x, kc, vc = shared_block_decode(cfg, params["shared"], x, x0, kc, vc, length)
+        x, (conv, st) = jax.lax.scan(mamba_step, x, (gp, conv, st))
+        return x, (kc, vc, conv, st)
+
+    x, (ks, vs, convs, ssms) = jax.lax.scan(
+        group_step,
+        x,
+        (params["groups"], cache["attn_k"], cache["attn_v"], cache["conv"], cache["ssm"]),
+    )
+    new_cache = dict(cache, attn_k=ks, attn_v=vs, conv=convs, ssm=ssms, len=length + 1)
+    if "tail" in params:
+        x, (ct, st) = jax.lax.scan(
+            mamba_step, x, (params["tail"], cache["conv_tail"], cache["ssm_tail"])
+        )
+        new_cache["conv_tail"], new_cache["ssm_tail"] = ct, st
+    x = rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.rmsnorm_eps)
+    logits = (x[:, -1] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    return new_cache, logits

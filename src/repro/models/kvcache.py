@@ -1,0 +1,63 @@
+"""KV / SSM cache containers for serving.
+
+Caches are plain pytrees of arrays with layers stacked on the leading
+axis so decode steps scan over (layer_params, layer_cache) pairs.
+
+Windowed (SWA) caches are rotating buffers of ``T = min(max_len, window)``
+slots addressed by absolute position mod T; keys are stored *after* RoPE
+(absolute), so rotation never invalidates scores.  ``len`` counts tokens
+written so far (absolute), from which the valid-slot count is
+``min(len, T)``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attn_cache_len(max_len: int, window: int) -> int:
+    return min(max_len, window) if window > 0 else max_len
+
+
+def init_attn_cache(n_layers: int, batch: int, max_len: int, n_kv: int, head_dim: int,
+                    *, window: int = 0, dtype=jnp.bfloat16):
+    T = attn_cache_len(max_len, window)
+    return {
+        "k": jnp.zeros((n_layers, batch, T, n_kv, head_dim), dtype),
+        "v": jnp.zeros((n_layers, batch, T, n_kv, head_dim), dtype),
+        # per-slot absolute clock: continuous batching runs each batch slot
+        # at its own position
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_write_prefill(cache: dict, k, v):
+    """Insert prefill keys/values (layer-stacked: (L, B, S, Hkv, D)).
+
+    Rotating buffers keep the invariant *position p lives at slot p % T*:
+    the last T positions are rolled into place so subsequent single-token
+    writes (slot = len % T) stay consistent for any S."""
+    L, B, S, H, D = k.shape
+    T = cache["k"].shape[2]
+    if S >= T:
+        k, v = k[:, :, S - T :], v[:, :, S - T :]
+        # slice index i holds position S-T+i -> slot (i + S%T) % T
+        k = jnp.roll(k, shift=S % T, axis=2)
+        v = jnp.roll(v, shift=S % T, axis=2)
+        upd_k = jnp.zeros_like(cache["k"]).at[...].set(k)
+        upd_v = jnp.zeros_like(cache["v"]).at[...].set(v)
+    else:
+        upd_k = cache["k"].at[:, :, :S].set(k)
+        upd_v = cache["v"].at[:, :, :S].set(v)
+    return {"k": upd_k, "v": upd_v, "len": jnp.full((B,), S, jnp.int32)}
+
+
+def cache_write_token(layer_k_cache, layer_v_cache, k_t, v_t, length):
+    """Write one token (B, 1, Hkv, D) at per-slot absolute ``length`` (B,)."""
+    B, T = layer_k_cache.shape[:2]
+    length = jnp.broadcast_to(jnp.asarray(length), (B,))
+    slot = length % T
+    rows = jnp.arange(B)
+    return (
+        layer_k_cache.at[rows, slot].set(k_t[:, 0]),
+        layer_v_cache.at[rows, slot].set(v_t[:, 0]),
+    )

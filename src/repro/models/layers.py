@@ -1,0 +1,245 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (chunked
+causal / bidirectional / cross / decode), SwiGLU and GELU FFNs.
+
+Attention is implemented as a two-level ``lax.scan`` online-softmax
+(flash-attention structure): the outer scan walks query chunks, the inner
+scan walks KV chunks carrying (max, denom, accumulator).  Nothing of shape
+(S, S) is ever materialized — the largest live score tensor is
+``(B, H, q_chunk, kv_chunk)`` — which is what lets the 32k-prefill and 4k
+train shapes fit HBM on the dry-run mesh.  Masking is positional, so the
+same kernel serves causal, sliding-window and bidirectional attention.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Basics
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return jax.random.normal(key, (d_in, d_out), dtype) * (0.02)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x, w, eps: float = 1e-6):
+    # custom VJP: the autodiff backward consumes x in f32, and XLA LICM
+    # hoists `convert(saved_residual_stack)` out of the backward loop into
+    # an (L,B,S,d) f32 copy of the whole stack (7 GB/chip on qwen3 —
+    # EXPERIMENTS.md §Perf iteration 3).  This backward keeps all tensor
+    # math in x.dtype with f32 only for row statistics.
+    return _rmsnorm_fwd(x, w, eps)[0]
+
+
+def _rmsnorm_fwd(x, w, eps):
+    # the barrier keeps XLA from CSE-ing this einsum's f32 operand convert
+    # into a stored (L,B,S,d) f32 copy of the saved residual stack
+    xb = jax.lax.optimization_barrier(x)
+    sq = jnp.einsum("...d,...d->...", xb, xb, preferred_element_type=jnp.float32)
+    r = jax.lax.rsqrt(sq[..., None] / x.shape[-1] + eps)  # (..., 1) f32
+    return x * r.astype(x.dtype) * w, (x, w, r)
+
+
+def _rmsnorm_bwd(eps, res, dy):
+    x, w, r = res
+    d = x.shape[-1]
+    g = dy * w  # (..., d) in x.dtype
+    t = jnp.einsum("...d,...d->...", g, x, preferred_element_type=jnp.float32)
+    coef = (r * r * r * t[..., None] / d).astype(x.dtype)  # (..., 1)
+    dx = g * r.astype(x.dtype) - x * coef
+    xn = x * r.astype(x.dtype)
+    axes = tuple(range(x.ndim - 1))
+    dw = jnp.sum((dy * xn).astype(jnp.float32), axis=axes).astype(w.dtype)
+    return dx, dw
+
+
+rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def swiglu(x, w1, w3, w2):
+    """SwiGLU FFN: (silu(x@w1) * (x@w3)) @ w2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def gelu_ffn(x, w1, w2):
+    return jax.nn.gelu(x @ w1) @ w2
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _fit_chunk(n: int, chunk: int) -> int:
+    """Largest divisor of n that is ≤ chunk (chunked scans need S % c == 0)."""
+    c = min(chunk, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints
+# --------------------------------------------------------------------------
+# GSPMD propagates input shardings, but propagation leaks inside
+# remat+scan bodies (measured: unsharded batch inside the layer scan —
+# EXPERIMENTS.md §Perf).  Launch code pins the batch axes here; model
+# forwards re-constrain the residual stream at every layer boundary.
+
+_ACT_BATCH_AXES: tuple | None = None
+_ACT_MESH = None  # the mesh shard_map-based blocks (MoE dispatch) bind to
+_ACT_SEQ_AXIS: str | None = None  # Megatron-SP: seq dim over the model axis
+
+
+def set_activation_batch_axes(axes: tuple | None, mesh=None, seq_axis: str | None = None):
+    global _ACT_BATCH_AXES, _ACT_MESH, _ACT_SEQ_AXIS
+    _ACT_BATCH_AXES = tuple(axes) if axes else None
+    _ACT_MESH = mesh
+    _ACT_SEQ_AXIS = seq_axis
+
+
+def constrain_batch(x):
+    """Shard dim 0 (batch) over the configured axes; with sequence
+    parallelism also shard dim 1 (seq) over the model axis — the
+    residual stream and saved-for-backward stacks then scale 1/|model|,
+    at the price of gather/scatter collectives around attention."""
+    if _ACT_BATCH_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    rest = [None] * (x.ndim - 1)
+    if _ACT_SEQ_AXIS is not None and x.ndim == 3:
+        rest[0] = _ACT_SEQ_AXIS
+    spec = P(_ACT_BATCH_AXES, *rest)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _mask(q_pos, k_pos, causal: bool, window: int):
+    """(Q, K) boolean admissibility from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def attention(
+    q,  # (B, Sq, Hq, D)
+    k,  # (B, Sk, Hkv, D)
+    v,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+):
+    """Flash attention (custom-VJP chunked online softmax, models/flash.py)
+    with GQA head grouping: K/V are never repeated across query groups."""
+    from repro.models.flash import flash_attention
+
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    kg = k.transpose(0, 2, 1, 3)
+    vg = v.transpose(0, 2, 1, 3)
+    o = flash_attention(qg, kg, vg, causal, window, q_offset, q_chunk, kv_chunk)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+
+
+def decode_attention(q, k_cache, v_cache, valid_len, *, window: int = 0, pos=None):
+    """One-token attention against a KV cache.
+
+    q: (B, 1, Hq, D); caches: (B, T, Hkv, D); valid_len: scalar or (B,)
+    per-slot valid counts (continuous batching runs slots at different
+    positions).  For rotating (windowed) caches all T slots are admissible
+    once full; ``valid_len`` masks the not-yet-written tail.
+    """
+    B, _, Hq, D = q.shape
+    _, T, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    valid_len = jnp.broadcast_to(jnp.asarray(valid_len), (B,))
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache).astype(jnp.float32)
+    s = s / math.sqrt(D)
+    msk = jnp.arange(T)[None, :] < valid_len[:, None]  # (B, T)
+    s = jnp.where(msk[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgt,bthd->bhgd", p, v_cache)
+    return o.reshape(B, 1, Hq, D)
+
+
+# --------------------------------------------------------------------------
+# Attention block parameter helpers (shared across families)
+# --------------------------------------------------------------------------
+
+
+def init_attn(key, d_model, n_heads, n_kv, head_dim, *, qkv_bias=False, qk_norm=False, d_in=None):
+    d_in = d_in or d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_in, n_heads * head_dim),
+        "wk": dense_init(ks[1], d_in, n_kv * head_dim),
+        "wv": dense_init(ks[2], d_in, n_kv * head_dim),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,))
+        p["bk"] = jnp.zeros((n_kv * head_dim,))
+        p["bv"] = jnp.zeros((n_kv * head_dim,))
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,))
+        p["k_norm"] = jnp.ones((head_dim,))
+    return p
+
+
+def qkv_project(p, x, n_heads, n_kv, head_dim, positions, *, theta=1e4, qk_norm=False, rope=True):
+    """x -> roped (q, k, v) with optional bias and per-head qk-norm."""
+    B, S, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    if qk_norm:
+        q = rmsnorm(q, p["q_norm"].astype(x.dtype))
+        k = rmsnorm(k, p["k_norm"].astype(x.dtype))
+    if rope:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    return q, k, v

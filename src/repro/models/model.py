@@ -1,0 +1,233 @@
+"""Family dispatcher + GSPMD sharding rules + input specs.
+
+The public model API is functional:
+
+* ``init_params(cfg, key)``
+* ``loss_fn(cfg, params, batch)``            — train forward + CE
+* ``prefill(cfg, params, batch, max_len)``   — serve: prompt -> cache
+* ``decode_step(cfg, params, cache, tok)``   — serve: one token
+* ``partition_specs(cfg, params_tree, mesh)``— PartitionSpec pytree
+* ``input_specs(cfg, shape)``                — ShapeDtypeStruct stand-ins
+
+Sharding follows the Megatron + ZeRO-3 pattern: column-parallel weights
+shard their output dim over ``model``, row-parallel their input dim, and
+the complementary dim shards over the flattened data axes (FSDP) so
+per-chip parameter/optimizer memory scales with the full mesh.  All rules
+are divisibility-aware: an axis that does not divide a dim is dropped for
+that dim (e.g. kv-head projections with 8 kv heads on a 16-way model
+axis shard head_dim instead; seamless' 256206 vocab stays unsharded).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import encdec, hybrid, ssm_model, transformer
+
+
+def _mod(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer
+    if cfg.family == "ssm":
+        return ssm_model
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family == "audio":
+        return encdec
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg, key):
+    return _mod(cfg).init_params(cfg, key)
+
+
+def loss_fn(cfg, params, batch):
+    return _mod(cfg).loss_fn(cfg, params, batch)
+
+
+def prefill(cfg, params, batch, max_len: int):
+    return _mod(cfg).prefill(cfg, params, batch, max_len)
+
+
+def decode_step(cfg, params, cache, tokens):
+    return _mod(cfg).decode_step(cfg, params, cache, tokens)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    m = _mod(cfg)
+    if cfg.family == "audio":
+        return m.init_cache(cfg, batch, (max_len * 3) // 4, max_len // 4)
+    return m.init_cache(cfg, batch, max_len)
+
+
+# --------------------------------------------------------------------------
+# Sharding rules
+# --------------------------------------------------------------------------
+
+# last-n-dims templates per leaf name; "tp" = model axis, "dp" = fsdp axes
+_COL = ("dp", "tp")  # (d_in, d_out): output column-parallel
+_ROW = ("tp", "dp")
+_RULES: dict[str, tuple] = {
+    "embed": ("tp", "dp"),
+    "lm_head": _COL,
+    "wq": _COL, "wk": _COL, "wv": _COL,
+    "w1": _COL, "w3": _COL,
+    "in_proj": _COL, "x_proj": _COL, "dt_proj": _COL,
+    "wo": _ROW, "w2": _ROW, "out_proj": _ROW, "down": _ROW,
+    "router": (None, None),
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+    "conv_w": ("tp", None), "conv_b": ("tp",),
+    "A_log": ("tp", None), "D": ("tp",), "dt_bias": ("tp",), "norm_w": ("tp",),
+    "ln1": (None,), "ln2": (None,), "lnx": (None,), "ln": (None,),
+    "final_norm": (None,), "enc_norm": (None,),
+    "q_norm": (None,), "k_norm": (None,),
+}
+# MoE expert stacks (ndim 3 before layer stacking): (E, in, out)
+_MOE_RULES = {
+    "w1": (None, "dp", "tp"), "w3": (None, "dp", "tp"), "w2": (None, "tp", "dp"),
+}
+_MOE_EP_RULES = {
+    "w1": ("tp", "dp", None), "w3": ("tp", "dp", None), "w2": ("tp", None, "dp"),
+}
+
+
+def fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = (axes,) if isinstance(axes, str) else axes
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _resolve(template, shape, mesh: Mesh, *, is_moe: bool) -> P:
+    """Template ("dp"/"tp"/None per trailing dim) -> PartitionSpec,
+    prepending None for stacked leading dims and dropping non-divisors."""
+    dp = fsdp_axes(mesh)
+    lead = len(shape) - len(template)
+    spec: list = [None] * lead
+    for dim, t in zip(shape[lead:], template):
+        if t == "tp":
+            ax = "model" if dim % _axis_size(mesh, "model") == 0 else None
+        elif t == "dp":
+            ax = dp if dim % _axis_size(mesh, dp) == 0 else None
+        else:
+            ax = None
+        spec.append(ax)
+    return P(*spec)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def partition_specs(cfg: ArchConfig, params: Any, mesh: Mesh):
+    """PartitionSpec pytree matching ``params`` (arrays or ShapeDtypeStructs)."""
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        in_moe = any(getattr(e, "key", None) == "moe" for e in path if hasattr(e, "key"))
+        if in_moe and name in _MOE_RULES:
+            tmpl = (_MOE_EP_RULES if cfg.expert_parallel else _MOE_RULES)[name]
+            return _resolve(tmpl, shape, mesh, is_moe=True)
+        tmpl = _RULES.get(name)
+        if tmpl is None or len(tmpl) > len(shape):
+            return P()
+        return _resolve(tmpl, shape, mesh, is_moe=False)
+
+    return jax.tree_util.tree_map_with_path(rule, params)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+def batch_specs(cfg: ArchConfig, batch: Any, mesh: Mesh):
+    """Shard every batch leaf on its leading (global-batch) dim."""
+    ba = batch_axes(mesh)
+
+    def rule(leaf):
+        if leaf.shape and leaf.shape[0] % _axis_size(mesh, ba) == 0:
+            return P(ba, *([None] * (len(leaf.shape) - 1)))
+        return P()
+
+    return jax.tree.map(rule, batch)
+
+
+def cache_specs(cfg: ArchConfig, cache: Any, mesh: Mesh):
+    """Decode caches: batch dim + a heads/feature dim over ``model``.
+
+    Cache layouts: attention (L, B, T, Hkv, Dh); ssm conv (L, B, W, C) /
+    state (L, B, ...); hybrid adds a leading group axis.  We shard the
+    batch dim over the data axes and the last dim over model when it
+    divides (head_dim for attention, state/channel dims for SSM).
+    """
+    ba = batch_axes(mesh)
+    nb = _axis_size(mesh, ba)
+    nm = _axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        if name == "len" or not leaf.shape:
+            return P()
+        spec: list = [None] * len(leaf.shape)
+        # find the batch dim: first dim equal to a multiple of nb that
+        # follows the stacked layer dims — caches put batch right after
+        # the (1 or 2) leading layer axes.
+        bdim = 2 if len(leaf.shape) >= 5 and name in ("conv", "ssm") else 1
+        if len(leaf.shape) > bdim and leaf.shape[bdim] % nb == 0:
+            spec[bdim] = ba
+        if leaf.shape[-1] % nm == 0:
+            spec[-1] = "model"
+        elif len(leaf.shape) >= 2 and leaf.shape[-2] % nm == 0:
+            spec[-2] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache)
+
+
+# --------------------------------------------------------------------------
+# Input specs (dry-run stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Global-batch ShapeDtypeStructs for the model inputs of one shape.
+
+    For decode shapes this is the (batch, 1) token plus the KV/state cache
+    of the stated context length (ShapeDtypeStruct via eval_shape — no
+    allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            return {
+                "tokens": _sds((B, S - cfg.frontend_tokens), jnp.int32),
+                "embeds": _sds((B, cfg.frontend_tokens, cfg.d_model), dt),
+            }
+        if cfg.family == "audio":
+            return {
+                "tokens": _sds((B, (S * 3) // 4), jnp.int32),
+                "embeds": _sds((B, S // 4, cfg.d_model), dt),
+            }
+        return {"tokens": _sds((B, S), jnp.int32)}
+    # decode: one new token against a seq_len-deep cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return {"tokens": _sds((B, 1), jnp.int32), "cache": cache}

@@ -1,0 +1,325 @@
+"""State-space sequence layers: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+TPU adaptation (DESIGN.md §2): the CUDA reference implementations are
+fused recurrent kernels over thread blocks.  Here:
+
+* **Mamba-1** uses a chunked associative scan — ``lax.scan`` over sequence
+  chunks carrying the (B, d_inner, N) state, with
+  ``lax.associative_scan`` inside each chunk.  Work per chunk is dense
+  (VPU-friendly) and the live state tensor is bounded by the chunk length.
+* **Mamba-2** uses the SSD *matmul formulation*: intra-chunk attention-like
+  term ``(L ∘ C Bᵀ) (dt·X)`` plus an inter-chunk scalar-decay recurrence —
+  all MXU matmuls, the TPU-native way to run SSD.
+
+Both expose a one-token ``*_decode`` step carrying (conv_state, ssm_state)
+— O(1) per token, which is what makes the ``long_500k`` decode shape
+runnable for the SSM/hybrid architectures.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+
+
+def causal_conv1d(x, w, b=None):
+    """Depthwise causal conv. x: (B, S, C); w: (C, W)."""
+    W = w.shape[-1]
+    pads = [jnp.zeros_like(x[:, :1])] * 0
+    acc = x * w[:, W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        acc = acc + shifted * w[:, W - 1 - i]
+    if b is not None:
+        acc = acc + b
+    return acc
+
+
+def conv_step(state, xt, w, b=None):
+    """One-token causal conv. state: (B, W-1, C); xt: (B, C)."""
+    W = w.shape[-1]
+    window = jnp.concatenate([state, xt[:, None]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,cw->bc", window, w)
+    if b is not None:
+        y = y + b
+    return window[:, 1:], y
+
+
+# --------------------------------------------------------------------------
+# Mamba-1
+# --------------------------------------------------------------------------
+
+
+def init_mamba1(key, d_model: int, *, d_state: int, expand: int = 2, conv: int = 4):
+    d_inner = expand * d_model
+    dt_rank = max(1, d_model // 16)
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner),
+        "conv_w": jax.random.normal(ks[1], (d_inner, conv)) * 0.02,
+        "conv_b": jnp.zeros((d_inner,)),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner),
+        "dt_bias": jnp.zeros((d_inner,)),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,)),
+        "out_proj": dense_init(ks[4], d_inner, d_model),
+    }
+
+
+def _mamba1_inner(p, x, h0, *, d_state: int, chunk: int):
+    """Selective scan over (B, S, d_inner) activations; returns (y, h_last)."""
+    B, S, DI = x.shape
+    dt_rank = p["dt_proj"].shape[0]
+    bcdt = x @ p["x_proj"].astype(x.dtype)
+    dt_low, Bc, Cc = jnp.split(bcdt, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_low @ p["dt_proj"].astype(x.dtype)).astype(jnp.float32)
+        + p["dt_bias"]
+    )  # (B,S,DI) f32
+    A = -jnp.exp(p["A_log"])  # (DI,N)
+
+    from repro.models.layers import _fit_chunk
+
+    chunk = _fit_chunk(S, chunk)
+    nc = S // chunk
+
+    xs = x.reshape(B, nc, chunk, DI).swapaxes(0, 1)
+    dts = dt.reshape(B, nc, chunk, DI).swapaxes(0, 1)
+    Bs = Bc.reshape(B, nc, chunk, d_state).swapaxes(0, 1)
+    Cs = Cc.reshape(B, nc, chunk, d_state).swapaxes(0, 1)
+
+    def chunk_step(h, ins):
+        xc, dtc, bc, cc = ins  # (B,C,DI), (B,C,DI) f32, (B,C,N), (B,C,N)
+        dA = jnp.exp(dtc[..., None] * A)  # (B,C,DI,N) f32
+        dBx = (dtc * xc.astype(jnp.float32))[..., None] * bc.astype(jnp.float32)[
+            ..., None, :
+        ]  # (B,C,DI,N)
+
+        def combine(a, b):
+            a1, b1 = a
+            a2, b2 = b
+            return a1 * a2, a2 * b1 + b2
+
+        prodA, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        hs = hs + prodA * h[:, None]  # inject carry
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cc.astype(jnp.float32))
+        return hs[:, -1], y.astype(x.dtype)
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, (xs, dts, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(B, S, DI)
+    return y + x * p["D"].astype(x.dtype), h_last
+
+
+def mamba1(p, x, *, d_state: int, chunk: int = 128):
+    """Full Mamba-1 block. x: (B, S, d_model) -> (B, S, d_model)."""
+    B, S, _ = x.shape
+    DI = p["dt_proj"].shape[1]
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = causal_conv1d(xi, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xi = jax.nn.silu(xi)
+    h0 = jnp.zeros((B, DI, d_state), jnp.float32)
+    y, _ = _mamba1_inner(p, xi, h0, d_state=d_state, chunk=chunk)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba1_init_cache(p, batch: int, d_state: int, dtype=jnp.bfloat16):
+    DI, W = p["conv_w"].shape
+    return {
+        "conv": jnp.zeros((batch, W - 1, DI), dtype),
+        "ssm": jnp.zeros((batch, DI, d_state), jnp.float32),
+    }
+
+
+def mamba1_decode(p, cache, xt, *, d_state: int):
+    """One token. xt: (B, d_model) -> (B, d_model)."""
+    dt_rank = p["dt_proj"].shape[0]
+    xz = xt @ p["in_proj"].astype(xt.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state, xi = conv_step(
+        cache["conv"], xi, p["conv_w"].astype(xt.dtype), p["conv_b"].astype(xt.dtype)
+    )
+    xi = jax.nn.silu(xi)
+    bcdt = xi @ p["x_proj"].astype(xt.dtype)
+    dt_low, Bc, Cc = jnp.split(bcdt, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_low @ p["dt_proj"].astype(xt.dtype)).astype(jnp.float32) + p["dt_bias"]
+    )  # (B,DI)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)  # (B,DI,N)
+    dBx = (dt * xi.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, None, :]
+    h = cache["ssm"] * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32)).astype(xt.dtype)
+    y = y + xi * p["D"].astype(xt.dtype)
+    y = y * jax.nn.silu(z)
+    return {"conv": conv_state, "ssm": h}, y @ p["out_proj"].astype(xt.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# --------------------------------------------------------------------------
+
+
+def init_mamba2(key, d_model: int, *, d_state: int, head_dim: int = 64, expand: int = 2, conv: int = 4):
+    d_inner = expand * d_model
+    H = d_inner // head_dim
+    ks = jax.random.split(key, 5)
+    # in_proj -> [z (DI), x (DI), B (N), C (N), dt (H)]
+    d_proj = 2 * d_inner + 2 * d_state + H
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_proj),
+        "conv_w": jax.random.normal(ks[1], (d_inner + 2 * d_state, conv)) * 0.02,
+        "conv_b": jnp.zeros((d_inner + 2 * d_state,)),
+        "A_log": jnp.zeros((H,)),
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.zeros((H,)),
+        "norm_w": jnp.ones((d_inner,)),
+        "out_proj": dense_init(ks[2], d_inner, d_model),
+    }
+
+
+def _ssd_chunk_scan(xh, dt, A, Bc, Cc, h0, *, chunk: int):
+    """Chunked SSD. xh: (B,S,H,P); dt: (B,S,H) f32; A: (H,) f32 (negative);
+    Bc/Cc: (B,S,N). Returns (y (B,S,H,P), h_last (B,H,P,N))."""
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    from repro.models.layers import _fit_chunk
+
+    chunk = _fit_chunk(S, chunk)
+    nc = S // chunk
+
+    def resh(t, trailing):
+        return t.reshape((B, nc, chunk) + trailing).swapaxes(0, 1)
+
+    xs = resh(xh, (H, P))
+    dts = resh(dt, (H,))
+    Bs = resh(Bc, (N,))
+    Cs = resh(Cc, (N,))
+
+    def chunk_step(h, ins):
+        xc, dtc, bc, cc = ins  # (B,C,H,P) (B,C,H) (B,C,N) (B,C,N)
+        dA = dtc * A  # (B,C,H) negative
+        seg = jnp.cumsum(dA, axis=1)  # (B,C,H)
+        # intra-chunk: scores[b,h,i,j] = exp(seg_i - seg_j) * (C_i . B_j), j<=i
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)  # (B,C,C)
+        decay = jnp.exp(seg[:, :, None] - seg[:, None])  # (B,C,C,H) via broadcast
+        decay = decay.transpose(0, 3, 1, 2)  # (B,H,C,C)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        scores = jnp.where(causal[None, None], cb[:, None] * decay, 0.0)
+        xdt = xc.astype(jnp.float32) * dtc[..., None]  # (B,C,H,P)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", scores, xdt)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum(
+            "bin,bhpn,bih->bihp", cc, h, jnp.exp(seg)
+        )
+        # state update: h' = exp(seg_last) h + sum_j exp(seg_last - seg_j) dt_j x_j B_j^T
+        w = jnp.exp(seg[:, -1:, :] - seg)  # (B,C,H)
+        h_new = jnp.einsum("bjhp,bjn,bjh->bhpn", xdt, bc, w) + h * jnp.exp(
+            seg[:, -1]
+        )[..., None, None]
+        return h_new, (y_intra + y_inter).astype(xh.dtype)
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, (xs, dts, Bs, Cs))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    return y, h_last
+
+
+def mamba2(p, x, *, d_state: int, head_dim: int = 64, chunk: int = 128):
+    """Full Mamba-2 block. x: (B, S, d_model)."""
+    B, S, _ = x.shape
+    DI = p["norm_w"].shape[0]
+    H = p["A_log"].shape[0]
+    P = head_dim
+    N = d_state
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xi, Bc, Cc, dt = jnp.split(zxbcdt, [DI, 2 * DI, 2 * DI + N, 2 * DI + 2 * N], -1)
+    xbc = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    xbc = jax.nn.silu(
+        causal_conv1d(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    )
+    xi, Bc, Cc = jnp.split(xbc, [DI, DI + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    xh = xi.reshape(B, S, H, P)
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    y, _ = _ssd_chunk_scan(xh, dt, A, Bc, Cc, h0, chunk=chunk)
+    y = y + xh * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(B, S, DI)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"].astype(x.dtype))
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba2_prefill(p, x, *, d_state: int, head_dim: int = 64, chunk: int = 128):
+    """Like :func:`mamba2` but also returns the decode cache (conv window +
+    final SSM state) for the sequence."""
+    B, S, _ = x.shape
+    DI = p["norm_w"].shape[0]
+    H = p["A_log"].shape[0]
+    P = head_dim
+    N = d_state
+    W = p["conv_w"].shape[-1]
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xi, Bc, Cc, dt = jnp.split(zxbcdt, [DI, 2 * DI, 2 * DI + N, 2 * DI + 2 * N], -1)
+    xbc_raw = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    if S >= W - 1:
+        conv_state = xbc_raw[:, S - (W - 1):]
+    else:
+        conv_state = jnp.pad(xbc_raw, ((0, 0), (W - 1 - S, 0), (0, 0)))
+    xbc = jax.nn.silu(
+        causal_conv1d(xbc_raw, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    )
+    xi, Bc, Cc = jnp.split(xbc, [DI, DI + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, S, H, P)
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    y, h_last = _ssd_chunk_scan(xh, dt, A, Bc, Cc, h0, chunk=chunk)
+    y = y + xh * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(B, S, DI)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"].astype(x.dtype))
+    return y @ p["out_proj"].astype(x.dtype), {"conv": conv_state, "ssm": h_last}
+
+
+def mamba2_init_cache(p, batch: int, d_state: int, dtype=jnp.bfloat16):
+    H = p["A_log"].shape[0]
+    DI = p["norm_w"].shape[0]
+    P = DI // H
+    C, W = p["conv_w"].shape
+    return {
+        "conv": jnp.zeros((batch, W - 1, C), dtype),
+        "ssm": jnp.zeros((batch, H, P, d_state), jnp.float32),
+    }
+
+
+def mamba2_decode(p, cache, xt, *, d_state: int, head_dim: int = 64):
+    """One token. xt: (B, d_model)."""
+    DI = p["norm_w"].shape[0]
+    H = p["A_log"].shape[0]
+    P = head_dim
+    N = d_state
+    B = xt.shape[0]
+    zxbcdt = xt @ p["in_proj"].astype(xt.dtype)
+    z, xi, Bc, Cc, dt = jnp.split(zxbcdt, [DI, 2 * DI, 2 * DI + N, 2 * DI + 2 * N], -1)
+    xbc = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv_state, xbc = conv_step(
+        cache["conv"], xbc, p["conv_w"].astype(xt.dtype), p["conv_b"].astype(xt.dtype)
+    )
+    xbc = jax.nn.silu(xbc)
+    xi, Bc, Cc = jnp.split(xbc, [DI, DI + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # (B,H)
+    xh = xi.reshape(B, H, P)
+    dBx = (dt[..., None] * xh.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[
+        :, None, None, :
+    ]
+    h = cache["ssm"] * dA[..., None, None] + dBx  # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc.astype(jnp.float32)).astype(xt.dtype)
+    y = y + xh * p["D"][:, None].astype(xt.dtype)
+    y = y.reshape(B, DI)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"].astype(xt.dtype))
+    return {"conv": conv_state, "ssm": h}, y @ p["out_proj"].astype(xt.dtype)

@@ -1,0 +1,125 @@
+"""Attention-free Mamba-1 LM (falcon-mamba family).
+
+Stack of pre-norm residual Mamba-1 blocks; O(1)-state decode makes every
+serve shape — including ``long_500k`` — run without a KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models import layers as layers_mod
+from repro.models.layers import dense_init, rmsnorm
+from repro.models.transformer import ce_loss, _remat
+
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+
+    def one(k):
+        return {
+            "ln": jnp.ones((cfg.d_model,)),
+            "mamba": ssm.init_mamba1(
+                k, cfg.d_model, d_state=cfg.ssm_state,
+                expand=cfg.ssm_expand, conv=cfg.ssm_conv,
+            ),
+        }
+
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one(ks[i]) for i in range(cfg.n_layers)]
+    )
+    return {
+        "embed": jax.random.normal(ks[-1], (cfg.vocab, cfg.d_model)) * 0.02,
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,)),
+        "lm_head": dense_init(ks[-2], cfg.d_model, cfg.vocab),
+    }
+
+
+def forward(cfg, params, batch):
+    tokens = batch["tokens"]
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+
+    def body(x, lp):
+        x = layers_mod.constrain_batch(x)
+        h = rmsnorm(x, lp["ln"].astype(x.dtype), cfg.rmsnorm_eps)
+        return x + ssm.mamba1(lp["mamba"], h, d_state=cfg.ssm_state, chunk=cfg.ssm_chunk), None
+
+    from repro.models.transformer import _cast_stack
+    x, _ = jax.lax.scan(_remat(cfg, body), x, _cast_stack(cfg, params["layers"]))
+    return rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.rmsnorm_eps)
+
+
+def loss_fn(cfg, params, batch):
+    hidden = forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    targets = jnp.concatenate([tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], 1)
+    mask = jnp.concatenate(
+        [jnp.ones((B, S - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)], 1
+    )
+    return ce_loss(cfg, hidden, params["lm_head"], targets, mask)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """SSM state only — independent of max_len (that's the point)."""
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, di), jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((cfg.n_layers, batch, di, cfg.ssm_state), jnp.float32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(cfg, params, batch, max_len: int):
+    """Prompt scan producing the final state (chunked, not per-token)."""
+    # run the full forward while scanning states layer by layer
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    di = cfg.ssm_expand * cfg.d_model
+
+    def body(x, lp):
+        h = rmsnorm(x, lp["ln"].astype(x.dtype), cfg.rmsnorm_eps)
+        p = lp["mamba"]
+        xz = h @ p["in_proj"].astype(h.dtype)
+        xi, z = jnp.split(xz, 2, axis=-1)
+        xi_conv = ssm.causal_conv1d(xi, p["conv_w"].astype(h.dtype), p["conv_b"].astype(h.dtype))
+        xi_act = jax.nn.silu(xi_conv)
+        h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
+        y, h_last = ssm._mamba1_inner(p, xi_act, h0, d_state=cfg.ssm_state, chunk=cfg.ssm_chunk)
+        y = y * jax.nn.silu(z)
+        x = x + y @ p["out_proj"].astype(h.dtype)
+        conv_state = xi[:, S - (cfg.ssm_conv - 1):, :] if S >= cfg.ssm_conv - 1 else jnp.pad(
+            xi, ((0, 0), (cfg.ssm_conv - 1 - S, 0), (0, 0))
+        )
+        return x, (conv_state, h_last)
+
+    x, (convs, ssms) = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.rmsnorm_eps)
+    logits = (x[:, -1] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    cache = {"conv": convs, "ssm": ssms, "len": jnp.full((B,), S, jnp.int32)}
+    return cache, logits
+
+
+def decode_step(cfg, params, cache, tokens):
+    dtype = jnp.dtype(cfg.dtype)
+    xt = params["embed"].astype(dtype)[tokens[:, 0]]
+
+    def body(xt, ins):
+        lp, conv, st = ins
+        h = rmsnorm(xt, lp["ln"].astype(xt.dtype), cfg.rmsnorm_eps)
+        c, y = ssm.mamba1_decode(
+            lp["mamba"], {"conv": conv, "ssm": st}, h, d_state=cfg.ssm_state
+        )
+        return xt + y, (c["conv"], c["ssm"])
+
+    xt, (convs, ssms) = jax.lax.scan(
+        body, xt, (params["layers"], cache["conv"], cache["ssm"])
+    )
+    xt = rmsnorm(xt, params["final_norm"].astype(xt.dtype), cfg.rmsnorm_eps)
+    logits = (xt @ params["lm_head"].astype(xt.dtype)).astype(jnp.float32)
+    return {"conv": convs, "ssm": ssms, "len": cache["len"] + 1}, logits

@@ -1,0 +1,280 @@
+"""Decoder-only transformer (dense, MoE, and stub-frontend VLM families).
+
+Layer parameters are stacked on a leading ``L`` axis and iterated with
+``lax.scan`` so the 80–95-layer configs lower to compact HLO; the scan
+body is wrapped in ``jax.checkpoint`` per the config's remat policy.
+Cross-entropy is computed in sequence chunks against the (possibly
+vocab-sharded) LM head so logits never materialize at (B, S, V).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import kvcache, layers, moe as moe_lib
+from repro.models.layers import (
+    apply_rope,
+    attention,
+    decode_attention,
+    dense_init,
+    init_attn,
+    qkv_project,
+    rmsnorm,
+    swiglu,
+)
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def init_layer(cfg, key):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,)),
+        "ln2": jnp.ones((cfg.d_model,)),
+        "attn": init_attn(
+            ks[0],
+            cfg.d_model,
+            cfg.n_heads,
+            cfg.n_kv,
+            cfg.head_dim,
+            qkv_bias=cfg.qkv_bias,
+            qk_norm=cfg.qk_norm,
+        ),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_lib.init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts)
+    else:
+        p["mlp"] = {
+            "w1": dense_init(ks[1], cfg.d_model, cfg.d_ff),
+            "w3": dense_init(ks[2], cfg.d_model, cfg.d_ff),
+            "w2": dense_init(ks[3], cfg.d_ff, cfg.d_model),
+        }
+    return p
+
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_layer(cfg, ks[i]) for i in range(cfg.n_layers)],
+    )
+    return {
+        "embed": jax.random.normal(ks[-1], (cfg.vocab, cfg.d_model)) * 0.02,
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,)),
+        "lm_head": dense_init(ks[-2], cfg.d_model, cfg.vocab),
+    }
+
+
+# --------------------------------------------------------------------------
+# Layer body (shared by train / prefill / decode)
+# --------------------------------------------------------------------------
+
+
+def _ffn(cfg, lp, h):
+    if cfg.family == "moe":
+        return moe_lib.moe_ffn(
+            lp["moe"], h, cfg.top_k, cfg.moe_impl, cfg.capacity_factor
+        )
+    m = lp["mlp"]
+    return swiglu(h, m["w1"].astype(h.dtype), m["w3"].astype(h.dtype), m["w2"].astype(h.dtype))
+
+
+def layer_fwd(cfg, lp, x, positions):
+    """Full-sequence layer (train / prefill). Returns (x', (k, v))."""
+    x = layers.constrain_batch(x)
+    h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.rmsnorm_eps)
+    q, k, v = qkv_project(
+        lp["attn"], h, cfg.n_heads, cfg.n_kv, cfg.head_dim, positions,
+        theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+    )
+    o = attention(
+        q, k, v, causal=True, window=cfg.window,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+    )
+    B, S, _, _ = o.shape
+    x = x + o.reshape(B, S, -1) @ lp["attn"]["wo"].astype(x.dtype)
+    h = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.rmsnorm_eps)
+    x = x + _ffn(cfg, lp, h)
+    return x, (k, v)
+
+
+def layer_decode(cfg, lp, x, k_cache, v_cache, length):
+    """One-token layer against a cache. x: (B, 1, d)."""
+    h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.rmsnorm_eps)
+    pos = jnp.broadcast_to(jnp.asarray(length), (x.shape[0],))[:, None]
+    q, k, v = qkv_project(
+        lp["attn"], h, cfg.n_heads, cfg.n_kv, cfg.head_dim, pos,
+        theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+    )
+    k_cache, v_cache = kvcache.cache_write_token(k_cache, v_cache, k, v, length)
+    T = k_cache.shape[1]
+    valid = jnp.minimum(length + 1, T)
+    o = decode_attention(q, k_cache, v_cache, valid, window=cfg.window)
+    B = x.shape[0]
+    x = x + o.reshape(B, 1, -1) @ lp["attn"]["wo"].astype(x.dtype)
+    h = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.rmsnorm_eps)
+    x = x + _ffn(cfg, lp, h)
+    return x, k_cache, v_cache
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        if cfg.remat == "dots"
+        else None
+    )
+
+    def barriered(carry, xs):
+        # The barrier pins the saved-residual slice inside the loop body:
+        # without it XLA LICM hoists `convert(saved_stack)` out of the
+        # backward while-loop, materializing an (L,B,S,d) f32 copy of the
+        # whole residual stack (7 GB/chip on qwen3 — §Perf iteration 3).
+        carry = jax.lax.optimization_barrier(carry)
+        return fn(carry, xs)
+
+    return jax.checkpoint(barriered, policy=policy)
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+
+def _cast_stack(cfg, tree):
+    """Pre-cast layer-stacked f32 params to the compute dtype so FSDP
+    all-gathers inside the layer scan move bf16, not f32 (cfg.bf16_weight_gather)."""
+    if not cfg.bf16_weight_gather:
+        return tree
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda a: a.astype(dt) if a.dtype == jnp.float32 else a, tree
+    )
+
+
+def embed_inputs(cfg, params, batch):
+    """Token embeddings, with stub-frontend embeddings prepended (vlm/audio).
+
+    The modality frontend is a STUB per the brief: ``batch['embeds']``
+    carries precomputed patch/frame embeddings.
+    """
+    tokens = batch["tokens"]
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    n_prefix = 0
+    if "embeds" in batch and batch["embeds"] is not None:
+        pre = batch["embeds"].astype(dtype)
+        x = jnp.concatenate([pre, x], axis=1)
+        n_prefix = pre.shape[1]
+    return x, n_prefix
+
+
+def forward(cfg, params, batch, *, collect_kv: bool = False):
+    """Full-sequence forward to final hidden states.
+
+    Returns (hidden (B,S,d), n_prefix, kv or None)."""
+    x, n_prefix = embed_inputs(cfg, params, batch)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        x, kv = layer_fwd(cfg, lp, x, positions)
+        return x, kv if collect_kv else None
+
+    x, kvs = jax.lax.scan(_remat(cfg, body), x, _cast_stack(cfg, params["layers"]))
+    x = rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.rmsnorm_eps)
+    return x, n_prefix, kvs
+
+
+def ce_loss(cfg, hidden, lm_head, targets, mask):
+    """Chunked cross-entropy; never materializes (B, S, V)."""
+    from repro.models.layers import _fit_chunk
+
+    B, S, d = hidden.shape
+    chunk = _fit_chunk(S, cfg.ce_chunk)
+    nc = S // chunk
+    xs = (
+        hidden.reshape(B, nc, chunk, d).swapaxes(0, 1),
+        targets.reshape(B, nc, chunk).swapaxes(0, 1),
+        mask.reshape(B, nc, chunk).swapaxes(0, 1),
+    )
+
+    @jax.checkpoint  # recompute chunk logits in backward: never stack (B,S,V)
+    def body(carry, ins):
+        xc, tc, mc = ins
+        logits = (xc @ lm_head.astype(xc.dtype)).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(tc, logits.shape[-1], dtype=logits.dtype)
+        tgt = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        nll = (lse - tgt) * mc
+        return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg, params, batch):
+    """Next-token CE over text positions (prefix embeddings unsupervised)."""
+    hidden, n_prefix, _ = forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    B, St = tokens.shape
+    S = hidden.shape[1]
+    # predict tokens[t+1] from hidden at absolute position n_prefix + t
+    targets = jnp.concatenate([tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], 1)
+    mask = jnp.concatenate(
+        [jnp.ones((B, St - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)], 1
+    )
+    if n_prefix:
+        pad_t = jnp.zeros((B, n_prefix), tokens.dtype)
+        pad_m = jnp.zeros((B, n_prefix), jnp.float32)
+        targets = jnp.concatenate([pad_t, targets], 1)
+        mask = jnp.concatenate([pad_m, mask], 1)
+    return ce_loss(cfg, hidden, params["lm_head"], targets, mask)
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return kvcache.init_attn_cache(
+        cfg.n_layers, batch, max_len, cfg.n_kv, cfg.head_dim,
+        window=cfg.decode_window or cfg.window, dtype=jnp.dtype(cfg.dtype),
+    )
+
+
+def prefill(cfg, params, batch, max_len: int):
+    """Encode the prompt; returns (cache, last-token logits)."""
+    hidden, _, kvs = forward(cfg, params, batch, collect_kv=True)
+    cache = init_cache(cfg, batch["tokens"].shape[0], max_len)
+    cache = kvcache.cache_write_prefill(cache, kvs[0], kvs[1])
+    logits = (hidden[:, -1] @ params["lm_head"].astype(hidden.dtype)).astype(
+        jnp.float32
+    )
+    return cache, logits
+
+
+def decode_step(cfg, params, cache, tokens):
+    """One decode step. tokens: (B, 1) -> (cache', logits (B, V))."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    length = cache["len"]
+
+    def body(x, ins):
+        lp, kc, vc = ins
+        x, kc, vc = layer_decode(cfg, lp, x, kc, vc, length)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rmsnorm(x, params["final_norm"].astype(x.dtype), cfg.rmsnorm_eps)
+    logits = (x[:, -1] @ params["lm_head"].astype(x.dtype)).astype(jnp.float32)
+    new_cache = {"k": ks, "v": vs, "len": length + 1}
+    return new_cache, logits

@@ -1,0 +1,99 @@
+"""Static-slot continuous batcher for decode serving.
+
+Maintains ``max_batch`` decode slots; finished or empty slots are refilled
+from the request queue at step boundaries (prefill for one request, then
+its KV rows are copied into the batch cache).  This is the standard
+slot-based continuous batching scheme (vLLM-style, without paging) adapted
+to JAX's static shapes: the decode step always runs at full batch width
+with a per-slot active mask.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model
+from repro.serve.serve_step import make_decode, make_prefill
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class Batcher:
+    def __init__(self, cfg, params, *, max_batch: int, max_len: int, eos: int = -1):
+        self.cfg, self.params = cfg, params
+        self.max_batch, self.max_len, self.eos = max_batch, max_len, eos
+        self.decode = make_decode(cfg)
+        self.queue: list[Request] = []
+        self.slots: list[Request | None] = [None] * max_batch
+        self.cache = model.init_cache(cfg, max_batch, max_len)
+        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.remaining = np.zeros(max_batch, np.int64)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                # single-request prefill at the slot's position
+                batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+                pf = make_prefill(self.cfg, self.max_len)
+                cache1, logits = pf(self.params, batch)
+                tok = int(jnp.argmax(logits[0]))
+                self.cache = _copy_slot(self.cache, cache1, i)
+                self.tokens = self.tokens.at[i, 0].set(tok)
+                req.out.append(tok)
+                self.remaining[i] = req.max_new - 1
+                self.slots[i] = req
+
+    def step(self) -> int:
+        """One decode wave over all active slots; returns #active."""
+        self._fill_slots()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        self.cache, logits = self.decode(self.params, self.cache, self.tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.tokens = next_tok[:, None]
+        for i in active:
+            req = self.slots[i]
+            tok = int(next_tok[i])
+            req.out.append(tok)
+            self.remaining[i] -= 1
+            if self.remaining[i] <= 0 or tok == self.eos:
+                req.done = True
+                self.slots[i] = None
+        return len(active)
+
+    def run(self) -> None:
+        while self.queue or any(s is not None for s in self.slots):
+            self.step()
+
+
+def _copy_slot(batch_cache, single_cache, slot: int):
+    """Copy a single-request cache (batch 1) into batch slot ``slot``.
+
+    Batch dims follow model.cache_specs conventions (dim 1, or dim 2 for
+    stacked hybrid ssm/conv leaves)."""
+
+    def one(path, big, small):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name == "len":
+            return big.at[slot].set(small[0])  # per-slot clock
+        bdim = 2 if big.ndim >= 5 and name in ("conv", "ssm") else 1
+        idx = [slice(None)] * big.ndim
+        idx[bdim] = slice(slot, slot + 1)
+        return big.at[tuple(idx)].set(small)
+
+    return jax.tree_util.tree_map_with_path(one, batch_cache, single_cache)

@@ -1,0 +1,42 @@
+"""Serve-step factories: jit'd prefill and decode functions + greedy
+generation loop.  The dry-run lowers exactly these functions for the
+``prefill_*`` / ``decode_*`` / ``long_*`` shapes.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+
+
+def make_prefill(cfg, max_len: int):
+    @partial(jax.jit, static_argnames=())
+    def prefill_step(params, batch):
+        return model.prefill(cfg, params, batch, max_len)
+
+    return prefill_step
+
+
+def make_decode(cfg):
+    @jax.jit
+    def decode_step(params, cache, tokens):
+        return model.decode_step(cfg, params, cache, tokens)
+
+    return decode_step
+
+
+def greedy_generate(cfg, params, batch, *, steps: int, max_len: int):
+    """Prefill + greedy decode ``steps`` tokens. Returns (B, steps) int32."""
+    prefill_step = make_prefill(cfg, max_len)
+    decode = make_decode(cfg)
+    cache, logits = prefill_step(params, batch)
+    toks = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    for _ in range(steps):
+        toks.append(tok)
+        cache, logits = decode(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    return jnp.concatenate(toks, axis=1)

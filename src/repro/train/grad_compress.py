@@ -1,0 +1,39 @@
+"""Error-feedback top-k gradient compression (distributed-optimization trick).
+
+Before the optimizer sees a gradient leaf, only its top ``k_frac`` entries
+by magnitude survive; the residual is carried into the next step's
+gradient (error feedback), which keeps convergence close to dense SGD
+(Stich et al.).  On a real mesh the sparse values+indices travel through a
+reduce-scatter at ``k_frac`` of the dense bytes — the modeled bytes are
+reported by the trainer; numerically the filter is exact on any backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, err, k_frac: float):
+    """Returns (sparse_grads, new_err, stats)."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * k_frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(g) >= thresh
+        sparse = jnp.where(mask, g, 0.0)
+        return sparse, g - sparse
+
+    flat, tdef = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(err)
+    out = [one(g, e) for g, e in zip(flat, eflat)]
+    sparse = tdef.unflatten([o[0] for o in out])
+    new_err = tdef.unflatten([o[1] for o in out])
+    dense_bytes = sum(g.size * 4 for g in flat)
+    sparse_bytes = sum(max(1, int(g.size * k_frac)) * 8 for g in flat)  # val+idx
+    return sparse, new_err, {"dense_bytes": dense_bytes, "sparse_bytes": sparse_bytes}

@@ -1,0 +1,83 @@
+"""Train-step factory: loss + grad + (optional) microbatch accumulation +
+(optional) error-feedback gradient compression + AdamW.
+
+``make_train_step`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+explicit in/out shardings (the dry-run lowers exactly this function).
+``TrainState`` is a plain dict so checkpointing/resharding stays trivial.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.train import grad_compress, optimizer
+
+
+def init_state(cfg, key, opt_cfg: optimizer.OptConfig, *, compress_frac: float = 0.0):
+    params = model.init_params(cfg, key)
+    state = {"params": params, "opt": optimizer.init(params)}
+    if compress_frac > 0:
+        state["err"] = grad_compress.init(params)
+    return state
+
+
+def make_train_step(cfg, opt_cfg: optimizer.OptConfig, *, microbatches: int = 1,
+                    compress_frac: float = 0.0):
+    def loss_of(params, batch):
+        return model.loss_fn(cfg, params, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            # split the global batch into microbatches and accumulate fp32
+            def resplit(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(resplit, batch)
+
+            def acc_step(carry, mbatch):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_of)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (jnp.float32(0), g0), mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        metrics = {"loss": loss}
+        new_state = dict(state)
+        if compress_frac > 0:
+            grads, new_err, cstats = grad_compress.compress(
+                grads, state["err"], compress_frac
+            )
+            new_state["err"] = new_err
+            metrics["compress_ratio"] = jnp.float32(
+                cstats["sparse_bytes"] / max(cstats["dense_bytes"], 1)
+            )
+        params, opt, ometrics = optimizer.apply(params, state["opt"], grads, opt_cfg)
+        new_state["params"] = params
+        new_state["opt"] = opt
+        metrics.update(ometrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def state_specs(cfg, state, mesh):
+    """PartitionSpecs for the full train state (params + moments + err)."""
+    pspecs = model.partition_specs(cfg, state["params"], mesh)
+    specs = {"params": pspecs, "opt": {"mu": pspecs, "nu": pspecs,
+                                       "step": jax.sharding.PartitionSpec()}}
+    if "err" in state:
+        specs["err"] = pspecs
+    return specs

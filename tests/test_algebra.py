@@ -1,0 +1,86 @@
+"""Unit tests for the SGF query algebra."""
+import pytest
+
+from repro.core.algebra import (
+    And, Atom, BSGF, Not, Or, SGF, all_of, cond_atoms, eval_cond, semijoins_of,
+)
+
+
+def test_atom_basics():
+    a = Atom("R", "x", "y", 4)
+    assert a.arity == 3
+    assert a.vars == ("x", "y")
+    assert a.positions_of("x") == (0,)
+    b = Atom("R", ("x", "y", 4))  # tuple form
+    assert a == b
+
+
+def test_conform_pattern_shares_repeats_and_consts():
+    a = Atom("R", "x", "y", "x", 3)
+    assert a.conform_pattern() == (
+        ("var", 0), ("var", 1), ("var", 0), ("const", 3),
+    )
+    # same pattern == same accepted facts
+    b = Atom("R", "u", "v", "u", 3)
+    assert a.conform_pattern() == b.conform_pattern()
+
+
+def test_eval_cond_python_bools():
+    a, b = Atom("A", "x"), Atom("B", "x")
+    cond = Or(And(a, Not(b)), Not(a))
+    assert eval_cond(cond, {a: True, b: False}) is True
+    assert eval_cond(cond, {a: True, b: True}) is False
+    assert eval_cond(cond, {a: False, b: True}) is True
+    # regression: ~python-bool is integer complement (always truthy)
+    assert eval_cond(Not(a), {a: True}) is False
+
+
+def test_bsgf_guardedness_enforced():
+    with pytest.raises(ValueError):
+        BSGF("Z", ("x",), Atom("R", "x"),
+             And(Atom("S", "x", "z"), Atom("T", "z")))  # share non-guard z
+
+
+def test_bsgf_out_vars_must_be_guarded():
+    with pytest.raises(ValueError):
+        BSGF("Z", ("q",), Atom("R", "x", "y"), None)
+
+
+def test_sgf_rejects_forward_and_self_references():
+    q1 = BSGF("Z1", ("x",), Atom("R", "x", "y"), Atom("Z2", "x"))
+    q2 = BSGF("Z2", ("x",), Atom("R", "x", "y"), None)
+    with pytest.raises(ValueError):
+        SGF([q1, q2])
+    with pytest.raises(ValueError):
+        SGF([BSGF("Z", ("x",), Atom("R", "x"), Atom("Z", "x"))])
+
+
+def test_sgf_rejects_arity_mismatch():
+    q1 = BSGF("Z1", ("x",), Atom("R", "x", "y"), None)
+    q2 = BSGF("Z2", ("x",), Atom("G", "x"), Atom("Z1", "x", "y"))
+    with pytest.raises(ValueError):
+        SGF([q1, q2])
+
+
+def test_semijoins_of_and_join_keys():
+    q = BSGF("Z", ("x", "y"), Atom("R", "x", "y"),
+             And(Atom("S", "y", "z"), Atom("T", "x")))
+    sjs = semijoins_of(q)
+    assert len(sjs) == 2
+    assert sjs[0].key_vars == ("y",)
+    assert sjs[1].key_vars == ("x",)
+    # signature sharing: same conditional shape => same signature
+    q2 = BSGF("Z2", ("x",), Atom("G", "x", "w"),
+              Atom("S", "x", "v"))
+    sj2 = semijoins_of(q2)[0]
+    assert sj2.signature() == sjs[0].signature()  # S(y,z) ~ S(x,v) same pattern
+
+
+def test_dependency_graph():
+    from repro.core.queries import example5_sgf
+
+    sgf = example5_sgf()
+    deps = sgf.dependency_graph()
+    assert deps["Q5"] == {"Q3", "Q4"}
+    assert deps["Q2"] == {"Q1"}
+    assert deps["Q1"] == set()

@@ -1,0 +1,141 @@
+"""Distributed-engine correctness vs. the set-semantics oracle, including
+a hypothesis property test over random BSGF queries and databases."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ref_engine
+from repro.core.algebra import And, Atom, BSGF, Not, Or, semijoins_of
+from repro.core.msj import FusedQuery, run_msj, make_spec
+from repro.core.relation import Relation, db_from_dict
+from repro.engine.comm import SimComm
+
+
+def _setdb(db_np):
+    return {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+
+
+@pytest.mark.parametrize("P", [1, 3, 4])
+@pytest.mark.parametrize("packing", [False, True])
+def test_msj_intro_query(P, packing, rng):
+    """The paper's §1 query: (S(x,y) OR S(y,x)) AND T(x,z)."""
+    db_np = {
+        "R": rng.integers(0, 25, (150, 2)),
+        "S": rng.integers(0, 25, (100, 2)),
+        "T": rng.integers(0, 25, (80, 2)),
+    }
+    q = BSGF("Z", ("x", "y"), Atom("R", "x", "y"),
+             And(Or(Atom("S", "x", "y"), Atom("S", "y", "x")), Atom("T", "x", "z")))
+    db = db_from_dict(db_np, P=P)
+    sjs = semijoins_of(q)
+    outs, stats = run_msj(db, sjs, SimComm(P), packing=packing)
+    setdb = _setdb(db_np)
+    for i, sj in enumerate(sjs):
+        want = ref_engine.eval_semijoin(setdb, q.guard, q.atoms[i], q.out_vars)
+        assert outs[sj.out].to_set() == want
+    assert int(stats["overflow"]) == 0
+
+
+def test_msj_packing_reduces_messages(rng):
+    """Message packing must reduce shuffled bytes on key-skewed data."""
+    skewed = rng.integers(0, 4, (400, 2))  # few distinct keys
+    db_np = {"R": skewed, "S": rng.integers(0, 4, (100, 1))}
+    q = BSGF("Z", ("x", "y"), Atom("R", "x", "y"), Atom("S", "x"))
+    db = db_from_dict(db_np, P=4)
+    sjs = semijoins_of(q)
+    _, s_packed = run_msj(db, sjs, SimComm(4), packing=True)
+    _, s_plain = run_msj(db, sjs, SimComm(4), packing=False)
+    assert int(s_packed["bytes_fwd"]) < int(s_plain["bytes_fwd"])
+    out1, _ = run_msj(db, sjs, SimComm(4), packing=True)
+    out2, _ = run_msj(db, sjs, SimComm(4), packing=False)
+    assert out1[sjs[0].out].to_set() == out2[sjs[0].out].to_set()
+
+
+def test_msj_bloom_prefilter_equivalent(rng):
+    db_np = {"R": rng.integers(0, 50, (300, 2)), "S": rng.integers(0, 50, (60, 1))}
+    q = BSGF("Z", ("x", "y"), Atom("R", "x", "y"), Atom("S", "y"))
+    db = db_from_dict(db_np, P=4)
+    sjs = semijoins_of(q)
+    out0, s0 = run_msj(db, sjs, SimComm(4), bloom_bits=0)
+    out1, s1 = run_msj(db, sjs, SimComm(4), bloom_bits=4096)
+    assert out0[sjs[0].out].to_set() == out1[sjs[0].out].to_set()
+    # the prefilter can only reduce forward traffic
+    assert int(s1["bytes_fwd"]) <= int(s0["bytes_fwd"])
+
+
+def test_overflow_detected_exactly(rng):
+    """Undersized shuffle capacity must be *detected*, never silent."""
+    db_np = {"R": rng.integers(0, 10, (64, 2)), "S": rng.integers(0, 10, (64, 1))}
+    q = BSGF("Z", ("x", "y"), Atom("R", "x", "y"), Atom("S", "x"))
+    db = db_from_dict(db_np, P=2)
+    sjs = semijoins_of(q)
+    _, stats = run_msj(db, sjs, SimComm(2), forward_cap=4)
+    assert int(stats["overflow"]) > 0
+
+
+def test_constants_and_repeated_vars(rng):
+    db_np = {
+        "R": np.array([[1, 1, 7], [1, 2, 7], [3, 3, 7], [3, 3, 8]], np.int32),
+        "S": np.array([[1], [3]], np.int32),
+    }
+    # guard R(x,x,7): repeated var + constant
+    q = BSGF("Z", ("x",), Atom("R", "x", "x", 7), Atom("S", "x"))
+    db = db_from_dict(db_np, P=2)
+    sjs = semijoins_of(q)
+    outs, _ = run_msj(db, sjs, SimComm(2))
+    assert outs[sjs[0].out].to_set() == {(1,), (3,)}
+
+
+# ---------------------------------------------------------------------------
+# Property test: random conjunctive/disjunctive queries on random data
+# ---------------------------------------------------------------------------
+
+_rel_names = ["S", "T", "U"]
+
+
+@st.composite
+def _random_cond(draw, depth=0):
+    if depth >= 2 or draw(st.booleans()):
+        rel = draw(st.sampled_from(_rel_names))
+        var = draw(st.sampled_from(["x", "y"]))
+        atom = Atom(rel, var)
+        return draw(st.booleans()) and atom or Not(atom)
+    op = draw(st.sampled_from([And, Or]))
+    return op(draw(_random_cond(depth + 1)), draw(_random_cond(depth + 1)))
+
+
+@given(
+    cond=_random_cond(),
+    seed=st.integers(0, 2**16),
+    P=st.sampled_from([1, 2, 4]),
+)
+@settings(max_examples=25, deadline=None)
+def test_fused_bsgf_matches_oracle(cond, seed, P):
+    rng = np.random.default_rng(seed)
+    db_np = {
+        "R": rng.integers(0, 12, (40, 2)),
+        "S": rng.integers(0, 12, (12, 1)),
+        "T": rng.integers(0, 12, (12, 1)),
+        "U": rng.integers(0, 12, (12, 1)),
+    }
+    q = BSGF("Z", ("x", "y"), Atom("R", "x", "y"), cond)
+    setdb = _setdb(db_np)
+    want = ref_engine.eval_bsgf(setdb, q)
+    db = db_from_dict(db_np, P=P)
+    sjs = semijoins_of(q)
+    fq = FusedQuery(
+        name="Z", cond=q.cond,
+        atom_to_sj={a: i for i, a in enumerate(q.atoms)},
+        guard_rel="R", guard_pattern=q.guard.conform_pattern(),
+        out_pos=(0, 1),
+    )
+    outs, _ = run_msj(db, sjs, SimComm(P), fused=[fq])
+    assert outs["Z"].to_set() == want
+
+
+def test_relation_compaction(rng):
+    rel = Relation.from_numpy("R", rng.integers(0, 9, (100, 2)), P=4)
+    masked = rel.with_mask(rel.valid & (rel.data[..., 0] < 3))
+    comp = masked.compacted()
+    assert comp.to_set() == masked.to_set()
+    assert comp.cap <= masked.cap

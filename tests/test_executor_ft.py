@@ -1,0 +1,131 @@
+"""Executor + fault-tolerance tests: capacity retry, fault injection,
+straggler re-dispatch, checkpoint restart equivalence, elastic rescale."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import queries as Q, ref_engine
+from repro.core.costmodel import HADOOP, stats_of_db
+from repro.core.executor import Executor, ExecutorConfig, execute_plan
+from repro.core.planner import plan_greedy, plan_par
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+from repro.ft import elastic, supervisor
+
+
+def _want(qs, db_np):
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    out = {}
+    for q in qs:
+        out[q.name] = ref_engine.eval_bsgf(setdb, q)
+        setdb[q.name] = out[q.name]
+    return out
+
+
+def test_supervisor_retries_injected_faults(rng):
+    qs = Q.make_queries("A1")
+    db_np = Q.gen_db(qs, n_guard=200, n_cond=200)
+    db = db_from_dict(db_np, P=2)
+    plan = plan_par(qs)
+    ex = Executor(db, SimComm(2))
+    sup = supervisor.Supervisor(ex, supervisor.FTConfig(fault_rate=0.4, seed=1))
+    env, report = sup.execute(plan)
+    want = _want(qs, db_np)
+    assert env["Z"].to_set() == want["Z"]
+    assert sup.stats.faults_injected > 0
+    assert sup.stats.retries >= sup.stats.faults_injected
+
+
+def test_supervisor_gives_up_after_max_restarts():
+    qs = Q.make_queries("A3")
+    db = db_from_dict(Q.gen_db(qs, n_guard=64, n_cond=64), P=2)
+    ex = Executor(db, SimComm(2))
+    sup = supervisor.Supervisor(
+        ex, supervisor.FTConfig(fault_rate=1.0, max_restarts=2, seed=0)
+    )
+    with pytest.raises(supervisor.SimulatedFault):
+        sup.execute(plan_par(qs))
+
+
+def test_capacity_fault_retry_path(rng):
+    """Undersized buffers trigger CapacityFault; executor retry fixes it."""
+    qs = Q.make_queries("A3")
+    db_np = Q.gen_db(qs, n_guard=256, n_cond=256)
+    db = db_from_dict(db_np, P=4)
+    cfgx = ExecutorConfig(cap_slack=0.01, max_retries=3)
+    env, report = execute_plan(db, plan_par(qs), SimComm(4), cfgx)
+    want = _want(qs, db_np)
+    assert env["Z"].to_set() == want["Z"]
+    assert any(r.attempts > 1 for r in report.records)
+
+
+def test_elastic_repartition_preserves_results(rng):
+    qs = Q.make_queries("A1")
+    db_np = Q.gen_db(qs, n_guard=200, n_cond=200)
+    want = _want(qs, db_np)
+    db4 = db_from_dict(db_np, P=4)
+    env4, _ = execute_plan(db4, plan_par(qs), SimComm(4))
+    # scale down to P=2 (node loss), rerun
+    db2 = elastic.repartition_db(db4, 2)
+    env2, _ = execute_plan(db2, plan_par(qs), SimComm(2))
+    assert env4["Z"].to_set() == env2["Z"].to_set() == want["Z"]
+
+
+def test_train_crash_restart_bitexact():
+    from repro.configs import get_config
+    from repro.data import synthetic
+    from repro.train import optimizer, train_step as ts
+
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    opt_cfg = optimizer.OptConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    step_fn = jax.jit(ts.make_train_step(cfg, opt_cfg))
+    bf = synthetic.make_batch_fn(cfg, 2, 32)
+    with tempfile.TemporaryDirectory() as d:
+        st = ts.init_state(cfg, jax.random.PRNGKey(0), opt_cfg)
+        with pytest.raises(supervisor.SimulatedFault):
+            supervisor.run_train_loop(st, step_fn, bf, steps=8, ckpt_dir=d,
+                                      ckpt_every=2, crash_at=5)
+        st2 = ts.init_state(cfg, jax.random.PRNGKey(0), opt_cfg)
+        st2, _ = supervisor.run_train_loop(st2, step_fn, bf, steps=8, ckpt_dir=d,
+                                           ckpt_every=2)
+        st3 = ts.init_state(cfg, jax.random.PRNGKey(0), opt_cfg)
+        for i in range(8):
+            st3, _ = step_fn(st3, bf(i))
+        for a, b in zip(jax.tree.leaves(st2["params"]), jax.tree.leaves(st3["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_checkpoint_reshard_on_load():
+    from repro.ckpt import checkpoint
+    from repro.configs import get_config
+    from repro.models import model
+
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with tempfile.TemporaryDirectory() as d:
+        checkpoint.save(d, 1, params, mesh=mesh)
+        assert checkpoint.latest_step(d) == 1
+        specs = model.partition_specs(cfg, params, mesh)
+        loaded = checkpoint.load(d, 1, params, mesh=mesh, specs=specs)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(loaded)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A crash mid-write must not corrupt the latest complete checkpoint."""
+    import os
+
+    from repro.ckpt import checkpoint
+
+    tree = {"a": jnp.ones((4,)), "b": {"c": jnp.zeros((2, 2))}}
+    checkpoint.save(str(tmp_path), 1, tree)
+    # simulate a torn write of step 2
+    os.makedirs(tmp_path / "step_00000002.tmp", exist_ok=True)
+    (tmp_path / "step_00000002.tmp" / "a.npy").write_bytes(b"garbage")
+    assert checkpoint.latest_step(str(tmp_path)) == 1
+    loaded = checkpoint.load(str(tmp_path), 1, tree)
+    np.testing.assert_array_equal(np.asarray(loaded["a"]), np.ones((4,)))

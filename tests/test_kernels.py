@@ -1,0 +1,107 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure oracles,
+run in interpret mode on CPU (the TPU lowering path is identical)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bloom import ops as bops, ref as bref
+from repro.kernels.msj_probe import ops as pops, ref as pref
+
+
+@pytest.mark.parametrize("nb,np_,kw", [
+    (1, 1, 1), (17, 33, 1), (256, 256, 2), (300, 500, 3), (1000, 200, 6),
+])
+def test_msj_probe_shapes(nb, np_, kw, rng):
+    bs = jnp.asarray(rng.integers(0, 3, nb), jnp.int32)
+    bk = jnp.asarray(rng.integers(0, 6, (nb, kw)), jnp.int32)
+    bo = jnp.asarray(rng.random(nb) < 0.7)
+    ps = jnp.asarray(rng.integers(0, 3, np_), jnp.int32)
+    pk = jnp.asarray(rng.integers(0, 6, (np_, kw)), jnp.int32)
+    po = jnp.asarray(rng.random(np_) < 0.7)
+    got = pops.probe(bs, bk, bo, ps, pk, po)
+    want = pref.probe(bs, bk, bo, ps, pk, po)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if nb * np_ > 100:  # dense key space: collisions must occur
+        assert int(got.sum()) > 0
+
+
+@pytest.mark.parametrize("tp,tb", [(16, 16), (64, 256), (256, 32)])
+def test_msj_probe_tile_sizes(tp, tb, rng):
+    bs = jnp.asarray(rng.integers(0, 2, 100), jnp.int32)
+    bk = jnp.asarray(rng.integers(0, 4, (100, 2)), jnp.int32)
+    bo = jnp.ones(100, bool)
+    ps = jnp.asarray(rng.integers(0, 2, 150), jnp.int32)
+    pk = jnp.asarray(rng.integers(0, 4, (150, 2)), jnp.int32)
+    po = jnp.ones(150, bool)
+    got = pops.probe(bs, bk, bo, ps, pk, po, tp=tp, tb=tb)
+    want = pref.probe(bs, bk, bo, ps, pk, po)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_msj_probe_negative_values(rng):
+    """int32 keys may be negative (hashes of values)."""
+    bk = jnp.asarray(rng.integers(-100, 100, (64, 2)), jnp.int32)
+    pk = jnp.asarray(rng.integers(-100, 100, (64, 2)), jnp.int32)
+    z = jnp.zeros(64, jnp.int32)
+    o = jnp.ones(64, bool)
+    got = pops.probe(z, bk, o, z, pk, o)
+    want = pref.probe(z, bk, o, z, pk, o)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_probe_as_engine_dropin(rng):
+    """The Pallas probe is a drop-in probe_fn for run_msj."""
+    from repro.core import ref_engine
+    from repro.core.algebra import Atom, BSGF, semijoins_of
+    from repro.core.msj import run_msj
+    from repro.core.relation import db_from_dict
+    from repro.engine.comm import SimComm
+
+    db_np = {"R": rng.integers(0, 20, (100, 2)), "S": rng.integers(0, 20, (50, 2))}
+    q = BSGF("Z", ("x", "y"), Atom("R", "x", "y"), Atom("S", "y", "z"))
+    db = db_from_dict(db_np, P=2)
+    sjs = semijoins_of(q)
+    outs, _ = run_msj(db, sjs, SimComm(2), probe_fn=pops.probe)
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    want = ref_engine.eval_semijoin(setdb, q.guard, q.atoms[0], q.out_vars)
+    assert outs[sjs[0].out].to_set() == want
+
+
+@pytest.mark.parametrize("bits", [128, 1024, 4096])
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_bloom_build_probe(bits, impl, rng):
+    n = 200
+    keys = jnp.asarray(rng.integers(0, 40, (n, 2)), jnp.int32)
+    sigs = jnp.asarray(rng.integers(0, 4, n), jnp.int32)
+    mask = jnp.asarray(rng.random(n) < 0.6)
+    filt = bops.build(keys, sigs, mask, bits, impl=impl)
+    want_f = bref.build(keys, sigs, mask, bits)
+    np.testing.assert_array_equal(np.asarray(filt), want_f)
+    hits = bops.probe(filt, keys, sigs, bits, impl=impl)
+    want_h = bref.probe(want_f, keys, sigs, bits)
+    np.testing.assert_array_equal(np.asarray(hits), want_h)
+    # no false negatives ever
+    assert bool(np.asarray(hits)[np.asarray(mask)].all())
+
+
+@given(seed=st.integers(0, 10_000), bits=st.sampled_from([256, 512]))
+@settings(max_examples=15, deadline=None)
+def test_bloom_no_false_negatives_property(seed, bits):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 80))
+    keys = jnp.asarray(rng.integers(0, 1000, (n, 3)), jnp.int32)
+    sigs = jnp.zeros(n, jnp.int32)
+    mask = jnp.ones(n, bool)
+    filt = bops.build(keys, sigs, mask, bits)
+    hits = bops.probe(filt, keys, sigs, bits)
+    assert bool(hits.all())
+
+
+def test_bloom_filters_some_nonmembers(rng):
+    bits = 8192
+    members = jnp.asarray(rng.integers(0, 100, (50, 1)), jnp.int32)
+    filt = bops.build(members, jnp.zeros(50, jnp.int32), jnp.ones(50, bool), bits)
+    others = jnp.asarray(rng.integers(1000, 2000, (200, 1)), jnp.int32)
+    hits = bops.probe(filt, others, jnp.zeros(200, jnp.int32), bits)
+    assert int(hits.sum()) < 40  # false-positive rate well under 20%

@@ -1,0 +1,175 @@
+"""Planner + cost-model tests: strategy equivalence against the oracle,
+greedy-vs-brute-force optimality gaps, topological-sort validity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import queries as Q, ref_engine
+from repro.core.algebra import Atom, BSGF, SGF
+from repro.core.costmodel import (
+    HADOOP, TPU_V5E, RelStats, Stats, cost_map, map_phase_cost, msj_job_cost,
+    stats_of_db, sample_stats,
+)
+from repro.core.executor import execute_plan
+from repro.core.planner import (
+    brute_force_group, default_costfn, gain, greedy_group, greedy_sgf,
+    levels_of, plan_greedy, plan_one_round, plan_par, plan_seq, plan_sgf,
+    plan_cost, pooled_semijoins,
+)
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+
+
+def _oracle(qs, db_np):
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    env, out = dict(setdb), {}
+    for q in qs:
+        res = ref_engine.eval_bsgf(env, q)
+        env[q.name] = res
+        out[q.name] = res
+    return out
+
+
+@pytest.mark.parametrize("qid", ["A1", "A2", "A3", "A4", "A5", "B2"])
+def test_all_strategies_agree_with_oracle(qid):
+    qs = Q.make_queries(qid)
+    db_np = Q.gen_db(qs, n_guard=400, n_cond=400, sel=0.5)
+    want = _oracle(qs, db_np)
+    db = db_from_dict(db_np, P=4)
+    stats = stats_of_db(db)
+    plans = {
+        "par": plan_par(qs),
+        "greedy": plan_greedy(qs, stats, HADOOP),
+        "one_round": plan_one_round(qs),
+    }
+    if len(qs) == 1:
+        plans["seq"] = plan_seq(qs[0])
+    for name, plan in plans.items():
+        env, _ = execute_plan(db, plan, SimComm(4))
+        for q in qs:
+            assert env[q.name].to_set() == want[q.name], (qid, name, q.name)
+
+
+@pytest.mark.parametrize("qid", ["C1", "C3", "C4"])
+@pytest.mark.parametrize("strategy", ["sequnit", "parunit", "greedy", "one_round"])
+def test_sgf_strategies_agree_with_oracle(qid, strategy):
+    sgf = Q.make_sgf(qid)
+    db_np = Q.gen_db(sgf, n_guard=300, n_cond=300, sel=0.6)
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    want = ref_engine.eval_sgf(setdb, sgf)
+    db = db_from_dict(db_np, P=2)
+    plan = plan_sgf(sgf, strategy, stats_of_db(db), HADOOP)
+    env, _ = execute_plan(db, plan, SimComm(2))
+    for q in sgf:
+        assert env[q.name].to_set() == want[q.name], (qid, strategy, q.name)
+
+
+def test_one_round_faithful_rejects_mixed_keys():
+    q = Q.make_queries("A1")[0]  # keys x,y,z,w differ
+    with pytest.raises(ValueError):
+        plan_one_round([q], faithful=True)
+    q3 = Q.make_queries("A3")[0]  # shared key x
+    plan_one_round([q3], faithful=True)  # fine
+
+
+def test_greedy_never_worse_than_trivial_partitions():
+    """GREEDY-BSGF cost ≤ both all-singletons and the single-group plan."""
+    qs = Q.make_queries("A2")
+    db = db_from_dict(Q.gen_db(qs, n_guard=512, n_cond=512), P=4)
+    sjs, _ = pooled_semijoins(qs)
+    costfn = default_costfn(stats_of_db(db), HADOOP)
+    groups = greedy_group(sjs, costfn)
+    c_greedy = sum(costfn(g) for g in groups)
+    c_singles = sum(costfn([s]) for s in sjs)
+    c_one = costfn(sjs)
+    assert c_greedy <= c_singles + 1e-9
+    assert c_greedy <= c_one + 1e-9
+
+
+def test_greedy_close_to_brute_force():
+    qs = Q.make_queries("A1")
+    db = db_from_dict(Q.gen_db(qs, n_guard=256, n_cond=256), P=4)
+    sjs, _ = pooled_semijoins(qs)
+    costfn = default_costfn(stats_of_db(db), HADOOP)
+    groups = greedy_group(sjs, costfn)
+    _, opt_cost = brute_force_group(sjs, costfn)
+    c_greedy = sum(costfn(g) for g in groups)
+    assert c_greedy <= 1.2 * opt_cost  # greedy within 20% on the A-family
+
+
+def test_greedy_sgf_produces_valid_topological_sort():
+    sgf = Q.example5_sgf()
+    strata = greedy_sgf(sgf)
+    pos = {q.name: i for i, s in enumerate(strata) for q in s}
+    deps = sgf.dependency_graph()
+    for name, ds in deps.items():
+        for d in ds:
+            assert pos[d] < pos[name], (d, name, strata)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_greedy_sgf_valid_on_random_dags(seed):
+    """Property: GREEDY-SGF output is always a multiway topological sort."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 7))
+    qs = []
+    for i in range(n):
+        # guard on an earlier output sometimes
+        if i and rng.random() < 0.5:
+            g = Atom(f"Z{int(rng.integers(0, i))}", "x", "y")
+        else:
+            g = Atom(f"G{i}", "x", "y")
+        qs.append(BSGF(f"Z{i}", ("x", "y"), g, Atom(f"S{int(rng.integers(0,3))}", "x")))
+    sgf = SGF(qs)
+    strata = greedy_sgf(sgf)
+    names = [q.name for s in strata for q in s]
+    assert sorted(names) == sorted(q.name for q in sgf)  # partition
+    pos = {q.name: i for i, s in enumerate(strata) for q in s}
+    for name, ds in sgf.dependency_graph().items():
+        for d in ds:
+            assert pos[d] < pos[name]
+
+
+def test_cost_model_gumbo_vs_wang_divergence():
+    """Eq.(2) vs Eq.(3): per-partition merge costing must separate a
+    fan-out guard from filtered conditionals (the §5.2 ablation)."""
+    # one input makes lots of map output, three make none
+    parts = [(1000.0, 16000.0, 1e6), (1000.0, 0.0, 0.0), (1000.0, 0.0, 0.0),
+             (1000.0, 0.0, 0.0)]
+    gumbo = map_phase_cost(parts, HADOOP, model="gumbo")
+    wang = map_phase_cost(parts, HADOOP, model="wang")
+    # wang averages the merge over all partitions and underestimates
+    assert gumbo > wang
+
+
+def test_plan_cost_net_le_total():
+    qs = Q.make_queries("A5")
+    db = db_from_dict(Q.gen_db(qs, n_guard=256, n_cond=256), P=4)
+    stats = stats_of_db(db)
+    for plan in (plan_par(qs), plan_greedy(qs, stats, HADOOP)):
+        c = plan_cost(plan, stats, HADOOP)
+        assert c["net"] <= c["total"] + 1e-9
+
+
+def test_sample_stats_estimates_selectivity():
+    qs = Q.make_queries("A1")
+    for sel in (0.2, 0.8):
+        db_np = Q.gen_db(qs, n_guard=2048, n_cond=2048, sel=sel, seed=3)
+        db = db_from_dict(db_np, P=1)
+        sjs, _ = pooled_semijoins(qs)
+        st_ = sample_stats(db, sjs)
+        ests = [st_.sel[(s.guard.rel, s.cond_atom.rel)] for s in sjs]
+        for e in ests:
+            assert abs(e - sel) < 0.15, (sel, ests)
+
+
+def test_tpu_constants_preserve_grouping_preference():
+    """The TPU re-pricing keeps the core trade-off: grouping same-guard
+    semi-joins into one job beats separate jobs (scan sharing)."""
+    qs = Q.make_queries("A2")
+    db = db_from_dict(Q.gen_db(qs, n_guard=512, n_cond=512), P=4)
+    sjs, _ = pooled_semijoins(qs)
+    for consts in (HADOOP, TPU_V5E):
+        costfn = default_costfn(stats_of_db(db), consts)
+        assert costfn(sjs) < sum(costfn([s]) for s in sjs)
