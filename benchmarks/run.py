@@ -27,7 +27,14 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true", help="small data sizes")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names to run")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the msj roofline results as JSON (e.g. "
+                         "BENCH_msj.json) for machine-readable perf tracking")
     args = ap.parse_args(argv)
+    if args.json:
+        if args.only and "msj" not in args.only:
+            ap.error("--json records the msj roofline; drop --only or include 'msj'")
+        open(args.json, "w").close()  # fail fast, not after the benchmarks
     n = 1024 if args.quick else 4096
 
     suites = {
@@ -57,10 +64,27 @@ def main(argv=None) -> None:
               f"wang={acc['wang']:.3f}")
 
     if not args.only or "msj" in (args.only or ""):
+        cols = ("variant", "bytes_shuffled", "input_rows", "jobs",
+                "net_s", "total_s", "forward_cap")
         print("# msj_roofline (paper-technique perf ladder):")
-        print("# variant,bytes_shuffled,input_rows,jobs,net_s,total_s")
-        for row in msj_roofline.run(n_guard=n * 2):
-            print("# " + ",".join(str(x) for x in row), flush=True)
+        print("# " + ",".join(cols))
+        rows = msj_roofline.run(n_guard=n * 2)
+        for r in rows:
+            print("# " + ",".join(str(r[k]) for k in cols), flush=True)
+        kernel_rows = msj_roofline.kernel_bench(n=1024 if args.quick else 4096)
+        for r in kernel_rows:
+            print(f"# probe-kernel {r['backend']}: {r['ms']} ms "
+                  f"(n={r['n']}, kw={r['kw']})", flush=True)
+        if args.json:
+            import json
+
+            with open(args.json, "w") as f:
+                json.dump(
+                    {"n_guard": n * 2, "msj_roofline": rows,
+                     "probe_kernel": kernel_rows},
+                    f, indent=2,
+                )
+            print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

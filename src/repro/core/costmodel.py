@@ -233,6 +233,7 @@ def msj_job_cost(
     *,
     model: str = "gumbo",
     packing: bool = True,
+    fingerprint: bool = True,
 ) -> float:
     """Cost of evaluating the set S in ONE MSJ job (Eq. 5, generalized).
 
@@ -240,11 +241,16 @@ def msj_job_cost(
     they guard; distinct Assert *signatures* are emitted once (conditional
     name sharing).  With ``packing``, messages carry (key, tuple-id) rather
     than the tuple (Gumbo optimizations (1)+(2)); the modeled Req/Assert
-    record width is the join-key width + routing metadata.
+    record width follows the engine's message layout: the fingerprint
+    layout (DESIGN.md §5 — kindtag + fp + wide keys + packed srcrow) by
+    default, or the seed ``key_width + 4`` layout with
+    ``fingerprint=False``.  The count phase of the two-phase shuffle ships
+    one int32 per shard pair and is priced into the per-job overhead
+    ``cost_h`` (it is orders of magnitude below the data exchange).
     """
     from repro.core.msj import make_spec
 
-    spec = make_spec(list(sjs))
+    spec = make_spec(list(sjs), fingerprint=fingerprint)
     msg_mb_per_row = spec.msg_width * BYTES_PER_CELL / MB
 
     parts: list[tuple[float, float, float]] = []

@@ -123,6 +123,40 @@ class ExecutorConfig:
     compact: bool = True
     cap_slack: float = 1.0  # 1.0 = no-overflow bound; <1 risks CapacityFault
     max_retries: int = 3
+    #: reducer probe backend: "pallas" = the bucketed msj_probe kernel
+    #: (interpret auto-detection per ops.auto_interpret), "sorted" = jnp
+    #: sort-merge, "dense" = the quadratic oracle.  The default "auto"
+    #: resolves to the bucketed kernel on TPU and to "sorted" elsewhere:
+    #: the Pallas interpreter inside the vmapped SimComm hot loop executes
+    #: both arms of the tile-skip predicate and cannot win on CPU.
+    probe_backend: str = "auto"
+    #: two-phase count-sized forward shuffle (DESIGN.md §6); False restores
+    #: the worst-case default_forward_cap bound.
+    count_sized: bool = True
+    #: (signature, key) fingerprint message layout (DESIGN.md §5); False
+    #: restores the seed [kind, tag, key*KW, src, row] layout end to end.
+    fingerprint: bool = True
+
+
+def resolve_probe_backend(name: str) -> Callable:
+    """Map an ExecutorConfig.probe_backend name to a probe_fn callable."""
+    from repro.core import msj
+
+    if name == "auto":
+        try:
+            on_tpu = jax.default_backend() == "tpu"
+        except RuntimeError:
+            on_tpu = False
+        name = "pallas" if on_tpu else "sorted"
+    if name == "sorted":
+        return msj.probe_sorted
+    if name == "dense":
+        return msj.probe_dense
+    if name == "pallas":
+        from repro.kernels.msj_probe import ops as probe_ops
+
+        return probe_ops.probe_bucketed
+    raise ValueError(f"unknown probe backend {name!r} (auto|sorted|pallas|dense)")
 
 
 class Executor:
@@ -137,13 +171,6 @@ class Executor:
     def run_job(self, job: Job, *, cap_override: int | None = None) -> tuple[dict, dict]:
         if isinstance(job, MSJJob):
             fused = tuple(_fused_query_of(q, job) for q in job.fused)
-            cap = cap_override
-            if cap is None and self.config.cap_slack < 1.0:
-                from repro.core.msj import default_forward_cap, make_spec
-
-                cap = default_forward_cap(
-                    make_spec(list(job.sjs)), self.env, self.comm.P, self.config.cap_slack
-                )
             outs, stats = run_msj(
                 self.env,
                 list(job.sjs),
@@ -151,7 +178,11 @@ class Executor:
                 packing=self.config.packing,
                 fused=fused,
                 bloom_bits=self.config.bloom_bits,
-                forward_cap=cap,
+                forward_cap=cap_override,
+                probe_fn=resolve_probe_backend(self.config.probe_backend),
+                fingerprint=self.config.fingerprint,
+                count_sized=self.config.count_sized,
+                cap_slack=self.config.cap_slack,
             )
             stats["input_rows"] = sum(
                 int(self.env[r].count()) for r in _msj_input_rels(job, self.env)
@@ -187,11 +218,17 @@ class Executor:
                 return outs, stats, attempts
             if attempts > self.config.max_retries:
                 raise CapacityFault(job, ovf)
-            # exact overflow count known: double the largest bucket bound
-            cap = (cap or 1) * 2 if cap else None
-            self.config = ExecutorConfig(
-                **{**self.config.__dict__, "cap_slack": 1.0}
-            )
+            # first retry drops any deliberate undersizing (cap_slack < 1)
+            # and re-sizes from counts / the worst-case bound; if that still
+            # overflows (stale counts), double the observed capacity
+            if self.config.cap_slack < 1.0:
+                cap = None
+                self.config = ExecutorConfig(
+                    **{**self.config.__dict__, "cap_slack": 1.0}
+                )
+            else:
+                used = int(stats.get("forward_cap", 0))
+                cap = max(used, 1) * 2
 
     # -- whole plans ---------------------------------------------------------
     def execute(self, plan: Plan, *, on_job: Callable | None = None) -> tuple[dict, Report]:

@@ -9,10 +9,14 @@ One MSJ *job* evaluates a set of semi-join equations
   emit Assert messages. Assert messages are tagged by *signature* so
   semi-joins whose conditional atoms accept the same facts with the same key
   projection share Asserts (the paper's "conditional name sharing").
-* **shuffle**: radix partition by ``hash(signature, key) % P`` +
-  ``all_to_all`` (ICI), replacing Hadoop's sort-based shuffle.
-* **probe stage** (the reducer): Req keys probe the Assert build side
-  (sort-merge in jnp, or the Pallas ``msj_probe`` kernel on TPU).
+* **shuffle**: radix partition by a per-row (signature, key) *fingerprint* +
+  ``all_to_all`` (ICI), replacing Hadoop's sort-based shuffle.  The forward
+  buffer is **count-sized**: a cheap first phase exchanges per-destination
+  counts and the data exchange is sized to the observed max bucket instead
+  of the no-assumption worst case (DESIGN.md §6).
+* **probe stage** (the reducer): Req keys probe the Assert build side.
+  Backends: the bucketed Pallas ``msj_probe`` kernel (default via the
+  executor), sort-merge in jnp, or the dense oracle.
 * **route-back**: hit bits return to the origin shard via a second
   ``all_to_all`` and are scattered into a guard-aligned bitmap.
 
@@ -22,24 +26,31 @@ X_i then run EVAL) and a *generalized 1-ROUND* plan (apply the Boolean
 formula locally — beyond-paper, see DESIGN.md §7).
 
 **Message packing** (paper §5.1 optimization (1)): Req/Assert messages are
-deduplicated per (signature, key) with an exact lexicographic sort; the
-group leader is shuffled and hit bits are re-expanded through the leader
-index on the way back. Optimization (2) (tuple ids instead of tuples) is
-inherent: Req messages carry ``(origin_shard, row)`` only.
+deduplicated per (signature, key); the group leader is shuffled and hit
+bits are re-expanded through the leader index on the way back.
+Optimization (2) (tuple ids instead of tuples) is inherent: Req messages
+carry ``(origin_shard, row)`` only.
+
+**Fingerprints** (DESIGN.md §5): each message's (signature, key) identity
+is packed once at map time into a single int32 column — the key itself
+when ``key_width == 1`` (exact, lex-preserving), a salted hash otherwise —
+and every downstream sort/dedup/route/probe operates on that one column
+instead of ``key_width + 2``.  Matching stays exact on the key columns, so
+fingerprint collisions never affect correctness.
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.algebra import Atom, Cond, SemiJoin, eval_cond
+from repro.core.algebra import Cond, SemiJoin, eval_cond
 from repro.core.relation import Relation
 from repro.engine import hashing, shuffle
-from repro.engine.comm import Comm, SimComm, run_pipeline
+from repro.engine.comm import Comm, run_pipeline
 
 KIND_ASSERT = 0
 KIND_REQ = 1
@@ -72,15 +83,27 @@ class MSJSpec:
     sj_info: tuple[_SjInfo, ...]
     sigs: tuple[_SigInfo, ...]
     key_width: int  # KW: max join-key arity over signatures
+    fingerprint: bool = True
 
     @property
     def n_sj(self) -> int:
         return len(self.sjs)
 
     @property
+    def fp_exact(self) -> bool:
+        """Single key column: the fingerprint is the key (no collisions)."""
+        return self.key_width == 1
+
+    @property
     def msg_width(self) -> int:
-        # [kind, tag, key*KW, src_shard, src_row]
-        return self.key_width + 4
+        if not self.fingerprint:
+            # legacy layout: [kind, tag, key*KW, src_shard, src_row]
+            return self.key_width + 4
+        # fingerprint layout (DESIGN.md §5): [kindtag, fp, keys (wide only),
+        # srcrow].  The modeled width assumes the packed srcrow column; the
+        # runtime falls back to a split (src, row) pair (+1) only when
+        # P * guard_cap would overflow int32.
+        return 3 + (0 if self.fp_exact else self.key_width)
 
     @property
     def guard_rels(self) -> tuple[str, ...]:
@@ -91,7 +114,7 @@ class MSJSpec:
         return tuple(seen)
 
 
-def make_spec(sjs: Sequence[SemiJoin]) -> MSJSpec:
+def make_spec(sjs: Sequence[SemiJoin], *, fingerprint: bool = True) -> MSJSpec:
     sigs: list[tuple] = []
     sig_infos: list[_SigInfo] = []
     sj_infos: list[_SjInfo] = []
@@ -127,7 +150,49 @@ def make_spec(sjs: Sequence[SemiJoin]) -> MSJSpec:
         sj_info=tuple(sj_infos),
         sigs=tuple(sig_infos),
         key_width=max(kw, 1),
+        fingerprint=fingerprint,
     )
+
+
+@dataclass(frozen=True)
+class MsgLayout:
+    """Concrete forward-message column layout for one job (DESIGN.md §5).
+
+    fingerprint layout::
+
+        [kindtag, fp, key_0 .. key_{KW-1} (wide keys only), srcrow]
+
+    * ``kindtag = tag*2 + kind`` fuses the message kind bit into the tag.
+    * ``fp`` is the (signature, key) fingerprint; when ``exact`` the key
+      columns are omitted entirely (``fp`` *is* the key).
+    * ``srcrow = src*row_mod + row`` packs the origin coordinate into one
+      column whenever ``P*row_mod`` fits int32 (``row_mod == 0`` means the
+      split legacy (src, row) pair is used).
+
+    legacy layout (``fingerprint=False``): ``[kind, tag, key*KW, src, row]``.
+    """
+
+    key_width: int
+    fingerprint: bool
+    exact: bool
+    row_mod: int
+
+    @property
+    def width(self) -> int:
+        if not self.fingerprint:
+            return self.key_width + 4
+        kw = 0 if self.exact else self.key_width
+        return 2 + kw + (1 if self.row_mod else 2)
+
+
+def make_layout(spec: MSJSpec, db: dict, P: int) -> MsgLayout:
+    if not spec.fingerprint:
+        return MsgLayout(spec.key_width, False, False, 0)
+    max_cap = max((db[i.guard_rel].cap for i in spec.sj_info), default=1)
+    row_mod = max(max_cap, 1)
+    if P * row_mod >= 2**31:
+        row_mod = 0  # origin coordinate can't pack; fall back to two columns
+    return MsgLayout(spec.key_width, True, spec.fp_exact, row_mod)
 
 
 # --------------------------------------------------------------------------
@@ -167,10 +232,30 @@ def _lex_order(cols: list[jnp.ndarray]) -> jnp.ndarray:
     return order
 
 
+def _leaders_from_sorted(
+    order: jnp.ndarray, act_s: jnp.ndarray, neq_prev: jnp.ndarray, active: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Shared tail of the dedup paths: leader flags + leader-row map from a
+    sorted view, scattered back to original row order."""
+    n = order.shape[0]
+    is_leader_s = act_s & neq_prev
+    # leader row (original index) for each sorted position, propagated
+    # through the run via a cumulative max over flagged positions.
+    pos = jnp.arange(n, dtype=jnp.int32)
+    leader_pos_s = jax.lax.cummax(jnp.where(is_leader_s, pos, -1))
+    leader_pos_s = jnp.maximum(leader_pos_s, 0)
+    rep_s = order[leader_pos_s]
+    is_leader = jnp.zeros((n,), bool).at[order].set(is_leader_s)
+    rep = jnp.zeros((n,), jnp.int32).at[order].set(rep_s)
+    rep = jnp.where(active, rep, jnp.arange(n, dtype=jnp.int32))
+    return is_leader, rep
+
+
 def _dedup_by_key(
     keys: jnp.ndarray, active: jnp.ndarray
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact (sig-local) key dedup — the message-packing optimization.
+    """Exact (sig-local) key dedup — the message-packing optimization
+    (legacy multi-column path; see :func:`_dedup_fp` for the hot path).
 
     Returns ``(is_leader, rep_row)``: ``is_leader[i]`` marks the first active
     row of each distinct key; ``rep_row[i]`` is the row index of row i's
@@ -185,17 +270,70 @@ def _dedup_by_key(
     if n > 1:
         diff = (keys_s[1:] != keys_s[:-1]).any(axis=1)
         neq_prev = jnp.concatenate([jnp.ones((1,), bool), diff])
-    is_leader_s = act_s & neq_prev
-    # leader row (original index) for each sorted position, propagated
-    # through the run via a cumulative max over flagged positions.
-    pos = jnp.arange(n, dtype=jnp.int32)
-    leader_pos_s = jax.lax.cummax(jnp.where(is_leader_s, pos, -1))
-    leader_pos_s = jnp.maximum(leader_pos_s, 0)
-    rep_s = order[leader_pos_s]
-    is_leader = jnp.zeros((n,), bool).at[order].set(is_leader_s)
-    rep = jnp.zeros((n,), jnp.int32).at[order].set(rep_s)
-    rep = jnp.where(active, rep, jnp.arange(n, dtype=jnp.int32))
-    return is_leader, rep
+    return _leaders_from_sorted(order, act_s, neq_prev, active)
+
+
+def _map_source(
+    spec: MSJSpec, P: int, rel: Relation, pattern: tuple,
+    keypos: tuple[int, ...], salt: int,
+):
+    """Shared map-side source computation: (conform, padded keys,
+    fingerprint, destination shard).
+
+    Both the count phase (:func:`count_forward_cap`) and the data phase
+    (``stage_map``) go through here — the count-sizing invariant (counts
+    ≥ actual sends) depends on the two phases computing the identical
+    send set, so there is exactly one implementation.
+    """
+    conf = conform_mask(rel.data, rel.valid, pattern)
+    keys = _pad_keys(
+        rel.data[:, list(keypos)]
+        if keypos
+        else jnp.zeros((rel.cap, 0), jnp.int32),
+        spec.key_width,
+    )
+    if spec.fingerprint:
+        fp = hashing.fingerprint(keys, salt=salt, exact=spec.fp_exact)
+        dest = hashing.route_of(fp, salt, P)
+    else:
+        fp = None
+        dest = hashing.bucket_of(hashing.hash_cols(keys, salt=salt), P)
+    return conf, keys, fp, dest
+
+
+def _dedup(spec: MSJSpec, fp, keys, active):
+    """Dispatch to the fingerprint or legacy dedup per the spec."""
+    if spec.fingerprint:
+        return _dedup_fp(fp, keys, active, spec.fp_exact)
+    return _dedup_by_key(keys, active)
+
+
+def _dedup_fp(
+    fp: jnp.ndarray, keys: jnp.ndarray | None, active: jnp.ndarray, exact: bool
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fingerprint dedup: ONE argsort regardless of key width.
+
+    Rows are sorted by the fingerprint (inactive rows pushed to a sentinel)
+    and leader runs are refined by comparing the exact key columns of
+    adjacent rows, so a fingerprint collision can only split a key group
+    into extra leaders (lost packing), never merge distinct keys.  Chains
+    are also broken across inactive rows, which makes the sentinel value
+    colliding with a real fingerprint harmless.
+    """
+    n = fp.shape[0]
+    sortkey = jnp.where(active, fp.astype(jnp.uint32), jnp.uint32(0xFFFFFFFF))
+    order = jnp.argsort(sortkey, stable=True)
+    fp_s = fp[order]
+    act_s = active[order]
+    neq_prev = jnp.ones((n,), bool)
+    if n > 1:
+        diff = fp_s[1:] != fp_s[:-1]
+        if not exact:
+            keys_s = keys[order]
+            diff = diff | (keys_s[1:] != keys_s[:-1]).any(axis=1)
+        diff = diff | ~act_s[:-1]
+        neq_prev = jnp.concatenate([jnp.ones((1,), bool), diff])
+    return _leaders_from_sorted(order, act_s, neq_prev, active)
 
 
 def probe_sorted(
@@ -205,10 +343,16 @@ def probe_sorted(
     probe_sig: jnp.ndarray,
     probe_keys: jnp.ndarray,
     probe_ok: jnp.ndarray,
+    *,
+    build_fp: jnp.ndarray | None = None,
+    probe_fp: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Sort-merge existence probe: for each probe row, does any build row
     share its (signature, key)?  O(n log n), vmappable; the pure-jnp
-    counterpart of the Pallas ``msj_probe`` kernel."""
+    counterpart of the Pallas ``msj_probe`` kernel.  Fingerprints are
+    accepted (probe_fn interface) but unused — this backend sorts the exact
+    columns."""
+    del build_fp, probe_fp
     nb = build_sig.shape[0]
     np_ = probe_sig.shape[0]
     kw = build_keys.shape[1]
@@ -236,13 +380,27 @@ def probe_sorted(
 
 
 def probe_dense(
-    build_sig, build_keys, build_ok, probe_sig, probe_keys, probe_ok
+    build_sig, build_keys, build_ok, probe_sig, probe_keys, probe_ok,
+    *, build_fp=None, probe_fp=None,
 ) -> jnp.ndarray:
     """Quadratic all-pairs probe (tiny-input oracle for tests)."""
+    del build_fp, probe_fp
     eq_sig = probe_sig[:, None] == build_sig[None, :]
     eq_key = (probe_keys[:, None, :] == build_keys[None, :, :]).all(-1)
     m = eq_sig & eq_key & probe_ok[:, None] & build_ok[None, :]
     return m.any(axis=1)
+
+
+def _probe_takes_fp(probe_fn: Callable) -> bool:
+    """Does ``probe_fn`` accept the fingerprint keywords? (Custom callables
+    with the legacy 6-argument signature remain drop-in compatible.)"""
+    try:
+        params = inspect.signature(probe_fn).parameters
+    except (TypeError, ValueError):
+        return False
+    if any(p.kind == p.VAR_KEYWORD for p in params.values()):
+        return True
+    return "probe_fp" in params
 
 
 # --------------------------------------------------------------------------
@@ -264,11 +422,14 @@ class FusedQuery:
 
 
 def default_forward_cap(spec: MSJSpec, db: dict, P: int, slack: float = 1.0) -> int:
-    """Safe per-destination bucket capacity for the forward shuffle.
+    """Worst-case per-destination bucket capacity for the forward shuffle.
 
     ``slack=1.0`` is the no-assumption bound (everything to one shard);
     smaller values trade memory for overflow risk, which the supervisor
-    handles by retrying with a larger capacity.
+    handles by retrying with a larger capacity.  The count-sized path
+    (:func:`count_forward_cap`) replaces this bound with the observed max
+    bucket occupancy and only falls back here when counts cannot be read
+    (e.g. under tracing).
     """
     total = 0
     for info in spec.sj_info:
@@ -282,6 +443,54 @@ def default_forward_cap(spec: MSJSpec, db: dict, P: int, slack: float = 1.0) -> 
     return max(1, int(total * slack) + 1)
 
 
+def count_forward_cap(
+    spec: MSJSpec,
+    db: dict[str, Relation],
+    comm: Comm,
+    *,
+    packing: bool = True,
+    slack: float = 1.0,
+) -> int | None:
+    """Phase one of the two-phase count-sized shuffle (DESIGN.md §6).
+
+    Runs the map-side send-set computation (conform + packing dedup +
+    routing — no message materialization, no bloom filtering so the counts
+    upper-bound the filtered sends) and reduces the exact per-(src, dest)
+    message counts to the max bucket occupancy.  Returns ``None`` when the
+    counts are traced values (inside jit/shard_map) — the caller then falls
+    back to :func:`default_forward_cap`.
+    """
+    P = comm.P
+
+    def stage_count(sid, local_db):
+        total = jnp.zeros((P,), jnp.int32)
+        sources = [
+            (info.guard_rel, info.guard_pattern, info.guard_keypos, info.sig_id)
+            for info in spec.sj_info
+        ] + [(s.rel, s.pattern, s.keypos, s_id) for s_id, s in enumerate(spec.sigs)]
+        for rel_name, pattern, keypos, salt in sources:
+            conf, keys, fp, dest = _map_source(
+                spec, P, local_db[rel_name], pattern, keypos, salt
+            )
+            send = conf
+            if packing:
+                is_leader, _ = _dedup(spec, fp, keys, conf)
+                send = is_leader
+            d = jnp.where(send, dest, P)
+            total = total + jnp.bincount(d, length=P + 1)[:P].astype(jnp.int32)
+        return None, total
+
+    rel_names = sorted({i.guard_rel for i in spec.sj_info} | {s.rel for s in spec.sigs})
+    stacked = {name: db[name] for name in rel_names}
+    counts = run_pipeline(comm, [stage_count], stacked)
+    if isinstance(counts, jax.core.Tracer):
+        return None
+    cap = int(jnp.max(counts))
+    if slack < 1.0:
+        return max(1, int(cap * slack))
+    return max(1, cap)
+
+
 def run_msj(
     db: dict[str, Relation],
     sjs: Sequence[SemiJoin],
@@ -289,9 +498,12 @@ def run_msj(
     *,
     packing: bool = True,
     fused: Sequence[FusedQuery] = (),
-    probe_fn: Callable = probe_sorted,
+    probe_fn: Callable | None = None,
     forward_cap: int | None = None,
     bloom_bits: int = 0,
+    fingerprint: bool = True,
+    count_sized: bool = True,
+    cap_slack: float = 1.0,
 ):
     """Evaluate MSJ(S). Returns ``(outputs, stats)``.
 
@@ -299,15 +511,58 @@ def run_msj(
     :class:`Relation` (guard-row aligned), plus one relation per fused
     query. ``stats`` carries exact message counts / shuffled bytes /
     overflow counters for the cost model and the fault supervisor.
+
+    ``probe_fn=None`` selects :func:`probe_sorted`; the executor resolves
+    its ``probe_backend`` config (default: the bucketed Pallas kernel)
+    before calling in.  ``count_sized`` enables the two-phase shuffle: the
+    forward capacity is taken from an exchanged count vector instead of the
+    worst-case bound (``forward_cap`` overrides both).  ``cap_slack < 1``
+    deliberately undersizes the chosen capacity (memory saving; exact
+    overflow detection + supervisor retry recover correctness).
     """
-    spec = make_spec(sjs)
+    spec = make_spec(sjs, fingerprint=fingerprint)
     P = comm.P
     KW = spec.key_width
-    W = spec.msg_width
-    cap_s = forward_cap or default_forward_cap(spec, db, P)
+    layout = make_layout(spec, db, P)
+    W = layout.width
+    if probe_fn is None:
+        probe_fn = probe_sorted
+    pass_fp = fingerprint and _probe_takes_fp(probe_fn)
+
+    counted = False
+    if forward_cap is not None:
+        cap_s = forward_cap
+    elif count_sized:
+        cap_s = count_forward_cap(spec, db, comm, packing=packing, slack=cap_slack)
+        counted = cap_s is not None
+        if cap_s is None:
+            cap_s = default_forward_cap(spec, db, P, cap_slack)
+    else:
+        cap_s = default_forward_cap(spec, db, P, cap_slack)
 
     rel_names = sorted({i.guard_rel for i in spec.sj_info} | {s.rel for s in spec.sigs})
     sig_of_sj = jnp.asarray([i.sig_id for i in spec.sj_info], jnp.int32)
+
+    def _msg_stack(kind, tag, fp, keys, src_col, rows):
+        n = rows.shape[0]
+        if not fingerprint:
+            return jnp.stack(
+                [
+                    jnp.full((n,), kind, jnp.int32),
+                    jnp.full((n,), tag, jnp.int32),
+                ]
+                + [keys[:, k] for k in range(KW)]
+                + [src_col, rows],
+                axis=1,
+            )
+        cols = [jnp.full((n,), tag * 2 + kind, jnp.int32), fp]
+        if not spec.fp_exact:
+            cols += [keys[:, k] for k in range(KW)]
+        if layout.row_mod:
+            cols.append(src_col * layout.row_mod + rows)
+        else:
+            cols += [src_col, rows]
+        return jnp.stack(cols, axis=1)
 
     # ---------------- stage 0 (optional): bloom prefilter ----------------
     # Build a per-shard bloom filter over Assert keys, all-reduce(OR) it, and
@@ -316,30 +571,27 @@ def run_msj(
     use_bloom = bloom_bits > 0
 
     def _assert_keys(local_db):
-        akeys, asigs, amask = [], [], []
+        akeys, asigs, amask, afp = [], [], [], []
         for s_id, sig in enumerate(spec.sigs):
             rel = local_db[sig.rel]
-            conf = conform_mask(rel.data, rel.valid, sig.pattern)
-            keys = _pad_keys(
-                rel.data[:, list(sig.keypos)]
-                if sig.keypos
-                else jnp.zeros((rel.cap, 0), jnp.int32),
-                KW,
-            )
+            conf, keys, fp, _ = _map_source(spec, P, rel, sig.pattern, sig.keypos, s_id)
             akeys.append(keys)
             asigs.append(jnp.full((rel.cap,), s_id, jnp.int32))
             amask.append(conf)
+            if fingerprint:
+                afp.append(fp)
         return (
             jnp.concatenate(akeys, 0),
             jnp.concatenate(asigs, 0),
             jnp.concatenate(amask, 0),
+            jnp.concatenate(afp, 0) if fingerprint else None,
         )
 
     def stage_bloom(sid, local_db):
         from repro.kernels.bloom import ops as bloom_ops
 
-        keys, sigs_arr, mask = _assert_keys(local_db)
-        words = bloom_ops.build(keys, sigs_arr, mask, bloom_bits)
+        keys, sigs_arr, mask, fp = _assert_keys(local_db)
+        words = bloom_ops.build(keys, sigs_arr, mask, bloom_bits, fp=fp)
         # broadcast-by-all_to_all: every destination receives our words;
         # the next stage ORs over sources == an all-reduce(OR).
         bcast = jnp.broadcast_to(words[None], (P,) + words.shape)
@@ -359,67 +611,38 @@ def run_msj(
         # Req messages per semi-join
         for i, info in enumerate(spec.sj_info):
             rel = local_db[info.guard_rel]
-            conf = conform_mask(rel.data, rel.valid, info.guard_pattern)
-            keys = _pad_keys(
-                rel.data[:, list(info.guard_keypos)]
-                if info.guard_keypos
-                else jnp.zeros((rel.cap, 0), jnp.int32),
-                KW,
+            conf, keys, fp, dest = _map_source(
+                spec, P, rel, info.guard_pattern, info.guard_keypos, info.sig_id
             )
             conf_by_sj.append(conf)
             send = conf
             if use_bloom:
                 sig_col = jnp.full((rel.cap,), info.sig_id, jnp.int32)
-                send = send & bloom_ops.probe(bloom_words, keys, sig_col, bloom_bits)
+                send = send & bloom_ops.probe(
+                    bloom_words, keys, sig_col, bloom_bits, fp=fp
+                )
             if packing:
-                is_leader, rep = _dedup_by_key(keys, send)
+                is_leader, rep = _dedup(spec, fp, keys, send)
                 rep_by_sj.append(rep)
                 send = is_leader
             else:
                 rep_by_sj.append(jnp.arange(rel.cap, dtype=jnp.int32))
-            h = hashing.hash_cols(keys, salt=info.sig_id)
-            dest = hashing.bucket_of(h, P)
             rows = jnp.arange(rel.cap, dtype=jnp.int32)
-            msg = jnp.stack(
-                [
-                    jnp.full((rel.cap,), KIND_REQ, jnp.int32),
-                    jnp.full((rel.cap,), i, jnp.int32),
-                ]
-                + [keys[:, k] for k in range(KW)]
-                + [jnp.full((rel.cap,), 0, jnp.int32) + sid, rows],
-                axis=1,
-            )
-            msgs_list.append(msg)
+            src_col = jnp.full((rel.cap,), 0, jnp.int32) + sid
+            msgs_list.append(_msg_stack(KIND_REQ, i, fp, keys, src_col, rows))
             valid_list.append(send)
             dest_list.append(dest)
 
         # Assert messages per signature
         for s_id, sig in enumerate(spec.sigs):
             rel = local_db[sig.rel]
-            conf = conform_mask(rel.data, rel.valid, sig.pattern)
-            keys = _pad_keys(
-                rel.data[:, list(sig.keypos)]
-                if sig.keypos
-                else jnp.zeros((rel.cap, 0), jnp.int32),
-                KW,
-            )
+            conf, keys, fp, dest = _map_source(spec, P, rel, sig.pattern, sig.keypos, s_id)
             send = conf
             if packing:
-                is_leader, _ = _dedup_by_key(keys, conf)
+                is_leader, _ = _dedup(spec, fp, keys, conf)
                 send = is_leader
-            h = hashing.hash_cols(keys, salt=s_id)
-            dest = hashing.bucket_of(h, P)
             zeros = jnp.zeros((rel.cap,), jnp.int32)
-            msg = jnp.stack(
-                [
-                    jnp.full((rel.cap,), KIND_ASSERT, jnp.int32),
-                    jnp.full((rel.cap,), s_id, jnp.int32),
-                ]
-                + [keys[:, k] for k in range(KW)]
-                + [zeros, zeros],
-                axis=1,
-            )
-            msgs_list.append(msg)
+            msgs_list.append(_msg_stack(KIND_ASSERT, s_id, fp, keys, zeros, zeros))
             valid_list.append(send)
             dest_list.append(dest)
 
@@ -436,15 +659,39 @@ def run_msj(
         (recv, recv_valid), carry = args
         local_db, confs, reps, ovf_fwd, sent_fwd, bloom_words = carry
         flat, flat_ok = shuffle.flatten_recv(recv, recv_valid)
-        kind = flat[:, 0]
-        tag = flat[:, 1]
-        keys = flat[:, 2 : 2 + KW]
-        src = flat[:, 2 + KW]
-        row = flat[:, 3 + KW]
+        if fingerprint:
+            kindtag = flat[:, 0]
+            kind = kindtag & 1
+            tag = kindtag >> 1
+            fp = flat[:, 1]
+            if spec.fp_exact:
+                keys = fp[:, None]
+            else:
+                keys = flat[:, 2 : 2 + KW]
+            if layout.row_mod:
+                srcrow = flat[:, W - 1]
+                src = srcrow // layout.row_mod
+                row = srcrow % layout.row_mod
+            else:
+                src = flat[:, W - 2]
+                row = flat[:, W - 1]
+        else:
+            kind = flat[:, 0]
+            tag = flat[:, 1]
+            fp = None
+            keys = flat[:, 2 : 2 + KW]
+            src = flat[:, 2 + KW]
+            row = flat[:, 3 + KW]
         is_build = flat_ok & (kind == KIND_ASSERT)
         is_probe = flat_ok & (kind == KIND_REQ)
         probe_sigs = sig_of_sj[jnp.clip(tag, 0, spec.n_sj - 1)]
-        hits = probe_fn(tag, keys, is_build, probe_sigs, keys, is_probe)
+        if pass_fp:
+            hits = probe_fn(
+                tag, keys, is_build, probe_sigs, keys, is_probe,
+                build_fp=fp, probe_fp=fp,
+            )
+        else:
+            hits = probe_fn(tag, keys, is_build, probe_sigs, keys, is_probe)
         back_valid = is_probe & hits
         back = jnp.stack([row, tag], axis=1)
         bbuf, bbvalid, ovf_b, _ = shuffle.partition(back, back_valid, src, P, cap_s)
@@ -494,6 +741,10 @@ def run_msj(
     outputs, stats = run_pipeline(comm, stages, stacked)
     # aggregate stats over shards (sim mode leaves a leading P axis)
     stats = {k: jnp.asarray(v).sum() for k, v in stats.items()}
-    stats["bytes_fwd"] = stats["sent_fwd"] * W * 4
+    # the count phase ships one int32 per (src, dest) pair before the data
+    # exchange; account for it so count-sizing can't hide traffic
+    bytes_count = P * P * 4 if counted else 0
+    stats["bytes_fwd"] = stats["sent_fwd"] * W * 4 + bytes_count
     stats["bytes_bwd"] = stats["hits"] * 2 * 4
+    stats["forward_cap"] = cap_s
     return outputs, stats

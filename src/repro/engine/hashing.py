@@ -45,3 +45,51 @@ def bucket_of(h: jnp.ndarray, num_buckets: int) -> jnp.ndarray:
     avoids uint64 (kept off: jax x64 is disabled engine-wide).
     """
     return (h % jnp.uint32(num_buckets)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# (signature, key) fingerprints — DESIGN.md §5
+# --------------------------------------------------------------------------
+#
+# The MSJ hot path computes one int32 fingerprint column per message at map
+# time and reuses it for everything downstream: shard routing, the bloom
+# prefilter bit positions, the packing dedup sort, and the bucketed probe
+# kernel's sort/prune key.  Matching is always exact on the key columns, so
+# fingerprint collisions can cost load balance or packing efficiency but
+# never correctness.
+
+
+def fingerprint(keys: jnp.ndarray, *, salt: int = 0, exact: bool = False) -> jnp.ndarray:
+    """(N, K) int32 key columns -> (N,) int32 fingerprint.
+
+    ``exact=True`` (single key column) is the lex-preserving identity pack:
+    the fingerprint *is* the key, collision-free, and messages need not
+    carry the key columns separately.  Otherwise a salted mixed hash of all
+    columns (salt the signature id so distinct signatures decorrelate).
+    """
+    if exact:
+        assert keys.shape[1] == 1, "exact fingerprint requires a single key column"
+        return keys[:, 0].astype(jnp.int32)
+    return hash_cols(keys, salt=salt).astype(jnp.int32)
+
+
+def route_of(fp: jnp.ndarray, salt: int, P: int) -> jnp.ndarray:
+    """Destination shard from a fingerprint.
+
+    One extra ``mix32`` decorrelates the shard route from the raw
+    fingerprint, so (a) exact (identity) fingerprints of structured keys
+    still spread over shards and (b) the reducer-side bucket sort, which
+    orders by the fingerprint itself, is independent of the ``% P`` route.
+    """
+    h = mix32(fp.astype(jnp.uint32) + (jnp.uint32(salt) + 1) * _GOLDEN)
+    return bucket_of(h, P)
+
+
+def prune_key(fp: jnp.ndarray) -> jnp.ndarray:
+    """Non-negative int32 sort/prune key with the uint32 order of ``fp``.
+
+    Dropping the lowest bit keeps all comparisons signed-safe inside the
+    Pallas kernel (int32 VMEM tiles); two fingerprints differing only in
+    bit 0 share a prune key, which merely widens a bucket band.
+    """
+    return (fp.astype(jnp.uint32) >> 1).astype(jnp.int32)

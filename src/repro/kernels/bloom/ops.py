@@ -25,10 +25,36 @@ def n_words(bits: int) -> int:
     return max(1, (bits + LANES - 1) // LANES)
 
 
-def positions(keys: jnp.ndarray, sigs: jnp.ndarray, bits: int) -> jnp.ndarray:
-    """(N, NPROBE) int32 bit positions for each (sig, key) row."""
-    rows = jnp.concatenate([sigs.astype(jnp.int32)[:, None], keys], axis=1)
+def positions(
+    keys: jnp.ndarray,
+    sigs: jnp.ndarray,
+    bits: int,
+    fp: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """(N, NPROBE) int32 bit positions for each (sig, key) row.
+
+    When the map stage already computed the (sig, key) fingerprint
+    (DESIGN.md §5) the NPROBE positions are derived by remixing that one
+    column — one ``mix32`` per probe instead of a full multi-column hash.
+    Build and probe must agree on ``fp`` provenance (same per-signature
+    salt), which ``run_msj`` guarantees by passing the same fingerprints it
+    routes with.
+    """
     b = n_words(bits) * LANES
+    if fp is not None:
+        # fold the signature back in: the exact (KW==1) fingerprint is the
+        # bare key, and without this a key asserted under one signature
+        # would pass the filter for every signature (false positives only,
+        # but the prefilter exists to cut traffic)
+        base = fp.astype(jnp.uint32) ^ hashing.mix32(sigs.astype(jnp.uint32))
+        cols = [
+            hashing.bucket_of(
+                hashing.mix32(base ^ jnp.uint32((0x9E3779B9 * (1000 + j)) & 0xFFFFFFFF)), b
+            )
+            for j in range(NPROBE)
+        ]
+        return jnp.stack(cols, axis=1)
+    rows = jnp.concatenate([sigs.astype(jnp.int32)[:, None], keys], axis=1)
     cols = [
         hashing.bucket_of(hashing.hash_cols(rows, salt=1000 + j), b)
         for j in range(NPROBE)
@@ -51,10 +77,11 @@ def build(
     bits: int,
     *,
     impl: str | None = None,
+    fp: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Build the (n_words, 128) int32 0/1 filter over active (sig, key) rows."""
     impl = impl or DEFAULT_IMPL
-    pos = positions(keys, sigs, bits)
+    pos = positions(keys, sigs, bits, fp=fp)
     nw = n_words(bits)
     if impl == "pallas":
         return kernel.build_blocked(_pad_pos(pos, mask), n_words=nw)
@@ -71,10 +98,11 @@ def probe(
     bits: int,
     *,
     impl: str | None = None,
+    fp: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """(N,) bool — True iff all NPROBE bits for the row are set (maybe-match)."""
     impl = impl or DEFAULT_IMPL
-    pos = positions(keys, sigs, bits)
+    pos = positions(keys, sigs, bits, fp=fp)
     if impl == "pallas":
         found = kernel.probe_blocked(_pad_pos(pos, None), filt)
         return (found[:, :NPROBE] > 0).all(axis=1)

@@ -10,9 +10,19 @@ well onto the TPU's systolic/vector units, so the kernel is a *blocked
 all-pairs compare*: VMEM-resident tiles of probe rows are compared against a
 sweep of build tiles, equality is AND-reduced over the (few) key columns on
 the VPU, and hit bits OR-accumulate in the output tile while it stays
-resident across the build sweep.  For the bucket sizes produced by the
-radix shuffle (thousands of rows) the O(TP·TB) compare is cheap, entirely
+resident across the build sweep.  The compare is cheap, entirely
 VMEM-resident, and has perfectly regular (8,128)-aligned layout.
+
+Two grid strategies share that compare body:
+
+* ``probe_blocked`` — the original unbucketed sweep over ALL
+  (probe-tile, build-tile) pairs: O(NP·NB) work regardless of key
+  distribution.
+* ``probe_bucketed_blocked`` — the bucketed default (DESIGN.md §6): both
+  sides arrive sorted by a fingerprint prune key, and each tile pair first
+  checks its [min, max] prune-key ranges; disjoint ranges (different
+  fingerprint buckets) skip the compare, collapsing the sweep to the
+  diagonal band of same-bucket tiles — O(NP·NB / #buckets) expected work.
 
 Layout contract (prepared by ops.py):
   * rows are packed ``(N, 128)`` int32; columns ``0..W-1`` hold
@@ -59,6 +69,77 @@ def _probe_kernel(n_cols: int, probe_ref, build_ref, out_ref):
     eq = eq & (build[:, n_cols][None, :] > 0)
     hit = (eq.any(axis=1) & (probe[:, n_cols] > 0)).astype(jnp.int32)
     out_ref[...] = out_ref[...] | hit[:, None]
+
+
+def _bucketed_kernel(n_cols: int, probe_ref, build_ref, pr_ref, br_ref, out_ref):
+    """One (probe-tile, build-tile) step of the bucketed probe.
+
+    Identical compare body to :func:`_probe_kernel`, but both sides arrive
+    sorted by their fingerprint prune key and each tile carries its
+    [min, max] prune-key range (lanes 0/1 of ``pr_ref``/``br_ref``).  Tile
+    pairs whose ranges are disjoint — different fingerprint buckets — skip
+    the O(TP·TB) compare entirely, so the sweep degenerates to the narrow
+    band of bucket-overlapping tiles instead of all pairs.
+    """
+    nb = pl.program_id(1)
+
+    @pl.when(nb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    p_lo = pr_ref[0, 0]
+    p_hi = pr_ref[0, 1]
+    b_lo = br_ref[0, 0]
+    b_hi = br_ref[0, 1]
+
+    @pl.when((p_lo <= b_hi) & (b_lo <= p_hi))
+    def _compare():
+        probe = probe_ref[...]
+        build = build_ref[...]
+        eq = jnp.ones((probe.shape[0], build.shape[0]), dtype=jnp.bool_)
+        for w in range(n_cols):
+            eq = eq & (probe[:, w][:, None] == build[:, w][None, :])
+        eq = eq & (build[:, n_cols][None, :] > 0)
+        hit = (eq.any(axis=1) & (probe[:, n_cols] > 0)).astype(jnp.int32)
+        out_ref[...] = out_ref[...] | hit[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_cols", "tp", "tb", "interpret")
+)
+def probe_bucketed_blocked(
+    probe_packed: jnp.ndarray,  # (NP, 128) int32, sorted by prune key
+    build_packed: jnp.ndarray,  # (NB, 128) int32, sorted by prune key
+    pranges: jnp.ndarray,  # (NP/tp, 128) int32, lanes 0/1 = tile [lo, hi]
+    branges: jnp.ndarray,  # (NB/tb, 128) int32, lanes 0/1 = tile [lo, hi]
+    *,
+    n_cols: int,
+    tp: int = 256,
+    tb: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Returns (NP, 128) int32 hit bits (lane-broadcast).
+
+    Callers (ops.probe_bucketed) must pad both sides to tile multiples with
+    inactive rows and a sentinel prune key so every block is fully defined.
+    """
+    np_, _ = probe_packed.shape
+    nb_, _ = build_packed.shape
+    assert np_ % tp == 0 and nb_ % tb == 0, "pad inputs to tile multiples"
+    grid = (np_ // tp, nb_ // tb)
+    return pl.pallas_call(
+        functools.partial(_bucketed_kernel, n_cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tp, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((tb, LANES), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, LANES), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tp, LANES), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, LANES), jnp.int32),
+        interpret=interpret,
+    )(probe_packed, build_packed, pranges, branges)
 
 
 @functools.partial(

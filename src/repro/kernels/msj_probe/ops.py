@@ -1,17 +1,42 @@
-"""jit'd wrapper for the blocked MSJ probe kernel.
+"""jit'd wrappers for the blocked MSJ probe kernels.
 
-Exposes :func:`probe` with the engine's ``probe_fn`` signature
-(build_sig, build_keys, build_ok, probe_sig, probe_keys, probe_ok) -> hits,
-so it is a drop-in alternative to ``msj.probe_sorted`` (the sort-merge jnp
-path used on CPU) inside ``run_msj``.
+Exposes two engine-compatible ``probe_fn`` callables (signature
+``(build_sig, build_keys, build_ok, probe_sig, probe_keys, probe_ok,
+*, build_fp=None, probe_fp=None) -> hits``):
+
+* :func:`probe` — the original unbucketed all-pairs sweep (kept as a
+  shape-sweep test target and as the worst-case reference).
+* :func:`probe_bucketed` — the default executor backend (DESIGN.md §6):
+  both sides are sorted by a fingerprint *prune key* (one single-column
+  argsort), tiled, and the kernel compares only tile pairs whose prune-key
+  ranges overlap.  Matching inside a tile is exact on (signature, key), so
+  fingerprint collisions — including adversarially colliding ``*_fp``
+  inputs — only widen the band, never change the result.
+
+``interpret=None`` auto-detects: compiled on TPU, interpreter elsewhere.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
+from repro.engine import hashing
 from repro.kernels.msj_probe import kernel
 
 LANES = kernel.LANES
+
+_SENTINEL = jnp.int32(0x7FFFFFFF)
+
+
+def auto_interpret(interpret: bool | None) -> bool:
+    """Resolve the ``interpret`` flag: explicit wins, else interpret
+    everywhere but real TPU backends."""
+    if interpret is not None:
+        return interpret
+    try:
+        return jax.default_backend() != "tpu"
+    except RuntimeError:  # no backends initialized at all
+        return True
 
 
 def pack_rows(sig: jnp.ndarray, keys: jnp.ndarray, ok: jnp.ndarray) -> jnp.ndarray:
@@ -33,16 +58,101 @@ def probe(
     probe_keys: jnp.ndarray,
     probe_ok: jnp.ndarray,
     *,
+    build_fp: jnp.ndarray | None = None,
+    probe_fp: jnp.ndarray | None = None,
     tp: int = 256,
     tb: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Existence probe: hits[i] = any build row with equal (sig, key)."""
+    """Existence probe: hits[i] = any build row with equal (sig, key).
+
+    Unbucketed O(NP·NB) sweep; fingerprints are accepted (probe_fn
+    interface) but unused.
+    """
+    del build_fp, probe_fp
+    if probe_sig.shape[0] == 0 or build_sig.shape[0] == 0:
+        return jnp.zeros((probe_sig.shape[0],), bool)
     kw = build_keys.shape[1]
     n_cols = kw + 1  # sig + key columns; validity lives at column n_cols
     build = pack_rows(build_sig, build_keys, build_ok)
     probe_p = pack_rows(probe_sig, probe_keys, probe_ok)
     hits = kernel.probe_blocked(
-        probe_p, build, n_cols=n_cols, tp=tp, tb=tb, interpret=interpret
+        probe_p, build, n_cols=n_cols, tp=tp, tb=tb,
+        interpret=auto_interpret(interpret),
     )
     return hits[:, 0].astype(bool) & probe_ok
+
+
+def _default_fp(sig: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """Standalone fingerprint for callers outside run_msj: any function of
+    (sig, key) works as long as build and probe agree."""
+    rows = jnp.concatenate([sig.astype(jnp.int32)[:, None], keys.astype(jnp.int32)], 1)
+    return hashing.hash_cols(rows).astype(jnp.int32)
+
+
+def _sorted_side(sig, keys, ok, fp, tile: int):
+    """Sort one side by prune key, pack, pad to a tile multiple, and return
+    (packed, ranges, order, n)."""
+    n = sig.shape[0]
+    pk = jnp.where(ok, hashing.prune_key(fp), _SENTINEL)
+    order = jnp.argsort(pk)
+    packed = pack_rows(sig[order], keys[order], ok[order])
+    pk_s = pk[order]
+    n_pad = -n % tile if n else tile
+    if n == 0:
+        packed = jnp.zeros((tile, LANES), jnp.int32)
+        pk_s = jnp.full((tile,), _SENTINEL)
+    elif n_pad:
+        packed = jnp.concatenate(
+            [packed, jnp.zeros((n_pad, LANES), jnp.int32)], axis=0
+        )
+        pk_s = jnp.concatenate([pk_s, jnp.full((n_pad,), _SENTINEL)], axis=0)
+    # per-tile [lo, hi] prune-key ranges in lanes 0/1 (sorted -> ends of tile)
+    tiles = pk_s.shape[0] // tile
+    by_tile = pk_s.reshape(tiles, tile)
+    ranges = jnp.zeros((tiles, LANES), jnp.int32)
+    ranges = ranges.at[:, 0].set(by_tile[:, 0])
+    ranges = ranges.at[:, 1].set(by_tile[:, -1])
+    return packed, ranges, order, n
+
+
+def probe_bucketed(
+    build_sig: jnp.ndarray,
+    build_keys: jnp.ndarray,
+    build_ok: jnp.ndarray,
+    probe_sig: jnp.ndarray,
+    probe_keys: jnp.ndarray,
+    probe_ok: jnp.ndarray,
+    *,
+    build_fp: jnp.ndarray | None = None,
+    probe_fp: jnp.ndarray | None = None,
+    tp: int = 256,
+    tb: int = 256,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Bucketed existence probe — the default MSJ reducer backend.
+
+    ``build_fp``/``probe_fp`` are the map-time fingerprints (run_msj passes
+    the message column straight through); when absent a standalone
+    fingerprint is derived from the exact rows.  Inactive rows sort to a
+    sentinel bucket at the end and never match.
+    """
+    kw = build_keys.shape[1]
+    n_cols = kw + 1
+    if build_fp is None:
+        build_fp = _default_fp(build_sig, build_keys)
+    if probe_fp is None:
+        probe_fp = _default_fp(probe_sig, probe_keys)
+    build_p, b_ranges, _, _ = _sorted_side(build_sig, build_keys, build_ok, build_fp, tb)
+    probe_p, p_ranges, p_order, np_ = _sorted_side(
+        probe_sig, probe_keys, probe_ok, probe_fp, tp
+    )
+    hits = kernel.probe_bucketed_blocked(
+        probe_p, build_p, p_ranges, b_ranges,
+        n_cols=n_cols, tp=tp, tb=tb, interpret=auto_interpret(interpret),
+    )
+    hit_sorted = hits[:, 0].astype(bool)
+    if np_ == 0:
+        return jnp.zeros((0,), bool)
+    out = jnp.zeros((np_,), bool).at[p_order].set(hit_sorted[:np_])
+    return out & probe_ok

@@ -11,7 +11,11 @@ def probe(
     probe_sig: jnp.ndarray,
     probe_keys: jnp.ndarray,
     probe_ok: jnp.ndarray,
+    *,
+    build_fp: jnp.ndarray | None = None,
+    probe_fp: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
+    del build_fp, probe_fp  # exact oracle; fingerprints are routing-only
     eq_sig = probe_sig[:, None] == build_sig[None, :]
     eq_key = (probe_keys[:, None, :] == build_keys[None, :, :]).all(-1)
     m = eq_sig & eq_key & probe_ok[:, None] & build_ok[None, :]

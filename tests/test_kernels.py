@@ -3,7 +3,12 @@ run in interpret mode on CPU (the TPU lowering path is identical)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # degrade: property tests skip, rest still run
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.bloom import ops as bops, ref as bref
 from repro.kernels.msj_probe import ops as pops, ref as pref
@@ -85,17 +90,24 @@ def test_bloom_build_probe(bits, impl, rng):
     assert bool(np.asarray(hits)[np.asarray(mask)].all())
 
 
-@given(seed=st.integers(0, 10_000), bits=st.sampled_from([256, 512]))
-@settings(max_examples=15, deadline=None)
-def test_bloom_no_false_negatives_property(seed, bits):
-    rng = np.random.default_rng(seed)
-    n = int(rng.integers(1, 80))
-    keys = jnp.asarray(rng.integers(0, 1000, (n, 3)), jnp.int32)
-    sigs = jnp.zeros(n, jnp.int32)
-    mask = jnp.ones(n, bool)
-    filt = bops.build(keys, sigs, mask, bits)
-    hits = bops.probe(filt, keys, sigs, bits)
-    assert bool(hits.all())
+if HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(0, 10_000), bits=st.sampled_from([256, 512]))
+    @settings(max_examples=15, deadline=None)
+    def test_bloom_no_false_negatives_property(seed, bits):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 80))
+        keys = jnp.asarray(rng.integers(0, 1000, (n, 3)), jnp.int32)
+        sigs = jnp.zeros(n, jnp.int32)
+        mask = jnp.ones(n, bool)
+        filt = bops.build(keys, sigs, mask, bits)
+        hits = bops.probe(filt, keys, sigs, bits)
+        assert bool(hits.all())
+
+else:
+
+    def test_bloom_no_false_negatives_property():
+        pytest.importorskip("hypothesis")
 
 
 def test_bloom_filters_some_nonmembers(rng):

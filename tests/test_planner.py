@@ -2,7 +2,12 @@
 greedy-vs-brute-force optimality gaps, topological-sort validity."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # degrade: property tests skip, rest still run
+    HAVE_HYPOTHESIS = False
 
 from repro.core import queries as Q, ref_engine
 from repro.core.algebra import Atom, BSGF, SGF
@@ -107,28 +112,35 @@ def test_greedy_sgf_produces_valid_topological_sort():
             assert pos[d] < pos[name], (d, name, strata)
 
 
-@given(seed=st.integers(0, 1000))
-@settings(max_examples=20, deadline=None)
-def test_greedy_sgf_valid_on_random_dags(seed):
-    """Property: GREEDY-SGF output is always a multiway topological sort."""
-    rng = np.random.default_rng(seed)
-    n = int(rng.integers(2, 7))
-    qs = []
-    for i in range(n):
-        # guard on an earlier output sometimes
-        if i and rng.random() < 0.5:
-            g = Atom(f"Z{int(rng.integers(0, i))}", "x", "y")
-        else:
-            g = Atom(f"G{i}", "x", "y")
-        qs.append(BSGF(f"Z{i}", ("x", "y"), g, Atom(f"S{int(rng.integers(0,3))}", "x")))
-    sgf = SGF(qs)
-    strata = greedy_sgf(sgf)
-    names = [q.name for s in strata for q in s]
-    assert sorted(names) == sorted(q.name for q in sgf)  # partition
-    pos = {q.name: i for i, s in enumerate(strata) for q in s}
-    for name, ds in sgf.dependency_graph().items():
-        for d in ds:
-            assert pos[d] < pos[name]
+if HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_greedy_sgf_valid_on_random_dags(seed):
+        """Property: GREEDY-SGF output is always a multiway topological sort."""
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(2, 7))
+        qs = []
+        for i in range(n):
+            # guard on an earlier output sometimes
+            if i and rng.random() < 0.5:
+                g = Atom(f"Z{int(rng.integers(0, i))}", "x", "y")
+            else:
+                g = Atom(f"G{i}", "x", "y")
+            qs.append(BSGF(f"Z{i}", ("x", "y"), g, Atom(f"S{int(rng.integers(0,3))}", "x")))
+        sgf = SGF(qs)
+        strata = greedy_sgf(sgf)
+        names = [q.name for s in strata for q in s]
+        assert sorted(names) == sorted(q.name for q in sgf)  # partition
+        pos = {q.name: i for i, s in enumerate(strata) for q in s}
+        for name, ds in sgf.dependency_graph().items():
+            for d in ds:
+                assert pos[d] < pos[name]
+
+else:
+
+    def test_greedy_sgf_valid_on_random_dags():
+        pytest.importorskip("hypothesis")
 
 
 def test_cost_model_gumbo_vs_wang_divergence():
