@@ -17,6 +17,7 @@ from benchmarks import (
     query_size,
     scaling,
     selectivity,
+    service_throughput,
     sgf_strategies,
 )
 from benchmarks.common import HEADER
@@ -29,12 +30,18 @@ def main(argv=None) -> None:
                     help="comma-separated benchmark names to run")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write the msj roofline results as JSON (e.g. "
-                         "BENCH_msj.json) for machine-readable perf tracking")
+                         "BENCH_msj.json); also writes the service "
+                         "throughput ladder to BENCH_serve.json")
+    ap.add_argument("--skip-serve", action="store_true",
+                    help="with --json: don't run/write the service ladder "
+                         "(CI runs benchmarks.service_throughput separately)")
     args = ap.parse_args(argv)
     if args.json:
         if args.only and "msj" not in args.only:
             ap.error("--json records the msj roofline; drop --only or include 'msj'")
         open(args.json, "w").close()  # fail fast, not after the benchmarks
+        if not args.skip_serve:
+            open("BENCH_serve.json", "w").close()
     n = 1024 if args.quick else 4096
 
     suites = {
@@ -85,6 +92,19 @@ def main(argv=None) -> None:
                     f, indent=2,
                 )
             print(f"# wrote {args.json}", file=sys.stderr)
+
+    if args.json and not args.skip_serve:
+        # the service ladder joins the perf trajectory alongside BENCH_msj
+        params = service_throughput.ladder_params(args.quick)
+        srv_rows = service_throughput.run(**params)
+        print("# service_throughput (sequential vs batched service):")
+        print("# " + ",".join(service_throughput.COLS))
+        for r in srv_rows:
+            print("# " + ",".join(str(r[c]) for c in service_throughput.COLS),
+                  flush=True)
+        service_throughput.write_json(
+            "BENCH_serve.json", srv_rows, n_guard=params["n_guard"]
+        )
 
 
 if __name__ == "__main__":

@@ -1,0 +1,167 @@
+"""Service throughput: per-query-sequential vs batched-service execution.
+
+A tenants × queries ladder over a mixed A-family workload (shared base
+relations, varying guards and key patterns).  For each ladder point we
+report jobs, shuffled bytes, and net/total time for
+
+* ``sequential`` — every tenant's query planned (GREEDY) and executed on
+  its own executor, one after another (today's single-workload path);
+* ``batched``   — all tenants admitted to the SGF service and evaluated
+  in one fused multi-tenant plan on the W-slot scheduler;
+* ``batched_warm`` — the same workload resubmitted, hitting the plan
+  cache (planning skipped, jit executables reused).
+
+Run:  PYTHONPATH=src python -m benchmarks.service_throughput [--quick]
+      [--json BENCH_serve.json] [--slots W]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core import queries as Q
+from repro.core.algebra import Atom, BSGF, all_of
+from repro.core.costmodel import stats_of_db
+from repro.core.executor import Executor
+from repro.core.planner import MSJJob, plan_greedy
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+from repro.service import SGFService, catalog_from_numpy
+
+XYZW = ("x", "y", "z", "w")
+DEFAULT_P = 8
+
+
+def tenant_queries(t: int, per_tenant: int) -> list[BSGF]:
+    """Mixed A-family queries for tenant ``t`` over shared base relations."""
+    out = []
+    for j in range(per_tenant):
+        guard = ("R", "G", "H")[(t + j) % 3]
+        if (t + j) % 2 == 0:
+            conds = [Atom(r, v) for r, v in zip("STUV", XYZW)]  # A1/A5 style
+        else:
+            conds = [Atom(r, "x") for r in "STUV"]  # A3 style (key sharing)
+        out.append(BSGF(f"Z{j}", XYZW, Atom(guard, *XYZW), all_of(*conds)))
+    return out
+
+
+def _msj_jobs(report) -> int:
+    return sum(isinstance(r.job, MSJJob) for r in report.records)
+
+
+def run(
+    *,
+    tenants_ladder=(2, 4, 8, 16),
+    per_tenant: int = 1,
+    n_guard: int = 2048,
+    n_cond: int = 2048,
+    P: int = DEFAULT_P,
+    slots: int | None = None,
+) -> list[dict]:
+    rows: list[dict] = []
+    for n_tenants in tenants_ladder:
+        workload = [tenant_queries(t, per_tenant) for t in range(n_tenants)]
+        flat = [q for qs in workload for q in qs]
+        db_np = Q.gen_db(flat, n_guard=n_guard, n_cond=n_cond)
+
+        # -- sequential baseline ------------------------------------------
+        db = db_from_dict(db_np, P=P)
+        for qs in workload:  # warm jit caches so timings compare fairly
+            Executor(dict(db), SimComm(P)).execute(plan_greedy(qs, stats_of_db(db)))
+        t0 = time.perf_counter()
+        jobs = msj = nbytes = 0
+        net = total = 0.0
+        outs = []
+        for qs in workload:
+            ex = Executor(dict(db), SimComm(P))
+            env, rep = ex.execute(plan_greedy(qs, stats_of_db(db)))
+            jobs += rep.n_jobs
+            msj += _msj_jobs(rep)
+            nbytes += rep.bytes_shuffled()
+            net += rep.net_time
+            total += rep.total_time
+            outs.append({q.name: len(env[q.name].to_set()) for q in qs})
+        rows.append(
+            dict(
+                tenants=n_tenants, per_tenant=per_tenant, mode="sequential",
+                jobs=jobs, msj_jobs=msj, bytes_shuffled=nbytes,
+                net_s=round(net, 4), total_s=round(total, 4),
+                wall_s=round(time.perf_counter() - t0, 4),
+                cache_hits=0, deduped=0,
+            )
+        )
+
+        # -- batched service (cold: plans + jit traces) --------------------
+        svc = SGFService(
+            catalog_from_numpy(db_np, P=P), slots=slots, max_admit=n_tenants
+        )
+        for mode in ("batched", "batched_warm"):
+            reqs = [svc.submit(qs) for qs in workload]
+            t0 = time.perf_counter()
+            svc.tick()
+            wall = time.perf_counter() - t0
+            rep = svc.last_report
+            for req, want in zip(reqs, outs):  # outputs must match sequential
+                got = {name: len(rel.to_set()) for name, rel in req.outputs.items()}
+                assert got == want, f"{mode}: tenant {req.rid} mismatch"
+            rows.append(
+                dict(
+                    tenants=n_tenants, per_tenant=per_tenant, mode=mode,
+                    jobs=rep.n_jobs, msj_jobs=_msj_jobs(rep),
+                    bytes_shuffled=rep.bytes_shuffled(),
+                    net_s=round(rep.net_time_under_slots(slots), 4),
+                    total_s=round(rep.total_time, 4),
+                    wall_s=round(wall, 4),
+                    cache_hits=svc.cache.hits,
+                    deduped=svc.last_batch.n_deduped,
+                )
+            )
+    return rows
+
+
+COLS = ("tenants", "per_tenant", "mode", "jobs", "msj_jobs", "bytes_shuffled",
+        "net_s", "total_s", "wall_s", "cache_hits", "deduped")
+
+
+def ladder_params(quick: bool) -> dict:
+    """The one place the quick/full ladder configuration lives (run.py's
+    --json path and this module's CLI both use it)."""
+    n = 512 if quick else 2048
+    return dict(
+        tenants_ladder=(2, 4, 8) if quick else (2, 4, 8, 16),
+        n_guard=n,
+        n_cond=n,
+    )
+
+
+def write_json(path: str, rows: list[dict], *, n_guard: int,
+               slots: int | None = None) -> None:
+    with open(path, "w") as f:
+        json.dump({"n_guard": n_guard, "slots": slots,
+                   "service_throughput": rows}, f, indent=2)
+    print(f"# wrote {path}", file=sys.stderr)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small data sizes")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="cluster slot bound W (default: unbounded)")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write results as JSON (e.g. BENCH_serve.json)")
+    args = ap.parse_args(argv)
+    params = ladder_params(args.quick)
+    t0 = time.time()
+    rows = run(slots=args.slots, **params)
+    print(",".join(COLS))
+    for r in rows:
+        print(",".join(str(r[c]) for c in COLS), flush=True)
+    print(f"# service_throughput done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if args.json:
+        write_json(args.json, rows, n_guard=params["n_guard"], slots=args.slots)
+
+
+if __name__ == "__main__":
+    main()

@@ -127,6 +127,29 @@ def map_phase_cost(
     raise ValueError(model)
 
 
+def lpt_makespan(costs: Sequence[float], slots: int | None = None) -> float:
+    """Makespan of jobs with the given costs on ``slots`` identical machines
+    under longest-processing-time-first list scheduling.
+
+    This is the slot-aware net-time primitive: a round whose jobs exceed the
+    cluster's W concurrent slots cannot finish in ``max(costs)`` wall time.
+    ``slots=None`` (or ≥ len(costs)) models unbounded slots and returns the
+    plain maximum — exactly the paper's net-time term for one round.
+    """
+    costs = [float(c) for c in costs]
+    if not costs:
+        return 0.0
+    if slots is None or math.isinf(slots) or slots >= len(costs):
+        return max(costs)
+    if slots < 1:
+        raise ValueError(f"slots must be >= 1, got {slots}")
+    loads = [0.0] * int(slots)
+    for c in sorted(costs, reverse=True):
+        i = min(range(len(loads)), key=loads.__getitem__)
+        loads[i] += c
+    return max(loads)
+
+
 # --------------------------------------------------------------------------
 # Relation statistics
 # --------------------------------------------------------------------------

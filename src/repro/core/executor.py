@@ -46,6 +46,9 @@ class JobRecord:
     wall: float
     stats: dict
     attempts: int = 1
+    #: execution wave the slot scheduler ran this job in (-1: barrier-round
+    #: executor, where waves and rounds coincide by construction).
+    wave: int = -1
 
 
 @dataclass
@@ -62,6 +65,20 @@ class Report:
         for r in self.records:
             by_round[r.round_idx] = max(by_round.get(r.round_idx, 0.0), r.wall)
         return sum(by_round.values())
+
+    def net_time_under_slots(self, slots: int | None = None) -> float:
+        """Makespan-style net time if each round ran on ``slots`` concurrent
+        cluster slots (LPT list scheduling per round, rounds stay barriers).
+
+        ``slots=None`` models unbounded slots and reproduces
+        :attr:`net_time` exactly.
+        """
+        from repro.core.costmodel import lpt_makespan
+
+        by_round: dict[int, list[float]] = {}
+        for r in self.records:
+            by_round.setdefault(r.round_idx, []).append(r.wall)
+        return sum(lpt_makespan(ws, slots) for ws in by_round.values())
 
     def bytes_shuffled(self) -> int:
         return int(
@@ -116,6 +133,11 @@ def _fused_query_of(q: BSGF, job: MSJJob) -> FusedQuery:
     )
 
 
+#: valid ExecutorConfig.probe_backend names (validated eagerly at config
+#: construction so a typo fails at service/executor setup, not at job time).
+PROBE_BACKENDS = ("auto", "sorted", "pallas", "dense")
+
+
 @dataclass
 class ExecutorConfig:
     packing: bool = True
@@ -137,6 +159,13 @@ class ExecutorConfig:
     #: restores the seed [kind, tag, key*KW, src, row] layout end to end.
     fingerprint: bool = True
 
+    def __post_init__(self):
+        if self.probe_backend not in PROBE_BACKENDS:
+            raise ValueError(
+                f"unknown probe backend {self.probe_backend!r}; "
+                f"valid names: {', '.join(PROBE_BACKENDS)}"
+            )
+
 
 def resolve_probe_backend(name: str) -> Callable:
     """Map an ExecutorConfig.probe_backend name to a probe_fn callable."""
@@ -156,7 +185,9 @@ def resolve_probe_backend(name: str) -> Callable:
         from repro.kernels.msj_probe import ops as probe_ops
 
         return probe_ops.probe_bucketed
-    raise ValueError(f"unknown probe backend {name!r} (auto|sorted|pallas|dense)")
+    raise ValueError(
+        f"unknown probe backend {name!r}; valid names: {', '.join(PROBE_BACKENDS)}"
+    )
 
 
 class Executor:
@@ -230,23 +261,38 @@ class Executor:
                 used = int(stats.get("forward_cap", 0))
                 cap = max(used, 1) * 2
 
+    # -- job-granular entry (what the slot scheduler drives) ---------------
+    def execute_job(
+        self,
+        job: Job,
+        round_idx: int,
+        report: Report,
+        *,
+        on_job: Callable | None = None,
+    ) -> JobRecord:
+        """Run one job to completion: time it, publish its outputs into the
+        environment, and append a :class:`JobRecord` to ``report``."""
+        t0 = time.perf_counter()
+        outs, stats, attempts = self.run_job_ft(job, on_job)
+        for v in outs.values():
+            jax.block_until_ready(v.data)
+        wall = time.perf_counter() - t0
+        for name, rel in outs.items():
+            if self.config.compact:
+                rel = rel.compacted()
+            self.env[name] = rel
+        rec = JobRecord(
+            job, round_idx, wall, {k: int(v) for k, v in stats.items()}, attempts
+        )
+        report.records.append(rec)
+        return rec
+
     # -- whole plans ---------------------------------------------------------
     def execute(self, plan: Plan, *, on_job: Callable | None = None) -> tuple[dict, Report]:
         report = Report()
         for ri, rnd in enumerate(plan.rounds):
             for job in rnd.jobs:
-                t0 = time.perf_counter()
-                outs, stats, attempts = self.run_job_ft(job, on_job)
-                for v in outs.values():
-                    jax.block_until_ready(v.data)
-                wall = time.perf_counter() - t0
-                for name, rel in outs.items():
-                    if self.config.compact:
-                        rel = rel.compacted()
-                    self.env[name] = rel
-                report.records.append(
-                    JobRecord(job, ri, wall, {k: int(v) for k, v in stats.items()}, attempts)
-                )
+                self.execute_job(job, ri, report, on_job=on_job)
         return self.env, report
 
 

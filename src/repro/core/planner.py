@@ -45,6 +45,7 @@ from repro.core.costmodel import (
     Stats,
     BYTES_PER_CELL,
     eval_job_cost,
+    lpt_makespan,
     msj_job_cost,
 )
 
@@ -108,6 +109,37 @@ def concat_plans(plans: Iterable[Plan]) -> Plan:
     for p in plans:
         rounds.extend(p.rounds)
     return Plan(tuple(rounds))
+
+
+@dataclass(frozen=True)
+class JobNode:
+    """One job of a plan as a DAG vertex (see :func:`job_dag`)."""
+
+    idx: int
+    job: Job
+    round_idx: int
+    deps: tuple[int, ...]  # indices of jobs that must finish first
+
+
+def job_dag(plan: Plan) -> tuple[JobNode, ...]:
+    """Job-level dependency DAG of a plan, strata edges only.
+
+    Rounds are barriers, so every job depends on all jobs of the previous
+    round and on nothing else.  This is the conservative reading of the
+    Plan IR the slot scheduler consumes: with W=∞ slots the scheduler's
+    waves coincide exactly with the plan's rounds.
+    """
+    nodes: list[JobNode] = []
+    prev: tuple[int, ...] = ()
+    idx = 0
+    for ri, rnd in enumerate(plan.rounds):
+        cur: list[int] = []
+        for job in rnd.jobs:
+            nodes.append(JobNode(idx, job, ri, prev))
+            cur.append(idx)
+            idx += 1
+        prev = tuple(cur)
+    return tuple(nodes)
 
 
 # --------------------------------------------------------------------------
@@ -520,9 +552,21 @@ def job_cost(
 
 
 def plan_cost(
-    plan: Plan, stats: Stats, consts: CostConstants = HADOOP, *, model: str = "gumbo"
+    plan: Plan,
+    stats: Stats,
+    consts: CostConstants = HADOOP,
+    *,
+    model: str = "gumbo",
+    slots: int | None = None,
 ) -> dict:
-    """Modeled total/net cost; net = Σ_rounds max_job (parallel waves)."""
+    """Modeled total/net cost; net = Σ_rounds makespan of the round's jobs.
+
+    ``slots`` bounds how many jobs the cluster runs concurrently (the
+    service scheduler's W); the per-round makespan is then the LPT
+    list-scheduling makespan on W machines.  ``slots=None`` (unbounded)
+    reduces to the classic ``Σ_rounds max_job`` — bit-identical to the
+    pre-slot behaviour.
+    """
     import copy
 
     st = copy.deepcopy(stats)
@@ -530,5 +574,5 @@ def plan_cost(
     for r in plan.rounds:
         costs = [job_cost(j, st, consts, model=model) for j in r.jobs]
         total += sum(costs)
-        net += max(costs) if costs else 0.0
+        net += lpt_makespan(costs, slots)
     return {"total": total, "net": net, "rounds": plan.n_rounds, "jobs": plan.n_jobs}

@@ -8,7 +8,7 @@ vocab-sharded) LM head so logits never materialize at (B, S, V).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -123,6 +123,17 @@ def layer_decode(cfg, lp, x, k_cache, v_cache, length):
     return x, k_cache, v_cache
 
 
+@lru_cache(maxsize=1)
+def _barrier_differentiable() -> bool:
+    # jax < 0.4.38 has no JVP rule for optimization_barrier; differentiating
+    # a barriered remat body raises NotImplementedError at trace time.
+    try:
+        jax.grad(lambda x: jax.lax.optimization_barrier(x))(0.0)
+        return True
+    except NotImplementedError:
+        return False
+
+
 def _remat(cfg, fn):
     if cfg.remat == "none":
         return fn
@@ -137,7 +148,10 @@ def _remat(cfg, fn):
         # without it XLA LICM hoists `convert(saved_stack)` out of the
         # backward while-loop, materializing an (L,B,S,d) f32 copy of the
         # whole residual stack (7 GB/chip on qwen3 — §Perf iteration 3).
-        carry = jax.lax.optimization_barrier(carry)
+        # On jax versions that cannot differentiate the barrier we drop it
+        # (a peak-memory regression only, never a correctness one).
+        if _barrier_differentiable():
+            carry = jax.lax.optimization_barrier(carry)
         return fn(carry, xs)
 
     return jax.checkpoint(barriered, policy=policy)

@@ -1,0 +1,34 @@
+"""SGF query service: relation catalog, plan/executable cache, cross-query
+MSJ batching, and a slot-limited scheduler (DESIGN.md §9).
+
+Dataflow: ``Catalog`` (resident relations + stats) → ``SGFService.submit``
+(admission queue) → ``fuse_requests`` (canonicalize + dedup into one
+multi-tenant batch) → ``PlanCache`` (fingerprint-keyed plans) →
+``SlotScheduler`` (W-slot waves over the job DAG) → per-request output
+scatter.
+"""
+from repro.service.batcher import (
+    AdmissionBatcher,
+    FusedBatch,
+    QueryRequest,
+    SGFService,
+    fuse_requests,
+)
+from repro.service.catalog import Catalog, CatalogError, catalog_from_numpy
+from repro.service.plan_cache import PlanCache, canonicalize, fingerprint_queries
+from repro.service.scheduler import SlotScheduler
+
+__all__ = [
+    "AdmissionBatcher",
+    "Catalog",
+    "CatalogError",
+    "FusedBatch",
+    "PlanCache",
+    "QueryRequest",
+    "SGFService",
+    "SlotScheduler",
+    "canonicalize",
+    "catalog_from_numpy",
+    "fingerprint_queries",
+    "fuse_requests",
+]

@@ -1,0 +1,252 @@
+"""Admission batcher + SGF query service.
+
+Mirrors the slot discipline of the decode batcher (serve/batcher.py) at
+the query layer: requests queue up, each *tick* drains up to
+``max_admit`` of them and fuses the admitted queries into **one**
+multi-tenant plan.  Fusion is where the paper's multi-query machinery
+pays off across tenants:
+
+* admitted queries are alpha-renamed into a canonical namespace
+  (``q0, q1, ...``) and *deduplicated* on their canonical form — two
+  tenants submitting the structurally-same query evaluate it once;
+* the canonical batch is planned as one SGF with GREEDY-SGF /
+  GREEDY-BSGF, so the stratum-level semi-join pooling merges shared
+  (guard, atom) pairs across tenants into single MSJ equations and all
+  same-stratum Boolean evaluations share one EVAL job;
+* per-request outputs are scattered back by request id from the fused
+  environment.
+
+Plans are cached by canonical fingerprint (plan_cache.py) and executed
+on the W-slot scheduler (scheduler.py) over catalog-resident relations
+(catalog.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from repro.core.algebra import BSGF, SGF
+from repro.core.costmodel import CostConstants, HADOOP
+from repro.core.executor import Executor, ExecutorConfig, Report
+from repro.core.planner import (
+    Plan,
+    _register_stratum_outputs,
+    concat_plans,
+    levels_of,
+    plan_greedy,
+)
+from repro.core.relation import Relation
+from repro.engine.comm import Comm, SimComm
+from repro.service.catalog import Catalog
+from repro.service.plan_cache import PlanCache, canonical_query_key
+from repro.service.scheduler import SlotScheduler
+
+
+@dataclass
+class QueryRequest:
+    """One tenant's submission: an ordered batch of BSGF queries (an SGF
+    body); outputs are filled in under the tenant's own names."""
+
+    rid: int
+    queries: tuple[BSGF, ...]
+    outputs: dict[str, Relation] = field(default_factory=dict)
+    done: bool = False
+
+
+@dataclass(frozen=True)
+class FusedBatch:
+    """The admitted requests of one tick, fused into a canonical batch."""
+
+    requests: tuple[QueryRequest, ...]
+    queries: tuple[BSGF, ...]  # canonical, deduplicated across requests
+    out_map: dict[tuple[int, str], str]  # (rid, tenant name) -> canonical name
+
+    @property
+    def n_submitted(self) -> int:
+        return sum(len(r.queries) for r in self.requests)
+
+    @property
+    def n_deduped(self) -> int:
+        return self.n_submitted - len(self.queries)
+
+
+def fuse_requests(requests: Sequence[QueryRequest]) -> FusedBatch:
+    """Canonicalize and dedup the queries of the admitted requests.
+
+    Queries are processed in admission order; each query's canonical key
+    (plan_cache.canonical_query_key, with references to the *same
+    request's* earlier outputs following the rename) either joins an
+    existing canonical query or appends a new one.  Cross-request
+    dependencies are not allowed — tenants only see catalog relations and
+    their own intermediate outputs.
+    """
+    seen: dict[tuple, str] = {}
+    queries: list[BSGF] = []
+    out_map: dict[tuple[int, str], str] = {}
+    for req in requests:
+        local: dict[str, str] = {}  # this request's name -> canonical name
+        for q in req.queries:
+            key = canonical_query_key(q, local)
+            name = seen.get(key)
+            if name is None:
+                name = f"q{len(queries)}"
+                seen[key] = name
+                queries.append(BSGF(name, key[0], key[1], key[2]))
+            local[q.name] = name
+            out_map[(req.rid, q.name)] = name
+    return FusedBatch(tuple(requests), tuple(queries), out_map)
+
+
+class AdmissionBatcher:
+    """FIFO request queue drained ``max_admit`` requests per tick."""
+
+    def __init__(self, *, max_admit: int = 16):
+        self.max_admit = max_admit
+        self.queue: list[QueryRequest] = []
+
+    def submit(self, req: QueryRequest) -> None:
+        self.queue.append(req)
+
+    def drain(self) -> list[QueryRequest]:
+        admitted, self.queue = self.queue[: self.max_admit], self.queue[self.max_admit :]
+        return admitted
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+
+class SGFService:
+    """The query service: catalog + plan cache + batcher + slot scheduler.
+
+    ::
+
+        svc = SGFService(catalog, slots=4)
+        req = svc.submit([query])          # enqueue, returns the request
+        svc.tick()                         # drain, fuse, plan/cache, run
+        req.outputs["Z"]                   # tenant-named Relation
+
+    ``slots=None`` models unbounded cluster slots (W=∞): scheduler waves
+    then coincide with plan rounds and net-time accounting matches the
+    barrier executor exactly.
+    """
+
+    def __init__(
+        self,
+        catalog: Catalog,
+        *,
+        comm: Comm | None = None,
+        config: ExecutorConfig | None = None,
+        slots: int | None = None,
+        max_admit: int = 16,
+        consts: CostConstants = HADOOP,
+        model: str = "gumbo",
+        cache_capacity: int = 128,
+    ):
+        self.catalog = catalog
+        self.comm = comm or SimComm(catalog.P)
+        self.config = config or ExecutorConfig()
+        self.slots = slots
+        self.consts = consts
+        self.model = model
+        self.batcher = AdmissionBatcher(max_admit=max_admit)
+        self.cache = PlanCache(capacity=cache_capacity)
+        self.reports: list[Report] = []
+        self.last_report: Report | None = None
+        self.last_batch: FusedBatch | None = None
+        self._next_rid = 0
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, queries: Sequence[BSGF] | SGF | BSGF) -> QueryRequest:
+        if isinstance(queries, BSGF):
+            queries = [queries]
+        elif isinstance(queries, SGF):
+            queries = list(queries.queries)
+        else:
+            queries = list(queries)
+        names = [q.name for q in queries]
+        if len(set(names)) != len(names):
+            # fusion alpha-renames before SGF's own duplicate check could
+            # run; catch it here or the earlier duplicate silently loses
+            raise ValueError(f"duplicate output names in request: {names}")
+        self.catalog.validate(queries)
+        req = QueryRequest(self._next_rid, tuple(queries))
+        self._next_rid += 1
+        self.batcher.submit(req)
+        return req
+
+    # -- one service tick --------------------------------------------------
+    def _plan_batch(self, batch: FusedBatch) -> Plan:
+        """Level-layered strata + GREEDY-BSGF grouping within each stratum.
+
+        Unlike GREEDY-SGF's overlap heuristic (which serializes
+        non-overlapping tenants into separate strata), dependency-level
+        layering always co-schedules independent tenants, so their Boolean
+        evaluations share one EVAL job and their semi-joins enter one
+        grouping pool — the cross-tenant sharing the service exists for.
+        """
+        import copy
+
+        # the catalog memoizes its Stats; copy before register_output feeds
+        # stratum output estimates forward
+        stats = copy.deepcopy(self.catalog.stats())
+        plans = []
+        for stratum in levels_of(SGF(list(batch.queries))):
+            plans.append(plan_greedy(stratum, stats, self.consts, model=self.model))
+            _register_stratum_outputs(stratum, stats)
+        return concat_plans(plans)
+
+    def tick(self) -> list[QueryRequest]:
+        """Drain the queue, run one fused job wave-set, scatter outputs.
+
+        Returns the completed requests (empty list if the queue was empty).
+        """
+        admitted = self.batcher.drain()
+        if not admitted:
+            return []
+        try:
+            batch = fuse_requests(admitted)
+            plan, _hit = self.cache.get_or_plan(
+                batch.queries,
+                self.catalog.epoch,
+                lambda: self._plan_batch(batch),
+                canonical=True,
+            )
+            ex = Executor(self.catalog.db(), self.comm, self.config)
+            sched = SlotScheduler(
+                ex,
+                slots=self.slots,
+                stats=self.catalog.stats(),
+                consts=self.consts,
+                model=self.model,
+            )
+            env, report = sched.execute(plan)
+        except Exception:
+            # don't lose co-admitted tenants to one failing tick (e.g. a
+            # CapacityFault after max retries): put the batch back in FIFO
+            # order so a caller can retry or re-admit after fixing capacity
+            self.batcher.queue[:0] = admitted
+            raise
+        for req in batch.requests:
+            for q in req.queries:
+                cname = batch.out_map[(req.rid, q.name)]
+                req.outputs[q.name] = env[cname].rename(q.name)
+            req.done = True
+        self.reports.append(report)
+        self.last_report = report
+        self.last_batch = batch
+        return admitted
+
+    def run(self) -> None:
+        """Tick until the queue is empty."""
+        while len(self.batcher):
+            self.tick()
+
+    # -- introspection -----------------------------------------------------
+    def counters(self) -> dict:
+        c = self.cache.counters()
+        c["ticks"] = len(self.reports)
+        c["jobs"] = sum(r.n_jobs for r in self.reports)
+        c["bytes_shuffled"] = sum(r.bytes_shuffled() for r in self.reports)
+        c["net_time"] = sum(r.net_time_under_slots(self.slots) for r in self.reports)
+        c["total_time"] = sum(r.total_time for r in self.reports)
+        return c

@@ -1,0 +1,162 @@
+"""Relation catalog: resident sharded relations with schema and statistics.
+
+The service layer's source of truth for data.  Queries submitted to the
+service reference relations *by name*; the catalog owns the sharded
+:class:`~repro.core.relation.Relation` storage, the per-relation
+:class:`~repro.core.costmodel.RelStats`, and the selectivity estimates the
+planner costs plans with — so requests no longer carry a database dict
+around.
+
+Every registration bumps ``epoch``; the plan cache keys on
+``(query fingerprint, epoch)`` so a catalog change invalidates cached
+plans (relation sizes drive the greedy grouping).
+"""
+from __future__ import annotations
+
+import re
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.algebra import BSGF, SGF
+from repro.core.costmodel import RelStats, Stats
+from repro.core.relation import Relation
+
+
+class CatalogError(KeyError):
+    """A query referenced a relation the catalog does not hold."""
+
+    def __str__(self):  # KeyError quotes its arg; keep the message readable
+        return self.args[0] if self.args else ""
+
+
+#: names reserved for the admission batcher's canonical namespace
+#: (queries ``q<i>``, variables ``v<i>`` — plan_cache.canonicalize); a
+#: catalog relation with such a name would silently alias a fused query's
+#: output in the shared execution environment.
+_RESERVED = re.compile(r"^[qv]\d+$")
+
+
+class Catalog:
+    """Named resident relations, all sharded over the same ``P``."""
+
+    def __init__(self, *, P: int = 8, default_sel: float = 0.5):
+        self.P = P
+        self.default_sel = default_sel
+        self._rels: dict[str, Relation] = {}
+        #: selectivity estimates, keyed (guard_rel, cond_rel) as in Stats
+        self.sel: dict[tuple, float] = {}
+        #: bumped on every registration; part of the plan-cache key
+        self.epoch = 0
+        self._stats_cache: tuple[int, Stats] | None = None
+
+    # -- registration ------------------------------------------------------
+    def register(self, name: str, rows, *, partition: str = "block") -> Relation:
+        """Register (or replace) a relation under ``name``.
+
+        ``rows`` may be a pre-sharded :class:`Relation` (its shard count
+        must match the catalog's ``P``), an ``(n, arity)`` numpy array, or
+        an iterable of int tuples.
+        """
+        if _RESERVED.match(name):
+            raise ValueError(
+                f"relation name {name!r} is reserved for the service's "
+                "canonical query namespace (q<i>/v<i>)"
+            )
+        if isinstance(rows, Relation):
+            if rows.P != self.P:
+                raise ValueError(
+                    f"relation {name!r} is sharded P={rows.P}, catalog has P={self.P}"
+                )
+            rel = rows.rename(name)
+        elif isinstance(rows, np.ndarray):
+            rel = Relation.from_numpy(name, rows, P=self.P, partition=partition)
+        else:
+            rel = Relation.from_tuples(name, rows, P=self.P)
+        self._rels[name] = rel
+        self.epoch += 1
+        return rel
+
+    def register_many(self, rels: Mapping[str, object]) -> None:
+        for name, rows in rels.items():
+            self.register(name, rows)
+
+    def set_selectivity(self, guard_rel: str, cond_rel: str, sel: float) -> None:
+        self.sel[(guard_rel, cond_rel)] = float(sel)
+        self.epoch += 1
+
+    # -- lookup ------------------------------------------------------------
+    def __contains__(self, name: str) -> bool:
+        return name in self._rels
+
+    def __len__(self) -> int:
+        return len(self._rels)
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._rels)
+
+    def get(self, name: str) -> Relation:
+        try:
+            return self._rels[name]
+        except KeyError:
+            raise CatalogError(
+                f"relation {name!r} is not registered "
+                f"(resident: {', '.join(sorted(self._rels)) or 'none'})"
+            ) from None
+
+    def db(self) -> dict[str, Relation]:
+        """A database-dict view for the executor (relations are shared,
+        not copied; executors publish their outputs into their own env)."""
+        return dict(self._rels)
+
+    # -- statistics --------------------------------------------------------
+    def stats(self) -> Stats:
+        """Exact row counts of the resident relations + selectivities.
+
+        Memoized on ``epoch`` — counting syncs one device reduction per
+        relation, which the service hot path must not pay every tick.
+        Callers that mutate the Stats (``register_output``) must copy it
+        first (the batcher and scheduler both do).
+        """
+        if self._stats_cache is not None and self._stats_cache[0] == self.epoch:
+            return self._stats_cache[1]
+        rels = {
+            name: RelStats(rows=float(r.count()), arity=r.arity)
+            for name, r in self._rels.items()
+        }
+        st = Stats(rels, dict(self.sel), self.default_sel)
+        self._stats_cache = (self.epoch, st)
+        return st
+
+    def validate(self, queries: Sequence[BSGF] | SGF) -> None:
+        """Check every base relation a query batch reads is resident *and*
+        used at its registered arity (the catalog owns the schema; SGF's
+        intra-batch arity check cannot see it)."""
+        qs = list(queries.queries) if isinstance(queries, SGF) else list(queries)
+        defined = {q.name for q in qs}
+        missing: set[str] = set()
+        bad_arity: list[str] = []
+        for q in qs:
+            for a in [q.guard] + q.atoms:
+                if a.rel in defined:
+                    continue
+                rel = self._rels.get(a.rel)
+                if rel is None:
+                    missing.add(a.rel)
+                elif rel.arity != a.arity:
+                    bad_arity.append(
+                        f"{a} (registered arity {rel.arity})"
+                    )
+        if missing:
+            raise CatalogError(
+                f"unregistered relations {sorted(missing)} "
+                f"(resident: {', '.join(sorted(self._rels)) or 'none'})"
+            )
+        if bad_arity:
+            raise CatalogError(f"arity mismatch vs catalog schema: {bad_arity}")
+
+
+def catalog_from_numpy(db_np: Mapping[str, np.ndarray], *, P: int = 8) -> Catalog:
+    cat = Catalog(P=P)
+    cat.register_many(db_np)
+    return cat

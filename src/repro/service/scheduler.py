@@ -1,0 +1,109 @@
+"""Slot-limited list scheduler: W concurrent cluster slots over a job DAG.
+
+The barrier-round executor assumes the cluster can absorb every job of a
+round at once; on a real cluster with W bounded slots a wide round runs
+as ⌈k/W⌉ waves.  This scheduler replaces the executor's round loop for
+service traffic:
+
+* the plan becomes a dependency DAG via :func:`repro.core.planner.job_dag`
+  (strata edges only — rounds stay barriers);
+* each wave admits at most W ready jobs, longest-modeled-cost first (LPT
+  list scheduling, the classic 4/3-approximation, using the slot-aware
+  cost model for ordering);
+* the produced :class:`~repro.core.executor.Report` records both the plan
+  round and the execution wave of every job, and
+  ``Report.net_time_under_slots(W)`` gives the makespan-style net-time
+  accounting.  With ``slots=None`` (W=∞) waves coincide with rounds and
+  the accounting reproduces ``Report.net_time`` exactly.
+
+Jobs still *execute* serially on this container (SimComm serializes shard
+work onto the host — DESIGN.md §8), so wave membership is an accounting
+and admission-order concern, exactly like the round structure before it.
+"""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.core.costmodel import CostConstants, HADOOP, Stats
+from repro.core.executor import Executor, Report
+from repro.core.planner import Plan, job_cost, job_dag
+
+
+@dataclass(frozen=True)
+class ScheduledJob:
+    """Post-hoc schedule entry: which wave ran which plan job."""
+
+    idx: int  # job index in plan order
+    round_idx: int
+    wave: int
+    est_cost: float
+
+
+class SlotScheduler:
+    """Drives an :class:`Executor` job by job under a W-slot budget."""
+
+    def __init__(
+        self,
+        executor: Executor,
+        *,
+        slots: int | None = None,
+        stats: Stats | None = None,
+        consts: CostConstants = HADOOP,
+        model: str = "gumbo",
+    ):
+        if slots is not None and slots < 1:
+            raise ValueError(f"slots must be >= 1 or None (unbounded), got {slots}")
+        self.executor = executor
+        self.slots = slots
+        self.stats = stats
+        self.consts = consts
+        self.model = model
+        self.schedule: list[ScheduledJob] = []
+
+    def _estimate(self, nodes) -> dict[int, float]:
+        """Modeled per-job cost for LPT ordering (0.0 without statistics)."""
+        if self.stats is None:
+            return {n.idx: 0.0 for n in nodes}
+        st = copy.deepcopy(self.stats)
+        # cost in plan order so register_output feeds later rounds, as in
+        # plan_cost; the estimate is an ordering heuristic, not accounting.
+        return {
+            n.idx: job_cost(n.job, st, self.consts, model=self.model) for n in nodes
+        }
+
+    def execute(
+        self, plan: Plan, *, on_job: Callable | None = None
+    ) -> tuple[dict, Report]:
+        nodes = job_dag(plan)
+        est = self._estimate(nodes)
+        report = Report()
+        self.schedule = []
+        done: set[int] = set()
+        pending = list(nodes)
+        wave = 0
+        while pending:
+            ready = [n for n in pending if all(d in done for d in n.deps)]
+            if not ready:
+                raise RuntimeError("job DAG has a cycle (malformed plan)")
+            # LPT: longest modeled job first; plan order breaks ties so the
+            # schedule is deterministic.
+            ready.sort(key=lambda n: (-est[n.idx], n.idx))
+            admitted = ready if self.slots is None else ready[: self.slots]
+            for n in admitted:
+                rec = self.executor.execute_job(
+                    n.job, n.round_idx, report, on_job=on_job
+                )
+                rec.wave = wave
+                self.schedule.append(
+                    ScheduledJob(n.idx, n.round_idx, wave, est[n.idx])
+                )
+                done.add(n.idx)
+            pending = [n for n in pending if n.idx not in done]
+            wave += 1
+        return self.executor.env, report
+
+    @property
+    def n_waves(self) -> int:
+        return 1 + max((s.wave for s in self.schedule), default=-1)

@@ -62,6 +62,75 @@ def test_capacity_fault_retry_path(rng):
     assert any(r.attempts > 1 for r in report.records)
 
 
+def test_probe_backend_validated_eagerly():
+    """A bad probe_backend fails at config construction, listing the valid
+    names, instead of deep inside resolve_probe_backend at job time."""
+    from repro.core.executor import PROBE_BACKENDS, resolve_probe_backend
+
+    with pytest.raises(ValueError, match="sorted, pallas, dense"):
+        ExecutorConfig(probe_backend="bogus")
+    for name in PROBE_BACKENDS:
+        assert ExecutorConfig(probe_backend=name).probe_backend == name
+        assert callable(resolve_probe_backend(name))
+    with pytest.raises(ValueError, match="valid names"):
+        resolve_probe_backend("bogus")
+
+
+def test_overflow_retry_state_machine():
+    """cap_slack < 1 overflow path: the first retry clears the slack (cap
+    stays count-sized), a second overflow doubles the observed capacity,
+    and the attempt count lands on the JobRecord."""
+    from repro.core.planner import MSJJob
+
+    qs = Q.make_queries("A3")
+    db_np = Q.gen_db(qs, n_guard=64, n_cond=64)
+    db = db_from_dict(db_np, P=2)
+    seen = []
+
+    class FlakyExecutor(Executor):
+        def run_job(self, job, *, cap_override=None):
+            outs, stats = super().run_job(job, cap_override=cap_override)
+            if isinstance(job, MSJJob):
+                seen.append((cap_override, self.config.cap_slack))
+                if len(seen) <= 2:  # force overflow on the first two attempts
+                    stats = dict(stats)
+                    stats["overflow"] = 5
+                    stats["forward_cap"] = 2048
+            return outs, stats
+
+    ex = FlakyExecutor(db, SimComm(2), ExecutorConfig(cap_slack=0.5, max_retries=3))
+    env, report = ex.execute(plan_greedy(qs, stats_of_db(db, default_sel=0.5)))
+    msj_recs = [r for r in report.records if isinstance(r.job, MSJJob)]
+    assert [r.attempts for r in msj_recs] == [3]
+    # attempt 1 ran undersized; retry 1 cleared the slack without a cap
+    # override; retry 2 doubled the observed capacity
+    assert seen[0] == (None, 0.5)
+    assert seen[1] == (None, 1.0)
+    assert seen[2] == (4096, 1.0)
+    want = _want(qs, db_np)
+    assert env["Z"].to_set() == want["Z"]
+
+
+def test_overflow_exhausts_retries_raises_capacity_fault():
+    from repro.core.executor import CapacityFault
+    from repro.core.planner import MSJJob
+
+    qs = Q.make_queries("A3")
+    db = db_from_dict(Q.gen_db(qs, n_guard=64, n_cond=64), P=2)
+
+    class AlwaysOverflow(Executor):
+        def run_job(self, job, *, cap_override=None):
+            outs, stats = super().run_job(job, cap_override=cap_override)
+            if isinstance(job, MSJJob):
+                stats = dict(stats)
+                stats["overflow"] = 1
+            return outs, stats
+
+    ex = AlwaysOverflow(db, SimComm(2), ExecutorConfig(cap_slack=0.5, max_retries=1))
+    with pytest.raises(CapacityFault, match="overflow"):
+        ex.execute(plan_greedy(qs, stats_of_db(db)))
+
+
 def test_elastic_repartition_preserves_results(rng):
     qs = Q.make_queries("A1")
     db_np = Q.gen_db(qs, n_guard=200, n_cond=200)

@@ -1,0 +1,312 @@
+"""Service-layer tests: catalog, canonical plan cache, cross-tenant MSJ
+batching, and the W-slot scheduler (DESIGN.md §9)."""
+import numpy as np
+import pytest
+
+from repro.core import queries as Q, ref_engine
+from repro.core.algebra import Atom, BSGF, all_of
+from repro.core.costmodel import HADOOP, lpt_makespan, stats_of_db
+from repro.core.executor import Executor
+from repro.core.planner import MSJJob, job_dag, plan_cost, plan_greedy, plan_par
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+from repro.service import (
+    Catalog,
+    CatalogError,
+    SGFService,
+    catalog_from_numpy,
+    fingerprint_queries,
+    fuse_requests,
+    QueryRequest,
+)
+from repro.service.scheduler import SlotScheduler
+
+XYZW = ("x", "y", "z", "w")
+P = 4
+
+
+def _star(name, guard, conds):
+    return BSGF(name, XYZW, Atom(guard, *XYZW), all_of(*conds))
+
+
+def tenant_query(t: int) -> BSGF:
+    """Mixed A-family pool over shared base relations: A1-style stars on R,
+    A3-style key-shared stars, and A5-style cross-guard name sharing."""
+    guard = "R" if t % 2 == 0 else "G"
+    if t % 3 == 1:
+        conds = [Atom(r, "x") for r in "STUV"]  # A3: all atoms key x
+    else:
+        conds = [Atom(r, v) for r, v in zip("STUV", XYZW)]  # A1/A5
+    return _star("Z", guard, conds)
+
+
+def mixed_workload(n_tenants: int, *, n: int = 256):
+    tenants = [[tenant_query(t)] for t in range(n_tenants)]
+    db_np = Q.gen_db([q for qs in tenants for q in qs], n_guard=n, n_cond=n)
+    return tenants, db_np
+
+
+# --------------------------------------------------------------------------
+# catalog
+# --------------------------------------------------------------------------
+
+
+def test_catalog_register_lookup_stats(rng):
+    cat = Catalog(P=2)
+    cat.register("R", rng.integers(0, 8, (10, 2)).astype(np.int32))
+    cat.register("S", [(1,), (2,), (3,)])
+    assert "R" in cat and "S" in cat and len(cat) == 2
+    assert cat.get("R").P == 2
+    st = cat.stats()
+    assert st.rel("R").rows == 10.0 and st.rel("S").arity == 1
+    epoch = cat.epoch
+    cat.set_selectivity("R", "S", 0.25)
+    assert cat.epoch > epoch
+    assert cat.stats().sel[("R", "S")] == 0.25
+
+
+def test_catalog_rejects_reserved_canonical_names():
+    """A catalog relation named q<i>/v<i> would alias a fused query's
+    canonical output in the shared execution environment."""
+    cat = Catalog(P=2)
+    for bad in ("q0", "q17", "v3"):
+        with pytest.raises(ValueError, match="reserved"):
+            cat.register(bad, [(1,)])
+    cat.register("query0", [(1,)])  # only the exact q<i>/v<i> shape is reserved
+    cat.register("v", [(1,)])
+
+
+def test_catalog_stats_memoized_on_epoch():
+    cat = Catalog(P=2)
+    cat.register("R", [(1, 2), (3, 4)])
+    st1 = cat.stats()
+    assert cat.stats() is st1  # same epoch -> cached object
+    cat.register("S", [(1,)])
+    st2 = cat.stats()
+    assert st2 is not st1 and st2.rel("S").rows == 1.0
+
+
+def test_catalog_missing_relation_error():
+    cat = Catalog(P=2)
+    cat.register("R", [(1, 2)])
+    with pytest.raises(CatalogError, match="nope"):
+        cat.get("nope")
+    q = BSGF("Z", ("x",), Atom("R", "x", "y"), Atom("S", "x"))
+    with pytest.raises(CatalogError, match="'S'"):
+        cat.validate([q])
+    svc = SGFService(cat, comm=SimComm(2))
+    with pytest.raises(CatalogError):
+        svc.submit([q])
+
+
+def test_catalog_validates_arity_against_schema():
+    """An atom using a resident relation at the wrong arity must error, not
+    silently scan garbage columns."""
+    cat = Catalog(P=2)
+    cat.register("R", [(1, 2), (3, 4)])
+    cat.register("S", [(1,)])
+    with pytest.raises(CatalogError, match="arity mismatch"):
+        cat.validate([BSGF("Z", ("x",), Atom("R", "x"), Atom("S", "x"))])
+    # intermediate outputs of the same batch are exempt (not catalog schema)
+    q1 = BSGF("Z1", ("x", "y"), Atom("R", "x", "y"), Atom("S", "x"))
+    q2 = BSGF("Z2", ("x",), Atom("Z1", "x", "y"), None)
+    cat.validate([q1, q2])
+
+
+def test_submit_rejects_duplicate_names_and_tick_requeues_on_failure():
+    tenants, db_np = mixed_workload(2, n=64)
+    svc = SGFService(catalog_from_numpy(db_np, P=2), comm=SimComm(2))
+    q = tenants[0][0]
+    with pytest.raises(ValueError, match="duplicate output names"):
+        svc.submit([q, q])
+    # a failing tick must not lose the co-admitted requests
+    svc.submit(tenants[0])
+    svc.submit(tenants[1])
+    boom = RuntimeError("injected planner failure")
+    svc._plan_batch = lambda batch: (_ for _ in ()).throw(boom)
+    with pytest.raises(RuntimeError, match="injected planner"):
+        svc.tick()
+    assert len(svc.batcher) == 2  # both requests back in FIFO order
+    assert svc.batcher.queue[0].rid < svc.batcher.queue[1].rid
+
+
+# --------------------------------------------------------------------------
+# canonical fingerprint + fusion
+# --------------------------------------------------------------------------
+
+
+def test_fingerprint_alpha_equivalence():
+    q1 = BSGF("Z", ("x", "y"), Atom("R", "x", "y"), Atom("S", "x"))
+    q2 = BSGF("Out", ("a", "b"), Atom("R", "a", "b"), Atom("S", "a"))  # renamed
+    q3 = BSGF("Z", ("y", "x"), Atom("R", "x", "y"), Atom("S", "x"))  # out order
+    q4 = BSGF("Z", ("x", "y"), Atom("R", "x", "y"), Atom("S", "y"))  # key var
+    assert fingerprint_queries([q1]) == fingerprint_queries([q2])
+    assert fingerprint_queries([q1]) != fingerprint_queries([q3])
+    assert fingerprint_queries([q1]) != fingerprint_queries([q4])
+    # constants are part of the structure
+    q5 = BSGF("Z", ("x",), Atom("R", "x", 3), Atom("S", "x"))
+    q6 = BSGF("Z", ("x",), Atom("R", "x", 4), Atom("S", "x"))
+    assert fingerprint_queries([q5]) != fingerprint_queries([q6])
+
+
+def test_fuse_dedups_structurally_equal_queries():
+    qa = BSGF("Z", ("x",), Atom("R", "x", "y"), Atom("S", "x"))
+    qb = BSGF("MyZ", ("u",), Atom("R", "u", "v"), Atom("S", "u"))  # same query
+    qc = BSGF("Z", ("y",), Atom("R", "x", "y"), Atom("S", "x"))  # different
+    batch = fuse_requests(
+        [QueryRequest(0, (qa,)), QueryRequest(1, (qb,)), QueryRequest(2, (qc,))]
+    )
+    assert len(batch.queries) == 2 and batch.n_deduped == 1
+    assert batch.out_map[(0, "Z")] == batch.out_map[(1, "MyZ")]
+    assert batch.out_map[(2, "Z")] != batch.out_map[(0, "Z")]
+
+
+# --------------------------------------------------------------------------
+# batched service vs sequential (the acceptance criterion)
+# --------------------------------------------------------------------------
+
+
+def test_batched_service_matches_sequential_with_fewer_jobs_and_bytes():
+    tenants, db_np = mixed_workload(8)
+    db = db_from_dict(db_np, P=P)
+
+    seq_msj_jobs = seq_jobs = seq_bytes = 0
+    want = []
+    for qs in tenants:
+        ex = Executor(dict(db), SimComm(P))
+        env, rep = ex.execute(plan_greedy(qs, stats_of_db(db)))
+        seq_jobs += rep.n_jobs
+        seq_msj_jobs += sum(isinstance(r.job, MSJJob) for r in rep.records)
+        seq_bytes += rep.bytes_shuffled()
+        want.append({q.name: env[q.name].to_set() for q in qs})
+
+    svc = SGFService(catalog_from_numpy(db_np, P=P))
+    reqs = [svc.submit(qs) for qs in tenants]
+    done = svc.tick()
+    assert len(done) == len(tenants) and all(r.done for r in reqs)
+
+    rep = svc.last_report
+    bat_msj_jobs = sum(isinstance(r.job, MSJJob) for r in rep.records)
+    # bit-identical outputs, scattered back under tenant names
+    for req, w in zip(reqs, want):
+        for name, rows in w.items():
+            assert req.outputs[name].to_set() == rows
+    # oracle double-check
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    for req, qs in zip(reqs, tenants):
+        for q in qs:
+            assert req.outputs[q.name].to_set() == ref_engine.eval_bsgf(setdb, q)
+    # strictly fewer MSJ jobs and fewer shuffled bytes than per-query runs
+    assert bat_msj_jobs < seq_msj_jobs
+    assert rep.n_jobs < seq_jobs
+    assert rep.bytes_shuffled() < seq_bytes
+
+
+def test_service_sgf_request_with_dependencies(rng):
+    q1 = _star("Z1", "G1", [Atom("S", "x"), Atom("T", "y")])
+    q2 = BSGF("Z2", XYZW, Atom("Z1", *XYZW), all_of(Atom("U", "z")))
+    db_np = Q.gen_db([q1, q2], n_guard=128, n_cond=128)
+    svc = SGFService(catalog_from_numpy(db_np, P=2), comm=SimComm(2))
+    req = svc.submit([q1, q2])
+    svc.tick()
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    want1 = ref_engine.eval_bsgf(setdb, q1)
+    setdb["Z1"] = want1
+    want2 = ref_engine.eval_bsgf(setdb, q2)
+    assert req.outputs["Z1"].to_set() == want1
+    assert req.outputs["Z2"].to_set() == want2
+    # the dependency forces two strata: Z1's plan rounds before Z2's
+    assert svc.last_report.net_time_under_slots(None) == svc.last_report.net_time
+
+
+def test_plan_cache_hit_skips_planning():
+    tenants, db_np = mixed_workload(4, n=128)
+    svc = SGFService(catalog_from_numpy(db_np, P=2), comm=SimComm(2))
+    plans = []
+    inner = svc._plan_batch
+    svc._plan_batch = lambda batch: plans.append(batch) or inner(batch)
+    for _ in range(3):
+        for qs in tenants:
+            svc.submit(qs)
+        svc.tick()
+    assert len(plans) == 1  # planned once, reused twice
+    assert svc.cache.counters()["hits"] == 2
+    assert svc.cache.counters()["misses"] == 1
+    # catalog change invalidates the cached plan
+    svc.catalog.register("S", db_np["S"])
+    for qs in tenants:
+        svc.submit(qs)
+    svc.tick()
+    assert len(plans) == 2 and svc.cache.counters()["misses"] == 2
+
+
+# --------------------------------------------------------------------------
+# slot scheduler
+# --------------------------------------------------------------------------
+
+
+def test_job_dag_strata_edges():
+    qs = Q.make_queries("A1")
+    plan = plan_par(qs)  # 4 MSJ jobs then 1 EVAL job
+    nodes = job_dag(plan)
+    assert [n.deps for n in nodes[:4]] == [()] * 4
+    assert nodes[4].deps == (0, 1, 2, 3)
+
+
+def test_scheduler_w_inf_reproduces_rounds_and_net_time():
+    qs = Q.make_queries("A1")
+    db_np = Q.gen_db(qs, n_guard=128, n_cond=128)
+    db = db_from_dict(db_np, P=2)
+    plan = plan_par(qs)
+    env0, rep0 = Executor(dict(db), SimComm(2)).execute(plan)
+    # accounting: W=∞ is exactly the barrier-round net time
+    assert rep0.net_time_under_slots(None) == rep0.net_time
+    assert rep0.net_time_under_slots(1) == pytest.approx(rep0.total_time)
+    sched = SlotScheduler(Executor(dict(db), SimComm(2)), stats=stats_of_db(db))
+    env1, rep1 = sched.execute(plan)
+    assert env1["Z"].to_set() == env0["Z"].to_set()
+    assert [s.wave for s in sched.schedule] == [s.round_idx for s in sched.schedule]
+    assert sched.n_waves == plan.n_rounds
+    assert rep1.net_time_under_slots(None) == rep1.net_time
+
+
+def test_scheduler_slot_limit_splits_rounds():
+    qs = Q.make_queries("A1")
+    db_np = Q.gen_db(qs, n_guard=128, n_cond=128)
+    db = db_from_dict(db_np, P=2)
+    plan = plan_par(qs)  # round 0 has 4 jobs
+    sched = SlotScheduler(
+        Executor(dict(db), SimComm(2)), slots=2, stats=stats_of_db(db)
+    )
+    env, rep = sched.execute(plan)
+    assert sched.n_waves == 3  # ceil(4/2) + 1
+    # LPT admission: wave 0 runs the largest modeled jobs
+    w0 = [s.est_cost for s in sched.schedule if s.wave == 0]
+    w1 = [s.est_cost for s in sched.schedule if s.wave == 1]
+    assert min(w0) >= max(w1) - 1e-9
+    # a job never starts before its strata deps are done
+    assert all(s.wave >= 2 for s in sched.schedule if s.round_idx == 1)
+    want = ref_engine.eval_bsgf(
+        {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}, qs[0]
+    )
+    assert env["Z"].to_set() == want
+    with pytest.raises(ValueError):
+        SlotScheduler(Executor(dict(db), SimComm(2)), slots=0)
+
+
+def test_slot_aware_modeled_cost():
+    assert lpt_makespan([], 2) == 0.0
+    assert lpt_makespan([3.0, 2.0, 2.0, 1.0], 2) == 4.0
+    assert lpt_makespan([3.0, 2.0, 2.0, 1.0], None) == 3.0
+    with pytest.raises(ValueError):
+        lpt_makespan([1.0, 1.0], 0)
+    qs = Q.make_queries("A1")
+    db = db_from_dict(Q.gen_db(qs, n_guard=128, n_cond=128), P=2)
+    stats = stats_of_db(db)
+    plan = plan_par(qs)
+    c_inf = plan_cost(plan, stats, HADOOP)
+    c_two = plan_cost(plan, stats, HADOOP, slots=2)
+    c_one = plan_cost(plan, stats, HADOOP, slots=1)
+    assert c_inf["net"] <= c_two["net"] <= c_one["net"]
+    assert c_one["net"] == pytest.approx(c_one["total"])
+    assert c_inf["total"] == c_one["total"] == c_two["total"]

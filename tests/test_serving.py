@@ -85,7 +85,10 @@ def test_hlo_analyzer_trip_counts():
     costs = analyze_hlo(c.as_text())
     expected = L * 2 * N**3
     assert abs(costs.flops - expected) / expected < 0.05
-    xla_flops = c.cost_analysis().get("flops", 0)
+    ca = c.cost_analysis()
+    if isinstance(ca, list):  # jax < 0.5 returns one dict per partition
+        ca = ca[0]
+    xla_flops = ca.get("flops", 0)
     assert xla_flops < 0.5 * expected  # XLA undercounts scans
 
 
