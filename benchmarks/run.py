@@ -96,14 +96,21 @@ def main(argv=None) -> None:
     if args.json and not args.skip_serve:
         # the service ladder joins the perf trajectory alongside BENCH_msj
         params = service_throughput.ladder_params(args.quick)
+        repeat_ticks = params.pop("repeat_ticks")
         srv_rows = service_throughput.run(**params)
         print("# service_throughput (sequential vs batched service):")
         print("# " + ",".join(service_throughput.COLS))
         for r in srv_rows:
             print("# " + ",".join(str(r[c]) for c in service_throughput.COLS),
                   flush=True)
+        repeat_rows = service_throughput.repeat_traffic(
+            n_guard=params["n_guard"], n_cond=params["n_cond"],
+            ticks=repeat_ticks,
+        )
+        acceptance = service_throughput.acceptance_checks()
         service_throughput.write_json(
-            "BENCH_serve.json", srv_rows, n_guard=params["n_guard"]
+            "BENCH_serve.json", srv_rows, repeat_rows, acceptance,
+            n_guard=params["n_guard"]
         )
 
 

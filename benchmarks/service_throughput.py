@@ -1,15 +1,28 @@
-"""Service throughput: per-query-sequential vs batched-service execution.
+"""Service throughput: sequential vs batched vs cache-warm execution,
+plus a repeat-traffic ladder over the cross-tick result cache.
 
-A tenants × queries ladder over a mixed A-family workload (shared base
-relations, varying guards and key patterns).  For each ladder point we
-report jobs, shuffled bytes, and net/total time for
+Part 1 (tenants ladder) — a tenants × queries ladder over a mixed
+A-family workload (shared base relations, varying guards and key
+patterns).  For each point we report jobs, shuffled bytes, and net/total
+time for
 
-* ``sequential`` — every tenant's query planned (GREEDY) and executed on
-  its own executor, one after another (today's single-workload path);
-* ``batched``   — all tenants admitted to the SGF service and evaluated
-  in one fused multi-tenant plan on the W-slot scheduler;
-* ``batched_warm`` — the same workload resubmitted, hitting the plan
-  cache (planning skipped, jit executables reused).
+* ``sequential``   — every tenant's query planned (GREEDY) and executed on
+  its own executor, one after another (the single-workload path);
+* ``batched``      — all tenants admitted to the SGF service and evaluated
+  in one fused multi-tenant plan on the W-slot scheduler (cold);
+* ``batched_warm`` — the same workload resubmitted: every canonical query
+  is served from the cross-tick result cache — **0 jobs, 0 bytes**.
+
+Part 2 (repeat traffic) — Zipf-skewed tenant traffic over a pool of
+distinct query shapes, run for several ticks against the same service,
+with the result cache disabled (``repeat_cold``) and enabled
+(``repeat_cached``).  Skewed repeat traffic is where the cache pays:
+jobs/bytes/net-time drop roughly by the repeat fraction of the stream.
+
+The JSON written by ``--json`` also carries an ``acceptance`` block: the
+warm tick runs 0 jobs / 0 bytes with bit-identical outputs, and an
+unrelated catalog registration leaves plans and results warm
+(per-relation epochs observable under ``rel_epochs``).
 
 Run:  PYTHONPATH=src python -m benchmarks.service_throughput [--quick]
       [--json BENCH_serve.json] [--slots W]
@@ -20,6 +33,8 @@ import argparse
 import json
 import sys
 import time
+
+import numpy as np
 
 from repro.core import queries as Q
 from repro.core.algebra import Atom, BSGF, all_of
@@ -44,6 +59,20 @@ def tenant_queries(t: int, per_tenant: int) -> list[BSGF]:
         else:
             conds = [Atom(r, "x") for r in "STUV"]  # A3 style (key sharing)
         out.append(BSGF(f"Z{j}", XYZW, Atom(guard, *XYZW), all_of(*conds)))
+    return out
+
+
+def query_pool(n_shapes: int = 6) -> list[BSGF]:
+    """Distinct canonical query shapes the repeat-traffic stream draws
+    from (guard × key-pattern combinations over the shared relations)."""
+    out = []
+    for i in range(n_shapes):
+        guard = ("R", "G", "H")[i % 3]
+        if i % 2 == 0:
+            conds = [Atom(r, v) for r, v in zip("STUV", XYZW)]
+        else:
+            conds = [Atom(r, "x") for r in "STUV"]
+        out.append(BSGF("Z", XYZW, Atom(guard, *XYZW), all_of(*conds)))
     return out
 
 
@@ -89,11 +118,11 @@ def run(
                 jobs=jobs, msj_jobs=msj, bytes_shuffled=nbytes,
                 net_s=round(net, 4), total_s=round(total, 4),
                 wall_s=round(time.perf_counter() - t0, 4),
-                cache_hits=0, deduped=0,
+                cache_hits=0, deduped=0, warm_queries=0,
             )
         )
 
-        # -- batched service (cold: plans + jit traces) --------------------
+        # -- batched service: cold tick, then a fully-warm repeat ----------
         svc = SGFService(
             catalog_from_numpy(db_np, P=P), slots=slots, max_admit=n_tenants
         )
@@ -111,18 +140,149 @@ def run(
                     tenants=n_tenants, per_tenant=per_tenant, mode=mode,
                     jobs=rep.n_jobs, msj_jobs=_msj_jobs(rep),
                     bytes_shuffled=rep.bytes_shuffled(),
-                    net_s=round(rep.net_time_under_slots(slots), 4),
+                    net_s=round(svc._net_time(rep), 4),
                     total_s=round(rep.total_time, 4),
                     wall_s=round(wall, 4),
                     cache_hits=svc.cache.hits,
                     deduped=svc.last_batch.n_deduped,
+                    warm_queries=svc.last_tick["warm_queries"],
                 )
             )
+        assert rows[-1]["jobs"] == 0 and rows[-1]["bytes_shuffled"] == 0, (
+            "fully-repeated tick must be served entirely from the result cache"
+        )
     return rows
 
 
+def repeat_traffic(
+    *,
+    n_guard: int = 2048,
+    n_cond: int = 2048,
+    P: int = DEFAULT_P,
+    slots: int | None = None,
+    ticks: int = 6,
+    tenants_per_tick: int = 8,
+    zipf_a: float = 1.2,
+    seed: int = 0,
+) -> list[dict]:
+    """Zipf-skewed repeat traffic, result cache off vs on.
+
+    The same pre-drawn request stream is replayed against both services,
+    and the per-request outputs are asserted identical — the cached run
+    must be observationally indistinguishable except for doing less work.
+    """
+    pool = query_pool()
+    db_np = Q.gen_db(pool, n_guard=n_guard, n_cond=n_cond)
+    rng = np.random.default_rng(seed)
+    probs = np.arange(1, len(pool) + 1, dtype=float) ** -zipf_a
+    probs /= probs.sum()
+    draws = [
+        rng.choice(len(pool), size=tenants_per_tick, p=probs) for _ in range(ticks)
+    ]
+
+    # warm jit executable caches by replaying the exact draw stream once
+    # (per-tick subset batches fuse into different plan shapes than one
+    # all-pool batch would), so the timed cold-vs-cached comparison
+    # measures the result cache, not which mode pays the tracing
+    warmup = SGFService(
+        catalog_from_numpy(db_np, P=P), slots=slots,
+        max_admit=tenants_per_tick, result_cache_capacity=0,
+    )
+    for tick_draws in draws:
+        for k in tick_draws:
+            warmup.submit([pool[k]])
+        warmup.tick()
+
+    rows: list[dict] = []
+    outputs: dict[str, list] = {}
+    for mode, cap in (("repeat_cold", 0), ("repeat_cached", 256)):
+        svc = SGFService(
+            catalog_from_numpy(db_np, P=P), slots=slots,
+            max_admit=tenants_per_tick, result_cache_capacity=cap,
+        )
+        outs = []
+        t0 = time.perf_counter()
+        for tick_draws in draws:
+            reqs = [svc.submit([pool[k]]) for k in tick_draws]
+            svc.tick()
+            outs.extend(req.outputs["Z"].to_set() for req in reqs)
+        wall = time.perf_counter() - t0
+        outputs[mode] = outs
+        c = svc.counters()
+        rows.append(
+            dict(
+                mode=mode, ticks=ticks, tenants_per_tick=tenants_per_tick,
+                zipf_a=zipf_a, jobs=c["jobs"],
+                bytes_shuffled=c["bytes_shuffled"],
+                net_s=round(c["net_time"], 4), total_s=round(c["total_time"], 4),
+                wall_s=round(wall, 4), warm_queries=c["warm_queries"],
+                cold_queries=c["cold_queries"], x_hits=c["x_hits"],
+                plan_hits=c["hits"],
+            )
+        )
+    assert outputs["repeat_cold"] == outputs["repeat_cached"], (
+        "result cache changed observable outputs"
+    )
+    return rows
+
+
+def acceptance_checks(
+    *, n_guard: int = 512, n_cond: int = 512, P: int = DEFAULT_P,
+    slots: int | None = None,
+) -> dict:
+    """The ISSUE-3 acceptance criteria, machine-checked into the JSON."""
+    pool = query_pool()
+    db_np = Q.gen_db(pool, n_guard=n_guard, n_cond=n_cond)
+    svc = SGFService(catalog_from_numpy(db_np, P=P), slots=slots)
+    cold = [svc.submit([q]) for q in pool]
+    svc.tick()
+    warm = [svc.submit([q]) for q in pool]
+    svc.tick()
+    rep = svc.last_report
+    warm_zero = rep.n_jobs == 0 and rep.bytes_shuffled() == 0
+    bit_identical = all(
+        w.outputs["Z"].data is c.outputs["Z"].data
+        and w.outputs["Z"].to_set() == c.outputs["Z"].to_set()
+        for w, c in zip(warm, cold)
+    )
+    svc.catalog.register("BYSTANDER", np.asarray([[1, 2, 3, 4]], np.int32))
+    for q in pool:
+        svc.submit([q])
+    svc.tick()
+    results_survive = svc.last_report.n_jobs == 0
+    # the plan-cache half of the claim needs the result cache out of the
+    # way, or the warm tick never consults the plan cache at all
+    svc2 = SGFService(
+        catalog_from_numpy(db_np, P=P), slots=slots, result_cache_capacity=0
+    )
+    for q in pool:
+        svc2.submit([q])
+    svc2.tick()
+    plan_misses = svc2.cache.misses
+    svc2.catalog.register("BYSTANDER", np.asarray([[1, 2, 3, 4]], np.int32))
+    for q in pool:
+        svc2.submit([q])
+    svc2.tick()
+    plans_survive = (
+        svc2.cache.misses == plan_misses and svc2.cache.hits == 1
+    )
+    unrelated_ok = results_survive and plans_survive
+    return {
+        "warm_tick_zero_jobs_zero_bytes": bool(warm_zero),
+        "warm_bit_identical_to_cold": bool(bit_identical),
+        "unrelated_register_keeps_cache": bool(unrelated_ok),
+        "rel_epochs": dict(svc.catalog.rel_epochs),
+        "plan_cache": svc.cache.counters(),
+        "result_cache": svc.results.counters(),
+    }
+
+
 COLS = ("tenants", "per_tenant", "mode", "jobs", "msj_jobs", "bytes_shuffled",
-        "net_s", "total_s", "wall_s", "cache_hits", "deduped")
+        "net_s", "total_s", "wall_s", "cache_hits", "deduped", "warm_queries")
+
+REPEAT_COLS = ("mode", "ticks", "tenants_per_tick", "zipf_a", "jobs",
+               "bytes_shuffled", "net_s", "total_s", "wall_s", "warm_queries",
+               "cold_queries", "x_hits", "plan_hits")
 
 
 def ladder_params(quick: bool) -> dict:
@@ -133,14 +293,18 @@ def ladder_params(quick: bool) -> dict:
         tenants_ladder=(2, 4, 8) if quick else (2, 4, 8, 16),
         n_guard=n,
         n_cond=n,
+        repeat_ticks=4 if quick else 6,
     )
 
 
-def write_json(path: str, rows: list[dict], *, n_guard: int,
+def write_json(path: str, rows: list[dict], repeat_rows: list[dict],
+               acceptance: dict, *, n_guard: int,
                slots: int | None = None) -> None:
     with open(path, "w") as f:
         json.dump({"n_guard": n_guard, "slots": slots,
-                   "service_throughput": rows}, f, indent=2)
+                   "service_throughput": rows,
+                   "repeat_traffic": repeat_rows,
+                   "acceptance": acceptance}, f, indent=2)
     print(f"# wrote {path}", file=sys.stderr)
 
 
@@ -154,13 +318,25 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     params = ladder_params(args.quick)
     t0 = time.time()
+    repeat_ticks = params.pop("repeat_ticks")
     rows = run(slots=args.slots, **params)
     print(",".join(COLS))
     for r in rows:
         print(",".join(str(r[c]) for c in COLS), flush=True)
+    repeat_rows = repeat_traffic(
+        n_guard=params["n_guard"], n_cond=params["n_cond"],
+        slots=args.slots, ticks=repeat_ticks,
+    )
+    print(",".join(REPEAT_COLS))
+    for r in repeat_rows:
+        print(",".join(str(r[c]) for c in REPEAT_COLS), flush=True)
+    acceptance = acceptance_checks(slots=args.slots)
+    print(f"# acceptance: { {k: v for k, v in acceptance.items() if isinstance(v, bool)} }",
+          file=sys.stderr)
     print(f"# service_throughput done in {time.time()-t0:.1f}s", file=sys.stderr)
     if args.json:
-        write_json(args.json, rows, n_guard=params["n_guard"], slots=args.slots)
+        write_json(args.json, rows, repeat_rows, acceptance,
+                   n_guard=params["n_guard"], slots=args.slots)
 
 
 if __name__ == "__main__":

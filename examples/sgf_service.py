@@ -1,10 +1,13 @@
-"""Quickstart for the SGF query service (DESIGN.md §9).
+"""Quickstart for the SGF query service (DESIGN.md §9–§10).
 
 Eight tenants submit mixed A-family queries against catalog-resident
 relations; the service fuses each tick's admissions into one multi-tenant
 plan (canonical dedup + cross-tenant semi-join pooling), caches the plan
 by canonical fingerprint, and runs it on a W-slot scheduler.  A second
-round of the same traffic hits the plan cache.
+round of the same traffic is served entirely from the cross-tick result
+cache — zero jobs, zero shuffled bytes — and per-relation epochs keep the
+cache warm across unrelated catalog registrations while invalidating
+exactly the queries that read a re-registered relation.
 
 Run:  PYTHONPATH=src python examples/sgf_service.py
 """
@@ -53,10 +56,39 @@ for req, q in zip(requests, workload):
     assert req.outputs["Z"].to_set() == ref_engine.eval_bsgf(setdb, q)
 print("all tenant outputs agree with the oracle ✓")
 
-# 4. the same traffic again: plan-cache hit, no re-planning or re-tracing
+# 4. the same traffic again: every canonical query is warm in the result
+#    cache — the tick runs zero jobs and shuffles zero bytes
+warm_reqs = [svc.submit([q]) for q in workload]
+svc.tick()
+rep = svc.last_report
+print(
+    f"tick 2: {svc.last_tick['warm_queries']} warm / "
+    f"{svc.last_tick['cold_queries']} cold -> {rep.n_jobs} jobs, "
+    f"{rep.bytes_shuffled()} bytes shuffled"
+)
+assert rep.n_jobs == 0 and rep.bytes_shuffled() == 0
+for req, q in zip(warm_reqs, workload):
+    assert req.outputs["Z"].to_set() == ref_engine.eval_bsgf(setdb, q)
+
+# 5. per-relation epochs: registering an unrelated relation keeps every
+#    cached plan and result warm ...
+svc.catalog.register("BYSTANDER", np.asarray([[0, 0]], np.int32))
 for q in workload:
     svc.submit([q])
 svc.tick()
-print(f"tick 2: plan cache {svc.cache.counters()}")
-assert svc.cache.hits == 1
+print(f"tick 3 (unrelated register): {svc.last_report.n_jobs} jobs")
+assert svc.last_report.n_jobs == 0
+
+# ... while re-registering a relation the queries actually read
+# invalidates exactly its readers (here: every query conditions on S)
+svc.catalog.register("S", db_np["S"])
+for q in workload:
+    svc.submit([q])
+svc.tick()
+print(
+    f"tick 4 (S re-registered): {svc.last_tick['cold_queries']} cold, "
+    f"{svc.last_tick['x_injected']} X_i served warm, "
+    f"{svc.last_report.n_jobs} jobs"
+)
+assert svc.last_tick["cold_queries"] == len(svc.last_batch.queries)
 print(f"service counters: {svc.counters()}")

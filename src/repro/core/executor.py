@@ -80,6 +80,21 @@ class Report:
             by_round.setdefault(r.round_idx, []).append(r.wall)
         return sum(lpt_makespan(ws, slots) for ws in by_round.values())
 
+    def net_time_by_wave(self) -> float | None:
+        """Net time of the schedule that actually ran: max wall per
+        recorded execution wave, summed.  Unlike re-deriving an LPT
+        makespan from per-round walls, this cannot disagree with the
+        waves the slot scheduler admitted.  ``None`` when any record
+        lacks wave info (barrier-round executor); 0.0 for an empty
+        report (a fully warm service tick runs no jobs).
+        """
+        if any(r.wave < 0 for r in self.records):
+            return None
+        by_wave: dict[int, float] = {}
+        for r in self.records:
+            by_wave[r.wave] = max(by_wave.get(r.wave, 0.0), r.wall)
+        return sum(by_wave.values())
+
     def bytes_shuffled(self) -> int:
         return int(
             sum(r.stats.get("bytes_fwd", 0) + r.stats.get("bytes_bwd", 0) for r in self.records)
@@ -199,7 +214,13 @@ class Executor:
         self.config = config or ExecutorConfig()
 
     # -- single jobs -------------------------------------------------------
-    def run_job(self, job: Job, *, cap_override: int | None = None) -> tuple[dict, dict]:
+    def run_job(
+        self,
+        job: Job,
+        *,
+        cap_override: int | None = None,
+        cap_slack: float | None = None,
+    ) -> tuple[dict, dict]:
         if isinstance(job, MSJJob):
             fused = tuple(_fused_query_of(q, job) for q in job.fused)
             outs, stats = run_msj(
@@ -213,7 +234,7 @@ class Executor:
                 probe_fn=resolve_probe_backend(self.config.probe_backend),
                 fingerprint=self.config.fingerprint,
                 count_sized=self.config.count_sized,
-                cap_slack=self.config.cap_slack,
+                cap_slack=self.config.cap_slack if cap_slack is None else cap_slack,
             )
             stats["input_rows"] = sum(
                 int(self.env[r].count()) for r in _msj_input_rels(job, self.env)
@@ -239,11 +260,15 @@ class Executor:
         """Run with overflow-retry (the executor-level fault path)."""
         attempts = 0
         cap = None
+        # slack relaxation is scoped to THIS job: replacing self.config here
+        # would permanently drop deliberate undersizing (cap_slack < 1) for
+        # every later job and plan after a single overflow
+        slack: float | None = None
         while True:
             attempts += 1
             if on_job is not None:
                 on_job(job, attempts)
-            outs, stats = self.run_job(job, cap_override=cap)
+            outs, stats = self.run_job(job, cap_override=cap, cap_slack=slack)
             ovf = int(stats.get("overflow", 0))
             if ovf == 0:
                 return outs, stats, attempts
@@ -252,11 +277,10 @@ class Executor:
             # first retry drops any deliberate undersizing (cap_slack < 1)
             # and re-sizes from counts / the worst-case bound; if that still
             # overflows (stale counts), double the observed capacity
-            if self.config.cap_slack < 1.0:
+            effective = self.config.cap_slack if slack is None else slack
+            if effective < 1.0:
                 cap = None
-                self.config = ExecutorConfig(
-                    **{**self.config.__dict__, "cap_slack": 1.0}
-                )
+                slack = 1.0
             else:
                 used = int(stats.get("forward_cap", 0))
                 cap = max(used, 1) * 2

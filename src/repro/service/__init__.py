@@ -1,11 +1,12 @@
 """SGF query service: relation catalog, plan/executable cache, cross-query
 MSJ batching, and a slot-limited scheduler (DESIGN.md §9).
 
-Dataflow: ``Catalog`` (resident relations + stats) → ``SGFService.submit``
-(admission queue) → ``fuse_requests`` (canonicalize + dedup into one
-multi-tenant batch) → ``PlanCache`` (fingerprint-keyed plans) →
-``SlotScheduler`` (W-slot waves over the job DAG) → per-request output
-scatter.
+Dataflow: ``Catalog`` (resident relations + stats, per-relation epochs) →
+``SGFService.submit`` (admission queue) → ``fuse_requests`` (canonicalize
++ dedup into one multi-tenant batch) → ``ResultCache`` (warm queries
+served by scatter, zero jobs) → ``PlanCache`` (fingerprint-keyed plans
+for the cold remainder) → ``SlotScheduler`` (W-slot waves over the job
+DAG) → per-request output scatter.
 """
 from repro.service.batcher import (
     AdmissionBatcher,
@@ -14,8 +15,9 @@ from repro.service.batcher import (
     SGFService,
     fuse_requests,
 )
-from repro.service.catalog import Catalog, CatalogError, catalog_from_numpy
+from repro.service.catalog import Catalog, CatalogError, catalog_from_numpy, query_deps
 from repro.service.plan_cache import PlanCache, canonicalize, fingerprint_queries
+from repro.service.result_cache import ResultCache, xmat_content_key
 from repro.service.scheduler import SlotScheduler
 
 __all__ = [
@@ -25,10 +27,13 @@ __all__ = [
     "FusedBatch",
     "PlanCache",
     "QueryRequest",
+    "ResultCache",
     "SGFService",
     "SlotScheduler",
     "canonicalize",
     "catalog_from_numpy",
     "fingerprint_queries",
     "fuse_requests",
+    "query_deps",
+    "xmat_content_key",
 ]

@@ -16,20 +16,27 @@ pays off across tenants:
 * per-request outputs are scattered back by request id from the fused
   environment.
 
-Plans are cached by canonical fingerprint (plan_cache.py) and executed
-on the W-slot scheduler (scheduler.py) over catalog-resident relations
-(catalog.py).
+Plans are cached by canonical fingerprint (plan_cache.py); materialized
+results and EVAL inputs are cached across ticks (result_cache.py) keyed
+by per-relation catalog epochs, so each tick partitions its fused batch
+into *warm* queries (served by scatter — zero jobs, zero shuffled bytes)
+and *cold* queries (planned and executed, results inserted on
+completion).  Execution runs on the W-slot scheduler (scheduler.py) over
+catalog-resident relations (catalog.py).  DESIGN.md §9–§10.
 """
 from __future__ import annotations
 
+import copy
 from dataclasses import dataclass, field
 from typing import Sequence
 
 from repro.core.algebra import BSGF, SGF
-from repro.core.costmodel import CostConstants, HADOOP
+from repro.core.costmodel import CostConstants, HADOOP, Stats
 from repro.core.executor import Executor, ExecutorConfig, Report
 from repro.core.planner import (
+    MSJJob,
     Plan,
+    Round,
     _register_stratum_outputs,
     concat_plans,
     levels_of,
@@ -37,8 +44,9 @@ from repro.core.planner import (
 )
 from repro.core.relation import Relation
 from repro.engine.comm import Comm, SimComm
-from repro.service.catalog import Catalog
-from repro.service.plan_cache import PlanCache, canonical_query_key
+from repro.service.catalog import Catalog, query_deps
+from repro.service.plan_cache import PlanCache, canonical_query_key, canonicalize
+from repro.service.result_cache import ResultCache, xmat_content_key
 from repro.service.scheduler import SlotScheduler
 
 
@@ -141,6 +149,7 @@ class SGFService:
         consts: CostConstants = HADOOP,
         model: str = "gumbo",
         cache_capacity: int = 128,
+        result_cache_capacity: int = 256,
     ):
         self.catalog = catalog
         self.comm = comm or SimComm(catalog.P)
@@ -150,9 +159,15 @@ class SGFService:
         self.model = model
         self.batcher = AdmissionBatcher(max_admit=max_admit)
         self.cache = PlanCache(capacity=cache_capacity)
+        #: cross-tick result/X_i materializations; capacity 0 disables
+        #: (every tick then executes fully cold, the pre-cache behaviour)
+        self.results = ResultCache(capacity=result_cache_capacity)
         self.reports: list[Report] = []
         self.last_report: Report | None = None
         self.last_batch: FusedBatch | None = None
+        self.last_tick: dict = {}
+        self.warm_served = 0
+        self.cold_executed = 0
         self._next_rid = 0
 
     # -- admission ---------------------------------------------------------
@@ -175,7 +190,7 @@ class SGFService:
         return req
 
     # -- one service tick --------------------------------------------------
-    def _plan_batch(self, batch: FusedBatch) -> Plan:
+    def _plan_batch(self, queries: Sequence[BSGF], stats: Stats) -> Plan:
         """Level-layered strata + GREEDY-BSGF grouping within each stratum.
 
         Unlike GREEDY-SGF's overlap heuristic (which serializes
@@ -183,17 +198,196 @@ class SGFService:
         layering always co-schedules independent tenants, so their Boolean
         evaluations share one EVAL job and their semi-joins enter one
         grouping pool — the cross-tenant sharing the service exists for.
-        """
-        import copy
 
-        # the catalog memoizes its Stats; copy before register_output feeds
-        # stratum output estimates forward
-        stats = copy.deepcopy(self.catalog.stats())
+        ``stats`` is mutated (stratum output estimates feed forward);
+        callers pass a private copy.
+        """
         plans = []
-        for stratum in levels_of(SGF(list(batch.queries))):
+        for stratum in levels_of(SGF(list(queries))):
             plans.append(plan_greedy(stratum, stats, self.consts, model=self.model))
             _register_stratum_outputs(stratum, stats)
         return concat_plans(plans)
+
+    def _closures(self, batch: FusedBatch) -> dict[str, tuple[tuple, frozenset]]:
+        """Per canonical query: its self-contained cache identity.
+
+        The *closure* of a query is the query plus its transitive
+        intra-batch dependencies, re-canonicalized as a standalone batch —
+        a content key independent of where the query landed in this tick's
+        fused namespace.  Alongside it the closure's base-relation deps,
+        from which the per-relation epoch key is built.
+        """
+        canon = list(batch.queries)
+        names = {q.name for q in canon}
+        trans: dict[str, set[str]] = {}
+        meta: dict[str, tuple[tuple, frozenset]] = {}
+        for q in canon:
+            t: set[str] = set()
+            for r in q.relations:
+                if r in names:  # refs point at earlier batch outputs only
+                    t |= trans[r] | {r}
+            trans[q.name] = t
+            closure = [p for p in canon if p.name in t] + [q]
+            blob = tuple(repr(cq) for cq in canonicalize(closure)[0])
+            meta[q.name] = (blob, query_deps(closure))
+        return meta
+
+    @staticmethod
+    def _xmat_deps(sj, local_names: set[str]) -> frozenset | None:
+        """Dep set of one semi-join materialization, or None when it has no
+        catalog-stable cache key (tick-relative guard/atom relation).  The
+        single source of the eligibility rule — lookup (:meth:`_trim_plan`)
+        and insertion (:meth:`_insert_results`) must agree on it."""
+        if sj.guard.rel in local_names or sj.cond_atom.rel in local_names:
+            return None
+        return frozenset((sj.guard.rel, sj.cond_atom.rel))
+
+    def _trim_plan(
+        self, plan: Plan, local_names: set[str]
+    ) -> tuple[Plan, dict[str, Relation]]:
+        """Serve warm X_i materializations: drop each MSJ equation whose
+        materialization is cached for the current dep epochs, returning the
+        trimmed plan plus the ``X name -> Relation`` injections.
+
+        Only non-fused jobs over catalog relations are eligible — fused
+        jobs apply their Boolean formula on the in-job route-back bitmap,
+        and ``local_names`` (canonical intermediates) are tick-relative, so
+        neither has a catalog-stable content key.
+        """
+        injected: dict[str, Relation] = {}
+        rounds: list[Round] = []
+        for rnd in plan.rounds:
+            jobs: list = []
+            for job in rnd.jobs:
+                if not isinstance(job, MSJJob) or job.fused:
+                    jobs.append(job)
+                    continue
+                keep = []
+                for sj in job.sjs:
+                    deps = self._xmat_deps(sj, local_names)
+                    rel = None
+                    if deps is not None:
+                        rel = self.results.get(
+                            "xmat", xmat_content_key(sj), self.catalog.dep_epochs(deps)
+                        )
+                    if rel is None:
+                        keep.append(sj)
+                    else:
+                        injected[sj.out] = rel.rename(sj.out)
+                if len(keep) == len(job.sjs):
+                    jobs.append(job)
+                elif keep:
+                    jobs.append(MSJJob(tuple(keep)))
+            if jobs:
+                rounds.append(Round(tuple(jobs)))
+        return Plan(tuple(rounds)), injected
+
+    def _insert_results(
+        self,
+        plan: Plan,
+        cold: Sequence[BSGF],
+        meta: dict,
+        local_names: set[str],
+        env: dict,
+    ) -> None:
+        """Populate the result cache from a completed cold execution."""
+        for rnd in plan.rounds:
+            for job in rnd.jobs:
+                if not isinstance(job, MSJJob) or job.fused:
+                    continue
+                for sj in job.sjs:
+                    deps = self._xmat_deps(sj, local_names)
+                    if deps is None:
+                        continue
+                    self.results.put(
+                        "xmat",
+                        xmat_content_key(sj),
+                        self.catalog.dep_epochs(deps),
+                        env[sj.out],
+                        deps,
+                    )
+        for q in cold:
+            blob, deps = meta[q.name]
+            self.results.put(
+                "query", blob, self.catalog.dep_epochs(deps), env[q.name], deps
+            )
+
+    def _run_batch(self, batch: FusedBatch) -> tuple[dict, Report]:
+        """Warm/cold partition + cold execution of one fused batch.
+
+        Warm canonical queries are served straight from the result cache
+        (zero jobs, zero shuffled bytes — they never reach the scheduler);
+        the cold remainder is planned (plan cache, keyed by the per-relation
+        epochs of its transitive base deps), trimmed of warm X_i
+        materializations, executed on the W-slot scheduler, and inserted
+        into the cache for later ticks.
+        """
+        canon = list(batch.queries)
+        meta = self._closures(batch)
+        # sweep entries orphaned by catalog mutations (they can never hit
+        # again but would pin their arrays until LRU pressure)
+        self.results.evict_stale(self.catalog.rel_epochs)
+        warm: dict[str, Relation] = {}
+        cold: list[BSGF] = []
+        for q in canon:
+            blob, deps = meta[q.name]
+            rel = self.results.get("query", blob, self.catalog.dep_epochs(deps))
+            if rel is None:
+                cold.append(q)
+            else:
+                warm[q.name] = rel.rename(q.name)
+        self.last_tick = info = {
+            "canonical_queries": len(canon),
+            "warm_queries": len(warm),
+            "cold_queries": len(cold),
+            "x_injected": 0,
+        }
+        if not cold:
+            return dict(warm), Report()
+
+        # plan the cold sub-batch; warm outputs it reads act as base
+        # relations with exact statistics (their rows are resident)
+        cold_deps = frozenset().union(*(meta[q.name][1] for q in cold))
+        warm_read = {r for q in cold for r in q.relations} & set(warm)
+        stats = copy.deepcopy(self.catalog.stats())
+        for name in warm_read:
+            stats.register_output(name, float(warm[name].count()), warm[name].arity)
+        # the epoch key also pins *which queries* occupy the warm slots the
+        # cold batch reads (their closure blobs): an identical-looking cold
+        # batch fed by a differently-defined warm upstream must not reuse a
+        # plan costed with the old upstream's cardinality
+        epoch_key = (
+            self.catalog.dep_epochs(cold_deps),
+            tuple(sorted((n, meta[n][0]) for n in warm_read)),
+        )
+        plan, _hit = self.cache.get_or_plan(
+            cold,
+            epoch_key,
+            lambda: self._plan_batch(cold, copy.deepcopy(stats)),
+            canonical=True,
+        )
+
+        local_names = set(warm) | {q.name for q in cold}
+        plan, injected = self._trim_plan(plan, local_names)
+        info["x_injected"] = len(injected)
+        # injected X relations must be visible to the scheduler's LPT cost
+        # estimates; ``stats`` is tick-private (the planner lambda took its
+        # own copy) and the scheduler copies again before mutating
+        for name, rel in injected.items():
+            stats.register_output(name, float(rel.count()), rel.arity)
+        ex = Executor(
+            {**self.catalog.db(), **warm, **injected}, self.comm, self.config
+        )
+        sched = SlotScheduler(
+            ex,
+            slots=self.slots,
+            stats=stats,
+            consts=self.consts,
+            model=self.model,
+        )
+        env, report = sched.execute(plan)
+        self._insert_results(plan, cold, meta, local_names, env)
+        return env, report
 
     def tick(self) -> list[QueryRequest]:
         """Drain the queue, run one fused job wave-set, scatter outputs.
@@ -203,27 +397,17 @@ class SGFService:
         admitted = self.batcher.drain()
         if not admitted:
             return []
+        prev_tick = self.last_tick
         try:
             batch = fuse_requests(admitted)
-            plan, _hit = self.cache.get_or_plan(
-                batch.queries,
-                self.catalog.epoch,
-                lambda: self._plan_batch(batch),
-                canonical=True,
-            )
-            ex = Executor(self.catalog.db(), self.comm, self.config)
-            sched = SlotScheduler(
-                ex,
-                slots=self.slots,
-                stats=self.catalog.stats(),
-                consts=self.consts,
-                model=self.model,
-            )
-            env, report = sched.execute(plan)
+            env, report = self._run_batch(batch)
         except Exception:
             # don't lose co-admitted tenants to one failing tick (e.g. a
             # CapacityFault after max retries): put the batch back in FIFO
-            # order so a caller can retry or re-admit after fixing capacity
+            # order so a caller can retry or re-admit after fixing capacity;
+            # last_tick must keep describing the last *successful* tick,
+            # like last_report/last_batch
+            self.last_tick = prev_tick
             self.batcher.queue[:0] = admitted
             raise
         for req in batch.requests:
@@ -231,6 +415,8 @@ class SGFService:
                 cname = batch.out_map[(req.rid, q.name)]
                 req.outputs[q.name] = env[cname].rename(q.name)
             req.done = True
+        self.warm_served += self.last_tick.get("warm_queries", 0)
+        self.cold_executed += self.last_tick.get("cold_queries", 0)
         self.reports.append(report)
         self.last_report = report
         self.last_batch = batch
@@ -242,11 +428,26 @@ class SGFService:
             self.tick()
 
     # -- introspection -----------------------------------------------------
+    def _net_time(self, report: Report) -> float:
+        """Net time of one tick: prefer the waves the scheduler actually
+        recorded (an LPT re-derivation from per-round walls can disagree
+        with the real schedule); fall back to the modeled makespan only for
+        wave-less records (barrier-round executor)."""
+        by_wave = report.net_time_by_wave()
+        if by_wave is None:
+            return report.net_time_under_slots(self.slots)
+        return by_wave
+
     def counters(self) -> dict:
         c = self.cache.counters()
+        rc = self.results.counters()
+        c["result_size"] = rc.pop("size")
+        c.update(rc)
+        c["warm_queries"] = self.warm_served
+        c["cold_queries"] = self.cold_executed
         c["ticks"] = len(self.reports)
         c["jobs"] = sum(r.n_jobs for r in self.reports)
         c["bytes_shuffled"] = sum(r.bytes_shuffled() for r in self.reports)
-        c["net_time"] = sum(r.net_time_under_slots(self.slots) for r in self.reports)
+        c["net_time"] = sum(self._net_time(r) for r in self.reports)
         c["total_time"] = sum(r.total_time for r in self.reports)
         return c

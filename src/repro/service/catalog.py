@@ -7,14 +7,18 @@ service reference relations *by name*; the catalog owns the sharded
 planner costs plans with — so requests no longer carry a database dict
 around.
 
-Every registration bumps ``epoch``; the plan cache keys on
-``(query fingerprint, epoch)`` so a catalog change invalidates cached
-plans (relation sizes drive the greedy grouping).
+Invalidation is **per relation**: every registration bumps a global
+``epoch`` (which versions the memoized :class:`Stats`) *and* the touched
+relation's entry in ``rel_epochs``.  The plan and result caches key on
+the epochs of the relations a query batch *actually reads*
+(:func:`query_deps` + :meth:`Catalog.dep_epochs`), so registering an
+unrelated relation leaves cached plans and materialized results valid —
+DESIGN.md §10.
 """
 from __future__ import annotations
 
 import re
-from typing import Mapping, Sequence
+from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
@@ -46,8 +50,12 @@ class Catalog:
         self._rels: dict[str, Relation] = {}
         #: selectivity estimates, keyed (guard_rel, cond_rel) as in Stats
         self.sel: dict[tuple, float] = {}
-        #: bumped on every registration; part of the plan-cache key
+        #: bumped on every registration; versions the memoized Stats
         self.epoch = 0
+        #: per-relation version: epoch value at the relation's last change.
+        #: Cache keys are built from these (dep_epochs), not from ``epoch``,
+        #: so unrelated registrations do not invalidate cached plans/results.
+        self.rel_epochs: dict[str, int] = {}
         self._stats_cache: tuple[int, Stats] | None = None
 
     # -- registration ------------------------------------------------------
@@ -75,6 +83,7 @@ class Catalog:
             rel = Relation.from_tuples(name, rows, P=self.P)
         self._rels[name] = rel
         self.epoch += 1
+        self.rel_epochs[name] = self.epoch
         return rel
 
     def register_many(self, rels: Mapping[str, object]) -> None:
@@ -84,6 +93,12 @@ class Catalog:
     def set_selectivity(self, guard_rel: str, cond_rel: str, sel: float) -> None:
         self.sel[(guard_rel, cond_rel)] = float(sel)
         self.epoch += 1
+        # A selectivity hint changes how plans *reading these relations* are
+        # costed (and, conservatively, re-derives their cached results); it
+        # must not invalidate entries that never touch either relation.
+        for rel in (guard_rel, cond_rel):
+            if rel in self.rel_epochs:
+                self.rel_epochs[rel] = self.epoch
 
     # -- lookup ------------------------------------------------------------
     def __contains__(self, name: str) -> bool:
@@ -108,6 +123,16 @@ class Catalog:
         """A database-dict view for the executor (relations are shared,
         not copied; executors publish their outputs into their own env)."""
         return dict(self._rels)
+
+    # -- per-relation versioning -------------------------------------------
+    def dep_epochs(self, rels: Iterable[str]) -> tuple[tuple[str, int], ...]:
+        """The cache-key component for a dependency set: ``(name, epoch)``
+        pairs sorted by name.  Two lookups with equal dep keys are
+        guaranteed to read bit-identical relation contents (epochs only
+        move forward, and every mutation of a relation bumps its epoch)."""
+        return tuple(
+            (name, self.rel_epochs.get(name, 0)) for name in sorted(set(rels))
+        )
 
     # -- statistics --------------------------------------------------------
     def stats(self) -> Stats:
@@ -154,6 +179,25 @@ class Catalog:
             )
         if bad_arity:
             raise CatalogError(f"arity mismatch vs catalog schema: {bad_arity}")
+
+
+def query_deps(
+    queries: Sequence[BSGF] | BSGF, defined: Iterable[str] = ()
+) -> frozenset[str]:
+    """Base relations a query batch reads: every relation referenced by a
+    guard or conditional atom that is neither an output of the batch itself
+    nor in ``defined`` (extra non-catalog names, e.g. warm intermediates).
+
+    This is the dependency set the per-relation epoch keys are built from:
+    a cached plan/result for ``queries`` stays valid exactly as long as
+    none of these relations is re-registered.
+    """
+    qs = [queries] if isinstance(queries, BSGF) else list(queries)
+    skip = {q.name for q in qs} | set(defined)
+    deps: set[str] = set()
+    for q in qs:
+        deps |= q.relations - skip
+    return frozenset(deps)
 
 
 def catalog_from_numpy(db_np: Mapping[str, np.ndarray], *, P: int = 8) -> Catalog:

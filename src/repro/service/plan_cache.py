@@ -127,23 +127,38 @@ def fingerprint_queries(queries: Sequence[BSGF], *, canonical: bool = False) -> 
 @dataclass
 class CacheEntry:
     plan: Plan
-    blob: tuple  # full canonical key, compared on hit to rule out collisions
     hits: int = 0
 
 
 class PlanCache:
-    """LRU cache: (canonical fingerprint, catalog epoch) -> built Plan."""
+    """LRU cache: (canonical fingerprint, dep epochs, canonical blob) -> Plan.
+
+    The fingerprint is a *shard*, never trusted for identity: the full
+    canonical blob is part of the lookup key, so two batches whose 32-bit
+    fingerprints collide coexist as separate entries (``collisions``
+    counts distinct resident blobs beyond the first per fingerprint)
+    instead of evicting each other every tick.
+
+    ``epoch_key`` is whatever versioning the caller derives from the
+    catalog — the service passes ``Catalog.dep_epochs(...)`` over the
+    ``catalog.query_deps`` dependency set of the (cold) batch it is about
+    to plan, i.e. the per-relation epochs of the relations the batch
+    actually reads, so an unrelated registration leaves entries valid
+    (DESIGN.md §10).  A plain int (the old global epoch) still works.
+    """
 
     def __init__(self, capacity: int = 128):
         self.capacity = capacity
         self._entries: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
+        self._fp_blobs: dict[int, set[tuple]] = {}  # resident blobs per fp shard
         self.hits = 0
         self.misses = 0
+        self.collisions = 0
 
     def get_or_plan(
         self,
         queries: Sequence[BSGF],
-        epoch: int,
+        epoch_key,
         planner: Callable[[], Plan],
         *,
         canonical: bool = False,
@@ -156,20 +171,36 @@ class PlanCache:
         canon = list(queries) if canonical else canonicalize(queries)[0]
         fp = fingerprint_queries(canon, canonical=True)
         blob = tuple(repr(q) for q in canon)
-        key = (fp, epoch)
+        key = (fp, epoch_key, blob)
         entry = self._entries.get(key)
-        if entry is not None and entry.blob == blob:
+        if entry is not None:
             self.hits += 1
             entry.hits += 1
             self._entries.move_to_end(key)
             return entry.plan, True
         self.misses += 1
         plan = planner()
-        self._entries[key] = CacheEntry(plan, blob)
-        self._entries.move_to_end(key)
+        resident = self._fp_blobs.setdefault(fp, set())
+        if resident and blob not in resident:
+            self.collisions += 1
+        resident.add(blob)
+        self._entries[key] = CacheEntry(plan)
         while len(self._entries) > self.capacity:
-            self._entries.popitem(last=False)
+            (old_fp, _, old_blob), _ = self._entries.popitem(last=False)
+            if not any(
+                k[0] == old_fp and k[2] == old_blob for k in self._entries
+            ):
+                shard = self._fp_blobs.get(old_fp)
+                if shard is not None:
+                    shard.discard(old_blob)
+                    if not shard:
+                        del self._fp_blobs[old_fp]
         return plan, False
 
     def counters(self) -> dict:
-        return {"hits": self.hits, "misses": self.misses, "size": len(self._entries)}
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "collisions": self.collisions,
+            "size": len(self._entries),
+        }

@@ -88,27 +88,46 @@ def test_overflow_retry_state_machine():
     seen = []
 
     class FlakyExecutor(Executor):
-        def run_job(self, job, *, cap_override=None):
-            outs, stats = super().run_job(job, cap_override=cap_override)
+        def run_job(self, job, *, cap_override=None, cap_slack=None):
+            outs, stats = super().run_job(
+                job, cap_override=cap_override, cap_slack=cap_slack
+            )
             if isinstance(job, MSJJob):
-                seen.append((cap_override, self.config.cap_slack))
+                seen.append((cap_override, cap_slack))
                 if len(seen) <= 2:  # force overflow on the first two attempts
                     stats = dict(stats)
                     stats["overflow"] = 5
                     stats["forward_cap"] = 2048
             return outs, stats
 
-    ex = FlakyExecutor(db, SimComm(2), ExecutorConfig(cap_slack=0.5, max_retries=3))
+    config = ExecutorConfig(cap_slack=0.5, max_retries=3)
+    ex = FlakyExecutor(db, SimComm(2), config)
     env, report = ex.execute(plan_greedy(qs, stats_of_db(db, default_sel=0.5)))
     msj_recs = [r for r in report.records if isinstance(r.job, MSJJob)]
     assert [r.attempts for r in msj_recs] == [3]
     # attempt 1 ran undersized; retry 1 cleared the slack without a cap
     # override; retry 2 doubled the observed capacity
-    assert seen[0] == (None, 0.5)
+    assert seen[0] == (None, None)
     assert seen[1] == (None, 1.0)
     assert seen[2] == (4096, 1.0)
     want = _want(qs, db_np)
     assert env["Z"].to_set() == want["Z"]
+
+
+def test_overflow_retry_does_not_mutate_config():
+    """The slack relaxation is scoped to the retried job: the executor's
+    config object (and its cap_slack) must be unchanged afterwards, so
+    deliberate undersizing stays in force for later jobs and plans."""
+    from repro.core.planner import MSJJob
+
+    qs = Q.make_queries("A3")
+    db = db_from_dict(Q.gen_db(qs, n_guard=256, n_cond=256), P=4)
+    config = ExecutorConfig(cap_slack=0.01, max_retries=3)
+    ex = Executor(db, SimComm(4), config)
+    env, report = ex.execute(plan_par(qs))
+    assert any(r.attempts > 1 for r in report.records)  # the retry fired
+    assert ex.config is config  # not swapped out behind the caller's back
+    assert config.cap_slack == 0.01
 
 
 def test_overflow_exhausts_retries_raises_capacity_fault():
@@ -119,8 +138,10 @@ def test_overflow_exhausts_retries_raises_capacity_fault():
     db = db_from_dict(Q.gen_db(qs, n_guard=64, n_cond=64), P=2)
 
     class AlwaysOverflow(Executor):
-        def run_job(self, job, *, cap_override=None):
-            outs, stats = super().run_job(job, cap_override=cap_override)
+        def run_job(self, job, *, cap_override=None, cap_slack=None):
+            outs, stats = super().run_job(
+                job, cap_override=cap_override, cap_slack=cap_slack
+            )
             if isinstance(job, MSJJob):
                 stats = dict(stats)
                 stats["overflow"] = 1

@@ -1,0 +1,313 @@
+"""Cross-tick result cache: per-relation epoch invalidation semantics.
+
+The contracts under test (DESIGN.md §10):
+* warm-served results are bit-identical to cold execution (same arrays);
+* a fully-repeated tick runs 0 jobs and shuffles 0 bytes;
+* mutating relation R invalidates exactly the cached entries whose dep
+  set contains R (transitively, through intra-batch references);
+* cached plans and results survive unrelated catalog registrations.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ref_engine
+from repro.core.algebra import Atom, BSGF, all_of
+from repro.core.planner import MSJJob
+from repro.core.relation import Relation
+from repro.engine.comm import SimComm
+from repro.service import (
+    Catalog,
+    ResultCache,
+    SGFService,
+    catalog_from_numpy,
+    query_deps,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # degrade: property tests skip, rest still run
+    HAVE_HYPOTHESIS = False
+
+XY = ("x", "y")
+P = 2
+
+
+def _db(seed=0, n=160, hi=12):
+    rng = np.random.default_rng(seed)
+    mk = lambda a: rng.integers(0, hi, (n, a)).astype(np.int32)
+    return {"R": mk(2), "S": mk(1), "T": mk(1), "G": mk(2), "U": mk(1)}
+
+
+def _setdb(db_np):
+    return {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+
+
+Q_RS = BSGF("Z", XY, Atom("R", *XY), all_of(Atom("S", "x"), Atom("T", "y")))
+Q_GU = BSGF("Z", XY, Atom("G", *XY), Atom("U", "x"))
+
+
+# --------------------------------------------------------------------------
+# catalog: per-relation epochs + deps extractor
+# --------------------------------------------------------------------------
+
+
+def test_catalog_per_relation_epochs():
+    cat = Catalog(P=2)
+    cat.register("R", [(1, 2)])
+    cat.register("S", [(1,)])
+    e_r, e_s = cat.rel_epochs["R"], cat.rel_epochs["S"]
+    cat.register("S", [(2,)])  # replace S
+    assert cat.rel_epochs["R"] == e_r  # untouched
+    assert cat.rel_epochs["S"] > e_s
+    # dep keys: sorted, deduplicated, only the requested relations
+    key = cat.dep_epochs(["S", "R", "S"])
+    assert key == (("R", cat.rel_epochs["R"]), ("S", cat.rel_epochs["S"]))
+    # selectivity hints bump exactly the named relations
+    cat.register("T", [(3,)])
+    before = dict(cat.rel_epochs)
+    cat.set_selectivity("R", "S", 0.1)
+    assert cat.rel_epochs["T"] == before["T"]
+    assert cat.rel_epochs["R"] > before["R"]
+    assert cat.rel_epochs["S"] > before["S"]
+
+
+def test_query_deps_excludes_batch_outputs():
+    q1 = BSGF("Z1", XY, Atom("R", *XY), Atom("S", "x"))
+    q2 = BSGF("Z2", ("x",), Atom("Z1", *XY), Atom("T", "x"))
+    assert query_deps(q1) == {"R", "S"}
+    assert query_deps([q1, q2]) == {"R", "S", "T"}  # Z1 is batch-defined
+    assert query_deps([q2], defined=["Z1"]) == {"T"}
+
+
+# --------------------------------------------------------------------------
+# ResultCache unit behaviour
+# --------------------------------------------------------------------------
+
+
+def test_result_cache_lru_and_disable():
+    rel = Relation.from_tuples("X", [(1,)])
+    rc = ResultCache(capacity=2)
+    rc.put("query", ("a",), (("R", 1),), rel, frozenset({"R"}))
+    rc.put("query", ("b",), (("S", 2),), rel, frozenset({"S"}))
+    assert rc.get("query", ("a",), (("R", 1),)) is rel
+    # stale dep key (epoch moved) never matches
+    assert rc.get("query", ("a",), (("R", 9),)) is None
+    # LRU: "b" is now oldest; inserting a third evicts it
+    rc.put("query", ("c",), (("T", 3),), rel, frozenset({"T"}))
+    assert rc.get("query", ("b",), (("S", 2),)) is None
+    assert rc.get("query", ("c",), (("T", 3),)) is rel
+    assert rc.entries_reading("R") == 1 and rc.entries_reading("S") == 0
+    with pytest.raises(ValueError, match="unknown result kind"):
+        rc.put("bogus", ("a",), (), rel, frozenset())
+    off = ResultCache(capacity=0)
+    off.put("query", ("a",), (), rel, frozenset())
+    assert off.get("query", ("a",), ()) is None and len(off) == 0
+    assert off.counters()["query_misses"] == 1
+    # stale sweep: entries whose dep epochs moved on are dropped eagerly
+    rc2 = ResultCache(capacity=8)
+    rc2.put("query", ("a",), (("R", 1),), rel, frozenset({"R"}))
+    rc2.put("query", ("b",), (("S", 1),), rel, frozenset({"S"}))
+    assert rc2.evict_stale({"R": 2, "S": 1}) == 1  # R moved; entry swept
+    assert len(rc2) == 1 and rc2.counters()["stale_evicted"] == 1
+    assert rc2.get("query", ("b",), (("S", 1),)) is rel
+
+
+# --------------------------------------------------------------------------
+# service: warm ticks, exact invalidation, unrelated registrations
+# --------------------------------------------------------------------------
+
+
+def test_fully_repeated_tick_runs_zero_jobs_bit_identical():
+    db_np = _db()
+    svc = SGFService(catalog_from_numpy(db_np, P=P), comm=SimComm(P))
+    cold = [svc.submit([Q_RS]), svc.submit([Q_GU])]
+    svc.tick()
+    assert svc.last_tick["cold_queries"] == 2
+    warm = [svc.submit([Q_RS]), svc.submit([Q_GU])]
+    svc.tick()
+    assert svc.last_tick == {
+        "canonical_queries": 2, "warm_queries": 2, "cold_queries": 0,
+        "x_injected": 0,
+    }
+    # the warm path never reached the scheduler: 0 jobs, 0 bytes shuffled
+    assert svc.last_report.n_jobs == 0
+    assert svc.last_report.bytes_shuffled() == 0
+    assert svc.counters()["net_time"] >= 0.0  # wave accounting handles empty
+    # bit-identical: the warm Relation is backed by the very arrays the
+    # cold execution produced, not a recomputation
+    for c, w in zip(cold, warm):
+        assert w.outputs["Z"].data is c.outputs["Z"].data
+        assert w.outputs["Z"].valid is c.outputs["Z"].valid
+    setdb = _setdb(db_np)
+    for q, w in zip((Q_RS, Q_GU), warm):
+        assert w.outputs["Z"].to_set() == ref_engine.eval_bsgf(setdb, q)
+
+
+def test_mutation_invalidates_exactly_dependent_entries():
+    db_np = _db()
+    svc = SGFService(catalog_from_numpy(db_np, P=P), comm=SimComm(P))
+    svc.submit([Q_RS]), svc.submit([Q_GU])
+    svc.tick()
+    # U is read only by Q_GU: Q_RS stays warm, Q_GU re-executes
+    new_u = np.arange(40, dtype=np.int32).reshape(-1, 1) % 12
+    svc.catalog.register("U", new_u)
+    reqs = [svc.submit([Q_RS]), svc.submit([Q_GU])]
+    svc.tick()
+    assert svc.last_tick["warm_queries"] == 1
+    assert svc.last_tick["cold_queries"] == 1
+    # the tick swept the orphaned Q_GU entries (query + its X_i)
+    assert svc.counters()["stale_evicted"] >= 1
+    assert svc.results.entries_reading("U") == 2  # fresh query + X(G,U)
+    setdb = _setdb({**db_np, "U": new_u})
+    for q, r in zip((Q_RS, Q_GU), reqs):
+        assert r.outputs["Z"].to_set() == ref_engine.eval_bsgf(setdb, q)
+    # R is read only by Q_RS: the complementary invalidation
+    new_r = np.stack([np.arange(60) % 12, np.arange(60) % 7], 1).astype(np.int32)
+    svc.catalog.register("R", new_r)
+    reqs = [svc.submit([Q_RS]), svc.submit([Q_GU])]
+    svc.tick()
+    assert svc.last_tick["warm_queries"] == 1
+    assert svc.last_tick["cold_queries"] == 1
+    setdb = _setdb({**db_np, "U": new_u, "R": new_r})
+    for q, r in zip((Q_RS, Q_GU), reqs):
+        assert r.outputs["Z"].to_set() == ref_engine.eval_bsgf(setdb, q)
+
+
+def test_unrelated_registration_preserves_plans_and_results():
+    db_np = _db()
+    svc = SGFService(catalog_from_numpy(db_np, P=P), comm=SimComm(P))
+    svc.submit([Q_RS]), svc.submit([Q_GU])
+    svc.tick()
+    plan_misses = svc.cache.counters()["misses"]
+    svc.catalog.register("BYSTANDER", [(1, 2), (3, 4)])
+    svc.submit([Q_RS]), svc.submit([Q_GU])
+    svc.tick()
+    assert svc.last_tick["warm_queries"] == 2  # results survived
+    assert svc.last_report.n_jobs == 0
+    assert svc.cache.counters()["misses"] == plan_misses  # plans survived
+
+
+def test_partial_invalidation_serves_warm_x_materializations():
+    """Re-registering T invalidates Q_RS, but its (R ⋉ S) equation is
+    untouched — the cold re-execution gets X(R,S) injected from the cache
+    and only runs the (R ⋉ T) equation."""
+    db_np = _db()
+    svc = SGFService(catalog_from_numpy(db_np, P=P), comm=SimComm(P))
+    svc.submit([Q_RS])
+    svc.tick()
+    cold_msj_sjs = sum(
+        len(r.job.sjs)
+        for r in svc.last_report.records
+        if isinstance(r.job, MSJJob)
+    )
+    assert cold_msj_sjs == 2  # (R,S) and (R,T)
+    new_t = np.arange(50, dtype=np.int32).reshape(-1, 1) % 12
+    svc.catalog.register("T", new_t)
+    req = svc.submit([Q_RS])
+    svc.tick()
+    assert svc.last_tick["cold_queries"] == 1
+    assert svc.last_tick["x_injected"] == 1  # X(R,S) came from the cache
+    warm_msj_sjs = sum(
+        len(r.job.sjs)
+        for r in svc.last_report.records
+        if isinstance(r.job, MSJJob)
+    )
+    assert warm_msj_sjs == 1  # only (R,T) re-executed
+    setdb = _setdb({**db_np, "T": new_t})
+    assert req.outputs["Z"].to_set() == ref_engine.eval_bsgf(setdb, Q_RS)
+    assert svc.counters()["x_hits"] == 1
+
+
+def test_closure_keys_follow_intra_batch_dependencies():
+    """A dependent query's cache identity includes its upstream queries'
+    deps: mutating T (read only by q2) leaves q1 warm; mutating S (read by
+    q1) invalidates both q1 and q2."""
+    db_np = _db()
+    q1 = BSGF("Z1", XY, Atom("R", *XY), Atom("S", "x"))
+    q2 = BSGF("Z2", ("x",), Atom("Z1", *XY), Atom("T", "x"))
+    svc = SGFService(catalog_from_numpy(db_np, P=P), comm=SimComm(P))
+    svc.submit([q1, q2])
+    svc.tick()
+    assert svc.last_tick["cold_queries"] == 2
+
+    svc.catalog.register("T", np.arange(30, dtype=np.int32).reshape(-1, 1) % 12)
+    req = svc.submit([q1, q2])
+    svc.tick()
+    assert svc.last_tick["warm_queries"] == 1  # q1 survived
+    assert svc.last_tick["cold_queries"] == 1  # q2 re-executed
+
+    svc.catalog.register("S", np.arange(30, dtype=np.int32).reshape(-1, 1) % 12)
+    req = svc.submit([q1, q2])
+    svc.tick()
+    assert svc.last_tick["warm_queries"] == 0
+    assert svc.last_tick["cold_queries"] == 2
+    setdb = {name: svc.catalog.get(name).to_set() for name in svc.catalog.names()}
+    want1 = ref_engine.eval_bsgf(setdb, q1)
+    setdb["Z1"] = want1
+    assert req.outputs["Z1"].to_set() == want1
+    assert req.outputs["Z2"].to_set() == ref_engine.eval_bsgf(setdb, q2)
+
+
+# --------------------------------------------------------------------------
+# property test: random workloads, random mutations
+# --------------------------------------------------------------------------
+
+GUARDS = ("R", "G")
+ATOM_VAR = {"S": "x", "T": "y", "U": "x"}
+
+
+def _mk_query(guard, atom_rels):
+    conds = [Atom(r, ATOM_VAR[r]) for r in atom_rels]
+    return BSGF("Z", XY, Atom(guard, *XY), all_of(*conds))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        picks=st.lists(
+            st.tuples(
+                st.sampled_from(GUARDS),
+                st.frozensets(st.sampled_from(sorted(ATOM_VAR)), min_size=1),
+            ),
+            min_size=1,
+            max_size=3,
+            unique=True,
+        ),
+        mutate=st.sampled_from(("R", "G", "S", "T", "U")),
+    )
+    def test_property_warm_equals_cold_and_exact_invalidation(
+        seed, picks, mutate
+    ):
+        rng = np.random.default_rng(seed)
+        db_np = _db(seed=seed, n=24, hi=6)
+        queries = [_mk_query(g, sorted(a)) for g, a in picks]
+        svc = SGFService(catalog_from_numpy(db_np, P=P), comm=SimComm(P))
+        for q in queries:
+            svc.submit([q])
+        svc.tick()
+        # repeat: fully warm, zero jobs, oracle-identical
+        warm = [svc.submit([q]) for q in queries]
+        svc.tick()
+        assert svc.last_report.n_jobs == 0
+        setdb = _setdb(db_np)
+        for q, r in zip(queries, warm):
+            assert r.outputs["Z"].to_set() == ref_engine.eval_bsgf(setdb, q)
+        # mutate one relation: exactly its readers go cold
+        rows = rng.integers(0, 6, db_np[mutate].shape).astype(np.int32)
+        svc.catalog.register(mutate, rows)
+        after = [svc.submit([q]) for q in queries]
+        svc.tick()
+        want_cold = sum(1 for q in queries if mutate in q.relations)
+        assert svc.last_tick["cold_queries"] == want_cold
+        assert svc.last_tick["warm_queries"] == len(queries) - want_cold
+        setdb = _setdb({**db_np, mutate: rows})
+        for q, r in zip(queries, after):
+            assert r.outputs["Z"].to_set() == ref_engine.eval_bsgf(setdb, q)
+
+else:
+
+    def test_property_warm_equals_cold_and_exact_invalidation():
+        pytest.importorskip("hypothesis")

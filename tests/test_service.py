@@ -123,7 +123,7 @@ def test_submit_rejects_duplicate_names_and_tick_requeues_on_failure():
     svc.submit(tenants[0])
     svc.submit(tenants[1])
     boom = RuntimeError("injected planner failure")
-    svc._plan_batch = lambda batch: (_ for _ in ()).throw(boom)
+    svc._plan_batch = lambda queries, stats: (_ for _ in ()).throw(boom)
     with pytest.raises(RuntimeError, match="injected planner"):
         svc.tick()
     assert len(svc.batcher) == 2  # both requests back in FIFO order
@@ -220,11 +220,15 @@ def test_service_sgf_request_with_dependencies(rng):
 
 
 def test_plan_cache_hit_skips_planning():
+    # result cache disabled: repeated ticks then exercise the plan-cache
+    # path every time instead of going fully warm
     tenants, db_np = mixed_workload(4, n=128)
-    svc = SGFService(catalog_from_numpy(db_np, P=2), comm=SimComm(2))
+    svc = SGFService(
+        catalog_from_numpy(db_np, P=2), comm=SimComm(2), result_cache_capacity=0
+    )
     plans = []
     inner = svc._plan_batch
-    svc._plan_batch = lambda batch: plans.append(batch) or inner(batch)
+    svc._plan_batch = lambda qs, st: plans.append(qs) or inner(qs, st)
     for _ in range(3):
         for qs in tenants:
             svc.submit(qs)
@@ -232,12 +236,47 @@ def test_plan_cache_hit_skips_planning():
     assert len(plans) == 1  # planned once, reused twice
     assert svc.cache.counters()["hits"] == 2
     assert svc.cache.counters()["misses"] == 1
-    # catalog change invalidates the cached plan
+    # registering a relation the queries actually read invalidates the plan
     svc.catalog.register("S", db_np["S"])
     for qs in tenants:
         svc.submit(qs)
     svc.tick()
     assert len(plans) == 2 and svc.cache.counters()["misses"] == 2
+    # ... but an *unrelated* registration does not (per-relation epochs)
+    svc.catalog.register("UNRELATED", [(1, 2)])
+    for qs in tenants:
+        svc.submit(qs)
+    svc.tick()
+    assert len(plans) == 2  # no re-planning
+    assert svc.cache.counters()["hits"] == 3
+    assert svc.cache.counters()["collisions"] == 0
+
+
+def test_plan_cache_fingerprint_collision_no_thrash(monkeypatch):
+    """Two batches whose 32-bit fingerprints collide must coexist as
+    separate entries (blob is part of the key), not evict each other with
+    a miss every tick; the collision is observable in the counters."""
+    from repro.service import plan_cache as pc
+
+    monkeypatch.setattr(pc, "fingerprint_queries",
+                        lambda qs, canonical=False: 7)  # force one shard
+    qa = [BSGF("q0", ("x",), Atom("R", "x"), Atom("S", "x"))]
+    qb = [BSGF("q0", ("x",), Atom("R", "x"), Atom("T", "x"))]
+    cache = pc.PlanCache(capacity=8)
+    key = (("R", 1), ("S", 1))
+    pa, hit = cache.get_or_plan(qa, key, lambda: "plan-a", canonical=True)
+    assert (pa, hit) == ("plan-a", False)
+    pb, hit = cache.get_or_plan(qb, key, lambda: "plan-b", canonical=True)
+    assert (pb, hit) == ("plan-b", False)
+    assert cache.counters()["collisions"] == 1
+    # both stay resident: alternating lookups hit, no thrash
+    for want in ("plan-a", "plan-b", "plan-a", "plan-b"):
+        qs = qa if want == "plan-a" else qb
+        plan, hit = cache.get_or_plan(qs, key, lambda: "rebuilt", canonical=True)
+        assert hit and plan == want
+    assert cache.counters() == {
+        "hits": 4, "misses": 2, "collisions": 1, "size": 2,
+    }
 
 
 # --------------------------------------------------------------------------
