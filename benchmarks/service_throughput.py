@@ -1,17 +1,22 @@
 """Service throughput: sequential vs batched vs cache-warm execution,
-plus a repeat-traffic ladder over the cross-tick result cache.
+a repeat-traffic ladder over the cross-tick result cache, and a
+straggler scenario for the ready-queue executor.
 
 Part 1 (tenants ladder) — a tenants × queries ladder over a mixed
 A-family workload (shared base relations, varying guards and key
 patterns).  For each point we report jobs, shuffled bytes, and net/total
 time for
 
-* ``sequential``   — every tenant's query planned (GREEDY) and executed on
-  its own executor, one after another (the single-workload path);
-* ``batched``      — all tenants admitted to the SGF service and evaluated
-  in one fused multi-tenant plan on the W-slot scheduler (cold);
-* ``batched_warm`` — the same workload resubmitted: every canonical query
-  is served from the cross-tick result cache — **0 jobs, 0 bytes**.
+* ``sequential``    — every tenant's query planned (GREEDY) and executed
+  on its own executor, one after another (the single-workload path);
+* ``batched``       — all tenants admitted to the SGF service and
+  evaluated in one fused multi-tenant plan on the ready-queue executor
+  under W slots (cold);
+* ``batched_waves`` — the same cold workload on the legacy barrier-wave
+  path (``execution_mode="waves"``), asserted bit-identical to the
+  async outputs at every ladder point;
+* ``batched_warm``  — the workload resubmitted: every canonical query is
+  served from the cross-tick result cache — **0 jobs, 0 bytes**.
 
 Part 2 (repeat traffic) — Zipf-skewed tenant traffic over a pool of
 distinct query shapes, run for several ticks against the same service,
@@ -19,10 +24,18 @@ with the result cache disabled (``repeat_cold``) and enabled
 (``repeat_cached``).  Skewed repeat traffic is where the cache pays:
 jobs/bytes/net-time drop roughly by the repeat fraction of the stream.
 
+Part 3 (straggler) — skewed per-job costs under W=2: one long MSJ job
+next to many short ones.  Barrier waves stall both slots on the
+straggler; the ready-queue executor backfills the freed slot, so its net
+time must come out strictly below (DESIGN.md §11).
+
 The JSON written by ``--json`` also carries an ``acceptance`` block: the
-warm tick runs 0 jobs / 0 bytes with bit-identical outputs, and an
-unrelated catalog registration leaves plans and results warm
-(per-relation epochs observable under ``rel_epochs``).
+warm tick runs 0 jobs / 0 bytes with bit-identical outputs, an unrelated
+catalog registration leaves plans and results warm (per-relation epochs
+observable under ``rel_epochs``), the straggler comparison
+(``async_net_time <= wave_net_time``), and the event-accounting
+identities (``net_time_by_events``: W=∞ == net_time, W=1 == total_time,
+checked on every report this module produces).
 
 Run:  PYTHONPATH=src python -m benchmarks.service_throughput [--quick]
       [--json BENCH_serve.json] [--slots W]
@@ -39,14 +52,22 @@ import numpy as np
 from repro.core import queries as Q
 from repro.core.algebra import Atom, BSGF, all_of
 from repro.core.costmodel import stats_of_db
-from repro.core.executor import Executor
+from repro.core.executor import Executor, ExecutorConfig
 from repro.core.planner import MSJJob, plan_greedy
 from repro.core.relation import db_from_dict
 from repro.engine.comm import SimComm
-from repro.service import SGFService, catalog_from_numpy
+from repro.service import SGFService, SlotScheduler, catalog_from_numpy
 
 XYZW = ("x", "y", "z", "w")
 DEFAULT_P = 8
+
+
+def _check_events(rep) -> None:
+    """The event-accounting acceptance identities, on every report."""
+    assert rep.net_time_by_events(None) == rep.net_time, \
+        "net_time_by_events(W=inf) must equal net_time exactly"
+    assert rep.net_time_by_events(1) == rep.total_time, \
+        "net_time_by_events(W=1) must equal total_time exactly"
 
 
 def tenant_queries(t: int, per_tenant: int) -> list[BSGF]:
@@ -106,12 +127,13 @@ def run(
         for qs in workload:
             ex = Executor(dict(db), SimComm(P))
             env, rep = ex.execute(plan_greedy(qs, stats_of_db(db)))
+            _check_events(rep)
             jobs += rep.n_jobs
             msj += _msj_jobs(rep)
             nbytes += rep.bytes_shuffled()
             net += rep.net_time
             total += rep.total_time
-            outs.append({q.name: len(env[q.name].to_set()) for q in qs})
+            outs.append({q.name: env[q.name].to_set() for q in qs})
         rows.append(
             dict(
                 tenants=n_tenants, per_tenant=per_tenant, mode="sequential",
@@ -122,30 +144,37 @@ def run(
             )
         )
 
-        # -- batched service: cold tick, then a fully-warm repeat ----------
+        # -- batched service: cold async tick, a cold barrier-wave tick
+        # (bit-identical differential), then a fully-warm repeat ----------
         svc = SGFService(
             catalog_from_numpy(db_np, P=P), slots=slots, max_admit=n_tenants
         )
-        for mode in ("batched", "batched_warm"):
-            reqs = [svc.submit(qs) for qs in workload]
+        svc_waves = SGFService(
+            catalog_from_numpy(db_np, P=P), slots=slots, max_admit=n_tenants,
+            config=ExecutorConfig(execution_mode="waves"),
+        )
+        for mode in ("batched", "batched_waves", "batched_warm"):
+            s = svc_waves if mode == "batched_waves" else svc
+            reqs = [s.submit(qs) for qs in workload]
             t0 = time.perf_counter()
-            svc.tick()
+            s.tick()
             wall = time.perf_counter() - t0
-            rep = svc.last_report
+            rep = s.last_report
+            _check_events(rep)
             for req, want in zip(reqs, outs):  # outputs must match sequential
-                got = {name: len(rel.to_set()) for name, rel in req.outputs.items()}
+                got = {name: rel.to_set() for name, rel in req.outputs.items()}
                 assert got == want, f"{mode}: tenant {req.rid} mismatch"
             rows.append(
                 dict(
                     tenants=n_tenants, per_tenant=per_tenant, mode=mode,
                     jobs=rep.n_jobs, msj_jobs=_msj_jobs(rep),
                     bytes_shuffled=rep.bytes_shuffled(),
-                    net_s=round(svc._net_time(rep), 4),
+                    net_s=round(s._net_time(rep), 4),
                     total_s=round(rep.total_time, 4),
                     wall_s=round(wall, 4),
-                    cache_hits=svc.cache.hits,
-                    deduped=svc.last_batch.n_deduped,
-                    warm_queries=svc.last_tick["warm_queries"],
+                    cache_hits=s.cache.hits,
+                    deduped=s.last_batch.n_deduped,
+                    warm_queries=s.last_tick["warm_queries"],
                 )
             )
         assert rows[-1]["jobs"] == 0 and rows[-1]["bytes_shuffled"] == 0, (
@@ -208,6 +237,8 @@ def repeat_traffic(
             outs.extend(req.outputs["Z"].to_set() for req in reqs)
         wall = time.perf_counter() - t0
         outputs[mode] = outs
+        for rep in svc.reports:
+            _check_events(rep)
         c = svc.counters()
         rows.append(
             dict(
@@ -226,11 +257,92 @@ def repeat_traffic(
     return rows
 
 
+def straggler(
+    *, P: int = DEFAULT_P, slots: int = 2, n_small_jobs: int = 8,
+    n_big: int = 16384, n_small: int = 256, n_cond: int = 2048, seed: int = 0,
+) -> dict:
+    """Skewed per-job costs under W=2 — the scenario the ready-queue
+    executor exists for (DESIGN.md §11).
+
+    One long MSJ job (four semi-joins over an ``n_big``-row guard — on
+    this container per-job wall is overhead-dominated, so real skew needs
+    a job that *does* several relations' worth of work) and
+    ``n_small_jobs`` short single-equation jobs share one plan round;
+    every query is fused (generalized 1-ROUND), so there is no trailing
+    EVAL job to blur the comparison.  Barrier waves admit [long, short]
+    and stall the second slot until the straggler finishes, then serialize
+    the remaining shorts in ⌈k/W⌉ further waves; event-driven dispatch
+    backfills the freed slot while the straggler runs.  Outputs are
+    asserted bit-identical and the async net time strictly lower.
+    """
+    from repro.core.planner import MSJJob as MSJ, Plan, Round, pooled_semijoins
+
+    rng = np.random.default_rng(seed)
+    domain = 256
+    qs = [BSGF("ZB", XYZW, Atom("RBIG", *XYZW),
+               all_of(*[Atom(r, "x") for r in "STUV"]))]
+    db_np = {"RBIG": rng.integers(0, domain, (n_big, 4)).astype(np.int32)}
+    for r in "STUV":
+        db_np[r] = rng.integers(0, domain, (n_cond, 1)).astype(np.int32)
+    for i in range(n_small_jobs):
+        qs.append(BSGF(f"Z{i}", XYZW, Atom(f"G{i}", *XYZW),
+                       all_of(Atom("S", "x"))))
+        db_np[f"G{i}"] = rng.integers(0, domain, (n_small, 4)).astype(np.int32)
+    # one fused MSJ job per query (no EVAL round): the long job carries 4
+    # equations over the big guard, the short ones a single tiny equation
+    fused_jobs = []
+    for q in qs:
+        sjs, _ = pooled_semijoins([q])
+        fused_jobs.append(MSJ(tuple(sjs), fused=(q,)))
+    plan = Plan((Round(tuple(fused_jobs)),))
+    db = db_from_dict(db_np, P=P)
+    stats = stats_of_db(db)
+
+    def measure(mode):
+        sched = SlotScheduler(
+            Executor(dict(db), SimComm(P), ExecutorConfig(execution_mode=mode)),
+            slots=slots, stats=stats,
+        )
+        env, rep = sched.execute(plan)
+        _check_events(rep)
+        return rep.event_makespan(), {q.name: env[q.name].to_set() for q in qs}
+
+    for mode in ("async", "waves"):  # warm jit caches before timing
+        measure(mode)
+    nets, outs = {}, {}
+    # a one-off wall-clock hiccup landing in the long job can erase the
+    # scheduling margin; re-measure once before failing the strict check
+    for attempt in range(2):
+        for mode in ("async", "waves"):
+            nets[mode], outs[mode] = measure(mode)
+        assert outs["async"] == outs["waves"], (
+            "straggler scenario: async and wave outputs must be bit-identical"
+        )
+        if nets["async"] < nets["waves"]:
+            break
+    assert nets["async"] < nets["waves"], (
+        f"async net {nets['async']:.4f}s must be strictly below "
+        f"barrier-wave net {nets['waves']:.4f}s on the straggler ladder"
+    )
+    return {
+        "slots": slots, "jobs": plan.n_jobs,
+        "n_big": n_big, "n_small": n_small, "n_small_jobs": n_small_jobs,
+        "async_net_time": round(nets["async"], 4),
+        "wave_net_time": round(nets["waves"], 4),
+        "speedup": round(nets["waves"] / max(nets["async"], 1e-9), 3),
+        "bit_identical": True,
+    }
+
+
 def acceptance_checks(
     *, n_guard: int = 512, n_cond: int = 512, P: int = DEFAULT_P,
-    slots: int | None = None,
+    slots: int | None = None, quick: bool = False,
 ) -> dict:
-    """The ISSUE-3 acceptance criteria, machine-checked into the JSON."""
+    """The ISSUE-3 + ISSUE-4 acceptance criteria, machine-checked into the
+    JSON: warm ticks run 0 jobs / 0 bytes with bit-identical outputs and
+    per-relation epoch survival (PR 3), the straggler ladder's
+    ``async_net_time <= wave_net_time``, and the event-accounting replay
+    identities on every report (PR 4)."""
     pool = query_pool()
     db_np = Q.gen_db(pool, n_guard=n_guard, n_cond=n_cond)
     svc = SGFService(catalog_from_numpy(db_np, P=P), slots=slots)
@@ -267,10 +379,20 @@ def acceptance_checks(
         svc2.cache.misses == plan_misses and svc2.cache.hits == 1
     )
     unrelated_ok = results_survive and plans_survive
+    # ISSUE-4: exact replay identities on every report this run produced,
+    # then the straggler ladder (asserts async strictly below waves)
+    for rep in svc.reports + svc2.reports:
+        _check_events(rep)
+    # waves pay the straggler PLUS ⌈(k-1)/W⌉ short waves; async pays only
+    # max(straggler, balanced shorts) — the 4-equation big job keeps the
+    # gap well above timing noise at both data sizes
+    strag = straggler(P=P, slots=2, n_big=8192 if quick else 16384)
     return {
         "warm_tick_zero_jobs_zero_bytes": bool(warm_zero),
         "warm_bit_identical_to_cold": bool(bit_identical),
         "unrelated_register_keeps_cache": bool(unrelated_ok),
+        "event_accounting_exact": True,  # _check_events would have raised
+        "straggler": strag,
         "rel_epochs": dict(svc.catalog.rel_epochs),
         "plan_cache": svc.cache.counters(),
         "result_cache": svc.results.counters(),
@@ -330,9 +452,12 @@ def main(argv=None) -> None:
     print(",".join(REPEAT_COLS))
     for r in repeat_rows:
         print(",".join(str(r[c]) for c in REPEAT_COLS), flush=True)
-    acceptance = acceptance_checks(slots=args.slots)
+    acceptance = acceptance_checks(slots=args.slots, quick=args.quick)
     print(f"# acceptance: { {k: v for k, v in acceptance.items() if isinstance(v, bool)} }",
           file=sys.stderr)
+    print(f"# straggler (W=2): async={acceptance['straggler']['async_net_time']}s "
+          f"waves={acceptance['straggler']['wave_net_time']}s "
+          f"speedup={acceptance['straggler']['speedup']}x", file=sys.stderr)
     print(f"# service_throughput done in {time.time()-t0:.1f}s", file=sys.stderr)
     if args.json:
         write_json(args.json, rows, repeat_rows, acceptance,

@@ -1,13 +1,16 @@
-"""Quickstart for the SGF query service (DESIGN.md §9–§10).
+"""Quickstart for the SGF query service (DESIGN.md §9–§11).
 
 Eight tenants submit mixed A-family queries against catalog-resident
 relations; the service fuses each tick's admissions into one multi-tenant
 plan (canonical dedup + cross-tenant semi-join pooling), caches the plan
-by canonical fingerprint, and runs it on a W-slot scheduler.  A second
-round of the same traffic is served entirely from the cross-tick result
-cache — zero jobs, zero shuffled bytes — and per-relation epochs keep the
-cache warm across unrelated catalog registrations while invalidating
-exactly the queries that read a re-registered relation.
+by canonical fingerprint, and runs it on the ready-queue executor under W
+cluster slots: each job launches as soon as its predecessors complete and
+a slot frees, with a per-job probe-backend decision from the cost model
+(the event timeline and backend choices print below).  A second round of
+the same traffic is served entirely from the cross-tick result cache —
+zero jobs, zero shuffled bytes — and per-relation epochs keep the cache
+warm across unrelated catalog registrations while invalidating exactly
+the queries that read a re-registered relation.
 
 Run:  PYTHONPATH=src python examples/sgf_service.py
 """
@@ -38,7 +41,8 @@ db_np = Q.gen_db(workload, n_guard=2048, n_cond=2048)
 catalog = catalog_from_numpy(db_np, P=P)
 print(f"catalog: {len(catalog)} relations over P={P} shards")
 
-# 2. admit one tick of traffic and run it as one fused plan on W slots
+# 2. admit one tick of traffic and run it as one fused plan on the
+#    ready-queue executor under W slots
 svc = SGFService(catalog, slots=SLOTS)
 requests = [svc.submit([q]) for q in workload]
 svc.tick()
@@ -47,8 +51,20 @@ print(
     f"tick 1: {TENANTS} tenants -> {len(batch.queries)} canonical queries "
     f"({batch.n_deduped} deduped), {report.n_jobs} jobs, "
     f"{report.bytes_shuffled()} bytes shuffled, "
-    f"net(W={SLOTS})={report.net_time_under_slots(SLOTS)*1e3:.1f}ms"
+    f"net(W={SLOTS})={report.event_makespan()*1e3:.1f}ms"
 )
+
+# the event timeline the executor recorded: one line per job, showing the
+# slot it occupied, its virtual start/end, and the per-job backend the
+# cost model picked (an MSJ job's sorted/pallas/dense decision; EVAL "-")
+print(f"event timeline (W={SLOTS} slots):")
+for rec in report.records:
+    print(
+        f"  slot {rec.slot}  {rec.start*1e3:7.1f} -> {rec.end*1e3:7.1f} ms"
+        f"  backend={rec.backend or '-':6s}  {rec.job}"
+    )
+assert report.net_time_by_events(None) == report.net_time  # W=inf identity
+assert report.net_time_by_events(1) == report.total_time  # W=1 identity
 
 # 3. verify against the set-semantics oracle
 setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}

@@ -151,6 +151,80 @@ def lpt_makespan(costs: Sequence[float], slots: int | None = None) -> float:
 
 
 # --------------------------------------------------------------------------
+# Per-job probe-backend choice (how ExecutorConfig.probe_backend="auto"
+# resolves — one decision per dequeued job, so a fused multi-tenant plan
+# can mix backends across its jobs)
+# --------------------------------------------------------------------------
+
+#: modeled per-element weight of one argsort pass relative to one
+#: vectorized compare: sorts carry a large constant factor, so the
+#: quadratic dense probe wins at trivial sizes despite its asymptotics.
+SORT_WEIGHT = 16.0
+
+#: the dense probe materializes a (probe × build) compare matrix; cap the
+#: per-side rows so its quadratic memory stays bounded even when the
+#: modeled compare count looks cheap (e.g. 16 probes against 10^9 builds).
+DENSE_MAX_SIDE = 4096.0
+
+
+def choose_backend(
+    build_rows: float | None,
+    probe_rows: float | None,
+    key_width: int = 1,
+    *,
+    selectivity: float = 0.5,
+    on_tpu: bool | None = None,
+) -> str:
+    """Pick the probe backend for ONE MSJ job from its relation statistics.
+
+    Models the reducer work of the three backends (unit: one int32 column
+    op over per-shard probe inputs):
+
+    * ``dense``  — quadratic all-pairs compare; no sort overhead, so it is
+      cheapest at trivial sizes.
+    * ``sorted`` — jnp sort-merge over (sig, key): ``key_width + 1`` stable
+      argsort passes, the robust default.
+    * ``pallas`` — the bucketed kernel (DESIGN.md §6): one single-column
+      prune-key sort per side plus the diagonal band of same-bucket tile
+      pairs; the expected band mass scales with the duplicate/overlap
+      density, for which the semi-join ``selectivity`` is the proxy.  Off
+      TPU the interpreter inside the vmapped SimComm loop executes both
+      arms of the tile-skip predicate, so the band win is fictional and
+      the kernel is never chosen.
+
+    ``build_rows`` / ``probe_rows`` of ``None`` mean "unknown, assume
+    large"; with no statistics the choice degenerates to the pre-cost-model
+    behaviour (pallas on TPU, sorted elsewhere).  Never returns ``"auto"``.
+    """
+    if on_tpu is None:
+        import jax
+
+        try:
+            on_tpu = jax.default_backend() == "tpu"
+        except RuntimeError:  # no backend initialized at all
+            on_tpu = False
+    big = 1e9
+    b = max(float(build_rows) if build_rows is not None else big, 1.0)
+    p = max(float(probe_rows) if probe_rows is not None else big, 1.0)
+    n = b + p
+    kw = max(int(key_width), 1)
+    logn = math.log2(max(n, 2.0))
+    cost_dense = b * p * (kw + 1)
+    cost_sorted = SORT_WEIGHT * (kw + 1) * n * logn
+    if on_tpu:
+        band = (b * p / n) * (1.0 + max(min(float(selectivity), 1.0), 0.0))
+        cost_pallas = SORT_WEIGHT * n * logn + band * (kw + 1)
+    else:
+        cost_pallas = math.inf
+    best, name = cost_sorted, "sorted"
+    if cost_pallas < best:
+        best, name = cost_pallas, "pallas"
+    if cost_dense < best and b <= DENSE_MAX_SIDE and p <= DENSE_MAX_SIDE:
+        best, name = cost_dense, "dense"
+    return name
+
+
+# --------------------------------------------------------------------------
 # Relation statistics
 # --------------------------------------------------------------------------
 

@@ -1,13 +1,27 @@
-"""Round-based plan executor with net/total time accounting.
+"""Dependency-driven plan executor with event-timeline accounting.
 
 Runs a :class:`~repro.core.planner.Plan` against a database, job by job,
-through the comm runner (SimComm on CPU, MeshComm on a device mesh).
+through the comm runner (SimComm on CPU, MeshComm on a device mesh).  The
+plan's job DAG (:func:`repro.core.planner.job_dag`, strata edges only) is
+walked *online*: a job launches as soon as its predecessors have completed
+and one of the W cluster slots frees (event-driven list scheduling), so a
+straggler stalls only its own slot instead of a whole barrier wave.  The
+legacy barrier-wave discipline survives behind
+``ExecutorConfig.execution_mode="waves"`` for differential testing.
 
-Timing semantics on this container (see DESIGN.md §8): a SimComm job
+Timing semantics on this container (see DESIGN.md §8/§11): a SimComm job
 serializes the work of all P shards onto the host, so a job's wall time is
-a proxy for the paper's *total time* contribution; the round structure
-gives the *net time* proxy ``Σ_rounds max_job``.  Modeled costs (the cost
-model with either constant set) are reported alongside by the benchmarks.
+a proxy for the paper's *total time* contribution.  The executor assembles
+the measured walls into a virtual W-slot event timeline
+(``JobRecord.start/end/slot``); ``Report.event_makespan()`` prices the
+schedule that actually ran and ``Report.net_time_by_events(W)`` re-prices
+the same records under any slot budget (W=∞ reproduces ``net_time``
+exactly, W=1 reproduces ``total_time``).
+
+Per-job backend dispatch: with ``probe_backend="auto"`` each dequeued MSJ
+job gets its own sorted/pallas/dense decision from the cost model
+(:func:`repro.core.costmodel.choose_backend`) using that job's relation
+statistics — one fused multi-tenant plan can mix backends across jobs.
 
 Fault-tolerance hooks: jobs raise :class:`CapacityFault` on exact shuffle
 overflow; the supervisor (ft/supervisor.py) retries with doubled capacity
@@ -15,6 +29,7 @@ and re-dispatches straggler jobs.  ``on_job`` lets callers inject faults.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
@@ -23,9 +38,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.algebra import BSGF
+from repro.core.costmodel import Stats, choose_backend
 from repro.core.eval_op import EvalUnit, run_eval
-from repro.core.msj import FusedQuery, conform_mask, run_msj
-from repro.core.planner import EvalJob, Job, MSJJob, Plan
+from repro.core.msj import FusedQuery, conform_mask, make_spec, run_msj
+from repro.core.planner import EvalJob, Job, MSJJob, Plan, job_dag
 from repro.core.relation import Relation
 from repro.engine.comm import Comm
 
@@ -46,9 +62,34 @@ class JobRecord:
     wall: float
     stats: dict
     attempts: int = 1
-    #: execution wave the slot scheduler ran this job in (-1: barrier-round
-    #: executor, where waves and rounds coincide by construction).
-    wave: int = -1
+    #: probe backend the job actually ran ("" for EVAL jobs / legacy paths).
+    backend: str = ""
+    #: event timeline: virtual start/end (seconds) and the cluster slot the
+    #: job occupied in the W-slot schedule (-1: no event info recorded).
+    start: float = -1.0
+    end: float = -1.0
+    slot: int = -1
+
+
+@dataclass(frozen=True)
+class ScheduledJob:
+    """Dispatch-log entry: where one plan job landed in the event timeline,
+    alongside the admission-time modeled cost the LPT ordering used."""
+
+    idx: int  # job index in plan (job_dag) order
+    round_idx: int
+    slot: int
+    start: float
+    end: float
+    est_cost: float
+
+
+def int_stats(stats: dict) -> tuple[dict, str]:
+    """Coerce job stats to host ints, splitting off the probe-backend tag
+    (the one non-numeric entry :meth:`Executor.run_job` records)."""
+    s = dict(stats)
+    backend = str(s.pop("backend", ""))
+    return {k: int(v) for k, v in s.items()}, backend
 
 
 @dataclass
@@ -80,20 +121,51 @@ class Report:
             by_round.setdefault(r.round_idx, []).append(r.wall)
         return sum(lpt_makespan(ws, slots) for ws in by_round.values())
 
-    def net_time_by_wave(self) -> float | None:
-        """Net time of the schedule that actually ran: max wall per
-        recorded execution wave, summed.  Unlike re-deriving an LPT
-        makespan from per-round walls, this cannot disagree with the
-        waves the slot scheduler admitted.  ``None`` when any record
-        lacks wave info (barrier-round executor); 0.0 for an empty
-        report (a fully warm service tick runs no jobs).
-        """
-        if any(r.wave < 0 for r in self.records):
+    def event_makespan(self) -> float | None:
+        """Net time of the schedule that actually ran: the latest recorded
+        event-timeline end.  ``None`` when any record lacks event info
+        (e.g. a hand-built report); 0.0 for an empty report (a fully warm
+        service tick runs no jobs)."""
+        if any(r.end < 0.0 for r in self.records):
             return None
-        by_wave: dict[int, float] = {}
-        for r in self.records:
-            by_wave[r.wave] = max(by_wave.get(r.wave, 0.0), r.wall)
-        return sum(by_wave.values())
+        return max((r.end for r in self.records), default=0.0)
+
+    def net_time_by_events(self, slots: int | None = None) -> float:
+        """Critical-path net time of the recorded walls under ``slots``
+        concurrent cluster slots: replays event-driven list scheduling in
+        record (dispatch) order with plan rounds as barriers.
+
+        Unlike :meth:`event_makespan` this re-derives the timeline from the
+        walls alone, so the same records can be priced under any W:
+        ``slots=None`` (W=∞) reproduces :attr:`net_time` *exactly* and
+        ``slots=1`` reproduces :attr:`total_time` *exactly* — the replay
+        threads the identical float additions.
+        """
+        recs = self.records
+        if not recs:
+            return 0.0
+        if slots is None or math.isinf(slots):
+            W = len(recs)
+        else:
+            W = int(slots)
+            if W < 1:
+                raise ValueError(f"slots must be >= 1 or None (unbounded), got {slots}")
+            W = min(W, len(recs))
+        slot_free = [0.0] * W
+        barrier = 0.0  # every job of earlier rounds has ended by here
+        makespan = 0.0
+        cur_round = recs[0].round_idx
+        for r in recs:
+            if r.round_idx != cur_round:
+                cur_round = r.round_idx
+                barrier = makespan
+                slot_free = [barrier] * W
+            i = min(range(W), key=slot_free.__getitem__)
+            end = max(slot_free[i], barrier) + r.wall
+            slot_free[i] = end
+            if end > makespan:
+                makespan = end
+        return makespan
 
     def bytes_shuffled(self) -> int:
         return int(
@@ -152,6 +224,9 @@ def _fused_query_of(q: BSGF, job: MSJJob) -> FusedQuery:
 #: construction so a typo fails at service/executor setup, not at job time).
 PROBE_BACKENDS = ("auto", "sorted", "pallas", "dense")
 
+#: valid ExecutorConfig.execution_mode names.
+EXECUTION_MODES = ("async", "waves")
+
 
 @dataclass
 class ExecutorConfig:
@@ -163,9 +238,9 @@ class ExecutorConfig:
     #: reducer probe backend: "pallas" = the bucketed msj_probe kernel
     #: (interpret auto-detection per ops.auto_interpret), "sorted" = jnp
     #: sort-merge, "dense" = the quadratic oracle.  The default "auto"
-    #: resolves to the bucketed kernel on TPU and to "sorted" elsewhere:
-    #: the Pallas interpreter inside the vmapped SimComm hot loop executes
-    #: both arms of the tile-skip predicate and cannot win on CPU.
+    #: resolves *per job* through the cost model
+    #: (costmodel.choose_backend) from that job's RelStats — rows, key
+    #: width, estimated selectivity — so one plan can mix backends.
     probe_backend: str = "auto"
     #: two-phase count-sized forward shuffle (DESIGN.md §6); False restores
     #: the worst-case default_forward_cap bound.
@@ -173,6 +248,15 @@ class ExecutorConfig:
     #: (signature, key) fingerprint message layout (DESIGN.md §5); False
     #: restores the seed [kind, tag, key*KW, src, row] layout end to end.
     fingerprint: bool = True
+    #: "async" walks the job DAG with a ready queue (event-driven list
+    #: scheduling, DESIGN.md §11); "waves" restores the barrier-wave
+    #: discipline (with unbounded slots: the seed round-by-round executor).
+    execution_mode: str = "async"
+    #: block on each job's output arrays before timing it.  False keeps
+    #: jax async dispatch in flight across jobs (outputs materialize while
+    #: later jobs launch); the overflow check still syncs the stats scalar,
+    #: so exact fault detection is unaffected.
+    sync_per_job: bool = True
 
     def __post_init__(self):
         if self.probe_backend not in PROBE_BACKENDS:
@@ -180,18 +264,28 @@ class ExecutorConfig:
                 f"unknown probe backend {self.probe_backend!r}; "
                 f"valid names: {', '.join(PROBE_BACKENDS)}"
             )
+        if self.execution_mode not in EXECUTION_MODES:
+            raise ValueError(
+                f"unknown execution mode {self.execution_mode!r}; "
+                f"valid names: {', '.join(EXECUTION_MODES)}"
+            )
 
 
 def resolve_probe_backend(name: str) -> Callable:
-    """Map an ExecutorConfig.probe_backend name to a probe_fn callable."""
+    """Map an ExecutorConfig.probe_backend name to a probe_fn callable.
+
+    ``"auto"`` routes through the cost model
+    (:func:`repro.core.costmodel.choose_backend`).  The executor resolves
+    per-job statistics first (:meth:`Executor._probe_backend_for`) and
+    passes a concrete name here; a bare ``"auto"`` carries no statistics
+    and degenerates to the bucketed kernel on TPU and jnp sort-merge
+    elsewhere (the interpreter inside the vmapped SimComm hot loop
+    executes both arms of the tile-skip predicate and cannot win on CPU).
+    """
     from repro.core import msj
 
     if name == "auto":
-        try:
-            on_tpu = jax.default_backend() == "tpu"
-        except RuntimeError:
-            on_tpu = False
-        name = "pallas" if on_tpu else "sorted"
+        name = choose_backend(None, None)
     if name == "sorted":
         return msj.probe_sorted
     if name == "dense":
@@ -206,12 +300,55 @@ def resolve_probe_backend(name: str) -> Callable:
 
 
 class Executor:
-    """Executes plans; the unit the fault supervisor wraps."""
+    """Executes plans; the unit the fault supervisor wraps.
 
-    def __init__(self, db: dict[str, Relation], comm: Comm, config: ExecutorConfig | None = None):
+    ``stats`` (optional) backs the per-job ``"auto"`` backend decision;
+    without it static capacity bounds of the resident relations are used
+    (no device sync on the hot path).
+    """
+
+    def __init__(
+        self,
+        db: dict[str, Relation],
+        comm: Comm,
+        config: ExecutorConfig | None = None,
+        *,
+        stats: Stats | None = None,
+    ):
         self.env: dict[str, Relation] = dict(db)
         self.comm = comm
         self.config = config or ExecutorConfig()
+        self.stats = stats
+        #: dispatch log of the last :meth:`execute` call.
+        self.schedule: list[ScheduledJob] = []
+
+    # -- per-job backend decision ------------------------------------------
+    def _probe_backend_for(self, job: MSJJob) -> str:
+        """Resolve ``probe_backend="auto"`` for ONE job: per-shard build /
+        probe row estimates, key width, and mean semi-join selectivity feed
+        the cost model, so jobs of one plan can land on different backends."""
+        name = self.config.probe_backend
+        if name != "auto":
+            return name
+        spec = make_spec(list(job.sjs))
+        P = max(getattr(self.comm, "P", 1), 1)
+
+        def rows(rel_name: str) -> float | None:
+            if self.stats is not None and rel_name in self.stats.rels:
+                return self.stats.rel(rel_name).rows
+            rel = self.env.get(rel_name)
+            # static capacity upper bound — no device sync on the hot path
+            return float(rel.P * rel.cap) if rel is not None else None
+
+        build = [rows(s.rel) for s in spec.sigs]
+        probe = [rows(i.guard_rel) for i in spec.sj_info]
+        b = sum(build) / P if build and all(v is not None for v in build) else None
+        p = sum(probe) / P if probe and all(v is not None for v in probe) else None
+        sel = 0.5
+        if self.stats is not None and job.sjs:
+            sels = [self.stats.selectivity(sj) for sj in job.sjs]
+            sel = sum(sels) / len(sels)
+        return choose_backend(b, p, spec.key_width, selectivity=sel)
 
     # -- single jobs -------------------------------------------------------
     def run_job(
@@ -223,6 +360,7 @@ class Executor:
     ) -> tuple[dict, dict]:
         if isinstance(job, MSJJob):
             fused = tuple(_fused_query_of(q, job) for q in job.fused)
+            backend = self._probe_backend_for(job)
             outs, stats = run_msj(
                 self.env,
                 list(job.sjs),
@@ -231,7 +369,7 @@ class Executor:
                 fused=fused,
                 bloom_bits=self.config.bloom_bits,
                 forward_cap=cap_override,
-                probe_fn=resolve_probe_backend(self.config.probe_backend),
+                probe_fn=resolve_probe_backend(backend),
                 fingerprint=self.config.fingerprint,
                 count_sized=self.config.count_sized,
                 cap_slack=self.config.cap_slack if cap_slack is None else cap_slack,
@@ -239,6 +377,7 @@ class Executor:
             stats["input_rows"] = sum(
                 int(self.env[r].count()) for r in _msj_input_rels(job, self.env)
             )
+            stats["backend"] = backend
             return outs, stats
         # EVAL job
         env = dict(self.env)
@@ -285,7 +424,7 @@ class Executor:
                 used = int(stats.get("forward_cap", 0))
                 cap = max(used, 1) * 2
 
-    # -- job-granular entry (what the slot scheduler drives) ---------------
+    # -- job-granular entry (what the ready-queue walk drives) -------------
     def execute_job(
         self,
         job: Job,
@@ -298,25 +437,125 @@ class Executor:
         environment, and append a :class:`JobRecord` to ``report``."""
         t0 = time.perf_counter()
         outs, stats, attempts = self.run_job_ft(job, on_job)
-        for v in outs.values():
-            jax.block_until_ready(v.data)
+        if self.config.sync_per_job:
+            for v in outs.values():
+                jax.block_until_ready(v.data)
         wall = time.perf_counter() - t0
         for name, rel in outs.items():
             if self.config.compact:
                 rel = rel.compacted()
             self.env[name] = rel
-        rec = JobRecord(
-            job, round_idx, wall, {k: int(v) for k, v in stats.items()}, attempts
-        )
+        ints, backend = int_stats(stats)
+        rec = JobRecord(job, round_idx, wall, ints, attempts, backend)
         report.records.append(rec)
         return rec
 
-    # -- whole plans ---------------------------------------------------------
-    def execute(self, plan: Plan, *, on_job: Callable | None = None) -> tuple[dict, Report]:
+    # -- whole plans -------------------------------------------------------
+    def execute(
+        self,
+        plan: Plan,
+        *,
+        slots: int | None = None,
+        est: dict[int, float] | None = None,
+        on_job: Callable | None = None,
+    ) -> tuple[dict, Report]:
+        """Run a whole plan under ``config.execution_mode``.
+
+        ``slots`` bounds the concurrent cluster slots W (None = unbounded);
+        ``est`` maps job-DAG indices to modeled costs for LPT ordering (the
+        slot scheduler's admission-time estimate; absent = plan order).
+
+        * ``"async"`` (default) — dependency-driven ready-queue walk of
+          :func:`repro.core.planner.job_dag`: a job launches as soon as its
+          predecessors completed and a slot frees (event-driven list
+          scheduling); a straggler stalls only its own slot.
+        * ``"waves"`` — the legacy barrier discipline: at most W ready jobs
+          per wave, the whole wave joins before the next is admitted.  With
+          ``slots=None`` waves coincide with plan rounds (the seed
+          barrier-round executor), kept for differential testing.
+
+        Jobs still *execute* serially on this container (SimComm serializes
+        shard work onto the host — DESIGN.md §8); the recorded
+        ``JobRecord.start/end/slot`` timeline is the virtual W-slot
+        schedule assembled from the measured walls, which
+        ``Report.event_makespan()`` / ``net_time_by_events`` price.
+        """
+        if slots is not None and slots < 1:
+            raise ValueError(f"slots must be >= 1 or None (unbounded), got {slots}")
+        nodes = job_dag(plan)
+        if est is None:
+            est = {n.idx: 0.0 for n in nodes}
+        self.schedule = []
+        if self.config.execution_mode == "waves":
+            return self._execute_waves(nodes, slots, est, on_job)
+        return self._execute_async(nodes, slots, est, on_job)
+
+    def _execute_async(self, nodes, slots, est, on_job) -> tuple[dict, Report]:
+        """Event-driven ready-queue walk (DESIGN.md §11).
+
+        Dispatch rule: take the slot that frees earliest; among jobs whose
+        predecessors have all completed by then, start the longest modeled
+        one (LPT).  If every ready job is still blocked on in-flight
+        predecessors, the slot idles until the earliest one unblocks.
+        """
         report = Report()
-        for ri, rnd in enumerate(plan.rounds):
-            for job in rnd.jobs:
-                self.execute_job(job, ri, report, on_job=on_job)
+        n_slots = len(nodes) if slots is None else max(1, min(slots, len(nodes)))
+        slot_free = [0.0] * max(n_slots, 1)
+        end_at: dict[int, float] = {}
+        pending = {n.idx: n for n in nodes}
+
+        def ready_at(node) -> float:
+            return max((end_at[d] for d in node.deps), default=0.0)
+
+        while pending:
+            ready = [n for n in pending.values() if all(d in end_at for d in n.deps)]
+            if not ready:
+                raise RuntimeError("job DAG has a cycle (malformed plan)")
+            s = min(range(len(slot_free)), key=slot_free.__getitem__)
+            startable = [n for n in ready if ready_at(n) <= slot_free[s]]
+            if startable:
+                node = min(startable, key=lambda n: (-est[n.idx], n.idx))
+                start = slot_free[s]
+            else:
+                node = min(ready, key=lambda n: (ready_at(n), -est[n.idx], n.idx))
+                start = ready_at(node)
+            rec = self.execute_job(node.job, node.round_idx, report, on_job=on_job)
+            rec.start, rec.end, rec.slot = start, start + rec.wall, s
+            slot_free[s] = rec.end
+            end_at[node.idx] = rec.end
+            self.schedule.append(
+                ScheduledJob(node.idx, node.round_idx, s, rec.start, rec.end, est[node.idx])
+            )
+            del pending[node.idx]
+        return self.env, report
+
+    def _execute_waves(self, nodes, slots, est, on_job) -> tuple[dict, Report]:
+        """Barrier-wave discipline: admit ≤ W ready jobs (LPT), join them
+        all, repeat.  Every admitted job starts at the wave barrier on its
+        own slot, so the event timeline prices Σ_waves max_wall."""
+        report = Report()
+        done: set[int] = set()
+        pending = list(nodes)
+        wave_start = 0.0
+        while pending:
+            ready = [n for n in pending if all(d in done for d in n.deps)]
+            if not ready:
+                raise RuntimeError("job DAG has a cycle (malformed plan)")
+            # LPT: longest modeled job first; plan order breaks ties so the
+            # schedule is deterministic.
+            ready.sort(key=lambda n: (-est[n.idx], n.idx))
+            admitted = ready if slots is None else ready[:slots]
+            wave_end = wave_start
+            for si, n in enumerate(admitted):
+                rec = self.execute_job(n.job, n.round_idx, report, on_job=on_job)
+                rec.start, rec.end, rec.slot = wave_start, wave_start + rec.wall, si
+                wave_end = max(wave_end, rec.end)
+                self.schedule.append(
+                    ScheduledJob(n.idx, n.round_idx, si, rec.start, rec.end, est[n.idx])
+                )
+                done.add(n.idx)
+            pending = [n for n in pending if n.idx not in done]
+            wave_start = wave_end
         return self.env, report
 
 

@@ -3,9 +3,12 @@ SEQ / PAR / GREEDY / 1-ROUND strategies of Section 5.
 
 Plan IR
 -------
-A :class:`Plan` is a sequence of :class:`Round`s; jobs within a round run
-in parallel on the cluster (one MR "wave"), rounds are barriers.  Two job
-kinds mirror the paper's operators:
+A :class:`Plan` is a sequence of :class:`Round`s; jobs within a round may
+run in parallel on the cluster, rounds are barriers.  :func:`job_dag`
+exposes the same structure as a job-level dependency DAG, which the
+ready-queue executor (``Executor.execute``, DESIGN.md §11) walks online —
+rounds then constrain *precedence*, not wave membership.  Two job kinds
+mirror the paper's operators:
 
 * :class:`MSJJob` — one multi-semi-join job.  ``sjs`` are the equations to
   evaluate; ``fused`` are BSGF queries whose Boolean formula is applied
@@ -126,7 +129,9 @@ def job_dag(plan: Plan) -> tuple[JobNode, ...]:
 
     Rounds are barriers, so every job depends on all jobs of the previous
     round and on nothing else.  This is the conservative reading of the
-    Plan IR the slot scheduler consumes: with W=∞ slots the scheduler's
+    Plan IR the ready-queue executor walks online (``Executor.execute``):
+    a job is dispatched as soon as its predecessors completed and a slot
+    frees.  With W=∞ slots and ``execution_mode="waves"`` the admitted
     waves coincide exactly with the plan's rounds.
     """
     nodes: list[JobNode] = []

@@ -23,7 +23,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.executor import CapacityFault, Executor, JobRecord, Report
+from repro.core.executor import CapacityFault, Executor, JobRecord, Report, int_stats
 
 
 class SimulatedFault(RuntimeError):
@@ -102,9 +102,8 @@ class Supervisor:
                     if self.ex.config.compact:
                         rel = rel.compacted()
                     self.ex.env[name] = rel
-                report.records.append(
-                    JobRecord(job, ri, wall, {k: int(v) for k, v in stats.items()})
-                )
+                ints, backend = int_stats(stats)
+                report.records.append(JobRecord(job, ri, wall, ints, backend=backend))
         return self.ex.env, report
 
 

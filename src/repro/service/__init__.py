@@ -5,8 +5,9 @@ Dataflow: ``Catalog`` (resident relations + stats, per-relation epochs) →
 ``SGFService.submit`` (admission queue) → ``fuse_requests`` (canonicalize
 + dedup into one multi-tenant batch) → ``ResultCache`` (warm queries
 served by scatter, zero jobs) → ``PlanCache`` (fingerprint-keyed plans
-for the cold remainder) → ``SlotScheduler`` (W-slot waves over the job
-DAG) → per-request output scatter.
+for the cold remainder) → ``SlotScheduler`` (LPT cost estimates feeding
+the ready-queue executor's W-slot walk of the job DAG, with per-job
+probe-backend dispatch — DESIGN.md §11) → per-request output scatter.
 """
 from repro.service.batcher import (
     AdmissionBatcher,

@@ -21,8 +21,11 @@ results and EVAL inputs are cached across ticks (result_cache.py) keyed
 by per-relation catalog epochs, so each tick partitions its fused batch
 into *warm* queries (served by scatter — zero jobs, zero shuffled bytes)
 and *cold* queries (planned and executed, results inserted on
-completion).  Execution runs on the W-slot scheduler (scheduler.py) over
-catalog-resident relations (catalog.py).  DESIGN.md §9–§10.
+completion).  Execution runs on the ready-queue executor under W cluster
+slots (scheduler.py estimates, core/executor.py dispatches — a job
+launches as soon as its predecessors complete and a slot frees, with a
+per-job probe-backend decision) over catalog-resident relations
+(catalog.py).  DESIGN.md §9–§11.
 """
 from __future__ import annotations
 
@@ -375,8 +378,10 @@ class SGFService:
         # own copy) and the scheduler copies again before mutating
         for name, rel in injected.items():
             stats.register_output(name, float(rel.count()), rel.arity)
+        # stats also feed the executor's per-job "auto" backend decision
         ex = Executor(
-            {**self.catalog.db(), **warm, **injected}, self.comm, self.config
+            {**self.catalog.db(), **warm, **injected}, self.comm, self.config,
+            stats=stats,
         )
         sched = SlotScheduler(
             ex,
@@ -429,14 +434,14 @@ class SGFService:
 
     # -- introspection -----------------------------------------------------
     def _net_time(self, report: Report) -> float:
-        """Net time of one tick: prefer the waves the scheduler actually
-        recorded (an LPT re-derivation from per-round walls can disagree
-        with the real schedule); fall back to the modeled makespan only for
-        wave-less records (barrier-round executor)."""
-        by_wave = report.net_time_by_wave()
-        if by_wave is None:
+        """Net time of one tick: prefer the event timeline the executor
+        actually recorded (an LPT re-derivation from per-round walls can
+        disagree with the real schedule); fall back to the modeled
+        makespan only for records without event info."""
+        makespan = report.event_makespan()
+        if makespan is None:
             return report.net_time_under_slots(self.slots)
-        return by_wave
+        return makespan
 
     def counters(self) -> dict:
         c = self.cache.counters()

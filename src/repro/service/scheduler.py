@@ -1,48 +1,43 @@
-"""Slot-limited list scheduler: W concurrent cluster slots over a job DAG.
+"""Slot-limited scheduling front-end: admission-time cost estimates for
+the executor's ready-queue walk.
 
-The barrier-round executor assumes the cluster can absorb every job of a
-round at once; on a real cluster with W bounded slots a wide round runs
-as ⌈k/W⌉ waves.  This scheduler replaces the executor's round loop for
-service traffic:
+The execution engine itself lives in ``Executor.execute`` (DESIGN.md
+§11): the plan's job DAG is walked online, launching any job whose
+predecessors have completed as soon as one of the W cluster slots frees
+(event-driven list scheduling), or — behind
+``ExecutorConfig.execution_mode="waves"`` — as the legacy barrier waves.
+What remains here is the *admission-time* side of the old static LPT
+plan:
 
-* the plan becomes a dependency DAG via :func:`repro.core.planner.job_dag`
-  (strata edges only — rounds stay barriers);
-* each wave admits at most W ready jobs, longest-modeled-cost first (LPT
-  list scheduling, the classic 4/3-approximation, using the slot-aware
-  cost model for ordering);
-* the produced :class:`~repro.core.executor.Report` records both the plan
-  round and the execution wave of every job, and
-  ``Report.net_time_under_slots(W)`` gives the makespan-style net-time
-  accounting.  With ``slots=None`` (W=∞) waves coincide with rounds and
-  the accounting reproduces ``Report.net_time`` exactly.
+* per-job modeled costs (`planner.job_cost` over the catalog statistics)
+  are derived once per plan and handed to the executor, which uses them
+  to order its ready queue longest-first (LPT list scheduling, the
+  classic 4/3-approximation);
+* the W bound is forwarded and the executor's dispatch log
+  (:class:`~repro.core.executor.ScheduledJob` entries with the event
+  timeline and the estimate that ordered each dispatch) is retained on
+  ``self.schedule`` for introspection.
 
-Jobs still *execute* serially on this container (SimComm serializes shard
-work onto the host — DESIGN.md §8), so wave membership is an accounting
-and admission-order concern, exactly like the round structure before it.
+Jobs still *execute* serially on this container (SimComm serializes
+shard work onto the host — DESIGN.md §8), so the slot/start/end timeline
+is an accounting and admission-order concern, exactly like the round
+structure before it.
 """
 from __future__ import annotations
 
 import copy
-from dataclasses import dataclass
 from typing import Callable
 
 from repro.core.costmodel import CostConstants, HADOOP, Stats
-from repro.core.executor import Executor, Report
+from repro.core.executor import Executor, Report, ScheduledJob  # re-export
 from repro.core.planner import Plan, job_cost, job_dag
 
-
-@dataclass(frozen=True)
-class ScheduledJob:
-    """Post-hoc schedule entry: which wave ran which plan job."""
-
-    idx: int  # job index in plan order
-    round_idx: int
-    wave: int
-    est_cost: float
+__all__ = ["ScheduledJob", "SlotScheduler"]
 
 
 class SlotScheduler:
-    """Drives an :class:`Executor` job by job under a W-slot budget."""
+    """Drives an :class:`Executor` under a W-slot budget with LPT cost
+    estimates from catalog statistics."""
 
     def __init__(
         self,
@@ -76,34 +71,13 @@ class SlotScheduler:
     def execute(
         self, plan: Plan, *, on_job: Callable | None = None
     ) -> tuple[dict, Report]:
-        nodes = job_dag(plan)
-        est = self._estimate(nodes)
-        report = Report()
-        self.schedule = []
-        done: set[int] = set()
-        pending = list(nodes)
-        wave = 0
-        while pending:
-            ready = [n for n in pending if all(d in done for d in n.deps)]
-            if not ready:
-                raise RuntimeError("job DAG has a cycle (malformed plan)")
-            # LPT: longest modeled job first; plan order breaks ties so the
-            # schedule is deterministic.
-            ready.sort(key=lambda n: (-est[n.idx], n.idx))
-            admitted = ready if self.slots is None else ready[: self.slots]
-            for n in admitted:
-                rec = self.executor.execute_job(
-                    n.job, n.round_idx, report, on_job=on_job
-                )
-                rec.wave = wave
-                self.schedule.append(
-                    ScheduledJob(n.idx, n.round_idx, wave, est[n.idx])
-                )
-                done.add(n.idx)
-            pending = [n for n in pending if n.idx not in done]
-            wave += 1
-        return self.executor.env, report
+        est = self._estimate(job_dag(plan))
+        env, report = self.executor.execute(
+            plan, slots=self.slots, est=est, on_job=on_job
+        )
+        self.schedule = list(self.executor.schedule)
+        return env, report
 
     @property
-    def n_waves(self) -> int:
-        return 1 + max((s.wave for s in self.schedule), default=-1)
+    def n_slots_used(self) -> int:
+        return len({s.slot for s in self.schedule})

@@ -1,0 +1,277 @@
+"""Scheduler-invariant tests for the ready-queue (async) executor and the
+event-timeline accounting (DESIGN.md §11): every recorded timeline must
+respect job_dag precedence and the W-slot bound; net_time_by_events must
+reproduce net_time at W=∞ and total_time at W=1 exactly; and async
+execution must be bit-identical to the legacy barrier-wave path (kept
+behind ``ExecutorConfig.execution_mode="waves"``)."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import queries as Q, ref_engine
+from repro.core.costmodel import stats_of_db
+from repro.core.executor import (
+    Executor,
+    ExecutorConfig,
+    JobRecord,
+    Report,
+    execute_plan,
+)
+from repro.core.planner import job_dag, plan_par, plan_sgf
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+from repro.service import SGFService, catalog_from_numpy
+from repro.service.scheduler import SlotScheduler
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+P = 2
+
+
+def _oracle_sgf(db_np, sgf):
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    out = {}
+    for q in sgf:
+        out[q.name] = ref_engine.eval_bsgf(setdb, q)
+        setdb[q.name] = out[q.name]
+    return out
+
+
+def _check_timeline(plan, report, schedule, slots):
+    """The scheduler invariants every recorded event timeline must hold."""
+    nodes = job_dag(plan)
+    by_idx = {s.idx: s for s in schedule}
+    assert len(by_idx) == len(nodes) == len(report.records)
+    # precedence: a job never starts before every predecessor has ended
+    for n in nodes:
+        for d in n.deps:
+            assert by_idx[d].end <= by_idx[n.idx].start, (d, n.idx)
+    # records and the dispatch log describe the same timeline
+    for rec, s in zip(report.records, schedule):
+        assert (rec.start, rec.end, rec.slot) == (s.start, s.end, s.slot)
+        assert rec.end == rec.start + rec.wall
+    # slot discipline: ≤ W distinct slots, no overlap within a slot
+    if slots is not None:
+        assert len({s.slot for s in schedule}) <= slots
+    for a, b in itertools.combinations(schedule, 2):
+        if a.slot == b.slot:
+            assert a.end <= b.start or b.end <= a.start, (a, b)
+    # concurrency sweep: at no instant are more than W jobs in flight
+    if slots is not None:
+        events = sorted(
+            [(s.start, 1) for s in schedule] + [(s.end, -1) for s in schedule],
+            key=lambda e: (e[0], e[1]),
+        )
+        running = peak = 0
+        for _, d in events:
+            running += d
+            peak = max(peak, running)
+        assert peak <= slots
+
+
+@pytest.fixture(scope="module")
+def c4_setup():
+    sgf = Q.make_sgf("C4")
+    db_np = Q.gen_db(sgf, n_guard=96, n_cond=96)
+    return sgf, db_np, plan_sgf(sgf, "parunit")
+
+
+def test_async_respects_dag_and_slot_bound(c4_setup):
+    sgf, db_np, plan = c4_setup
+    db = db_from_dict(db_np, P=P)
+    sched = SlotScheduler(
+        Executor(dict(db), SimComm(P)), slots=2, stats=stats_of_db(db)
+    )
+    env, rep = sched.execute(plan)
+    _check_timeline(plan, rep, sched.schedule, 2)
+    assert rep.net_time_by_events(None) == rep.net_time
+    assert rep.net_time_by_events(1) == rep.total_time
+    assert rep.event_makespan() == rep.net_time_by_events(2)
+    want = _oracle_sgf(db_np, sgf)
+    for q in sgf:
+        assert env[q.name].to_set() == want[q.name]
+
+
+def test_async_unbounded_starts_rounds_at_barriers(c4_setup):
+    """W=∞: every job of a round starts exactly at the previous round's
+    barrier on its own slot, so the event makespan equals net_time."""
+    _, db_np, plan = c4_setup
+    db = db_from_dict(db_np, P=P)
+    ex = Executor(dict(db), SimComm(P))
+    env, rep = ex.execute(plan)
+    _check_timeline(plan, rep, ex.schedule, None)
+    starts: dict[int, set] = {}
+    for rec in rep.records:
+        starts.setdefault(rec.round_idx, set()).add(rec.start)
+    assert all(len(s) == 1 for s in starts.values())
+    slots_r0 = [rec.slot for rec in rep.records if rec.round_idx == 0]
+    assert len(set(slots_r0)) == len(slots_r0)  # one slot per job
+    assert rep.event_makespan() == rep.net_time
+
+
+def test_async_bit_identical_to_waves(c4_setup):
+    """The differential the whole refactor rests on: async ready-queue
+    execution and barrier waves produce bit-identical environments."""
+    sgf, db_np, plan = c4_setup
+    stats = stats_of_db(db_from_dict(db_np, P=P))
+    envs, reps = {}, {}
+    for mode in ("async", "waves"):
+        db = db_from_dict(db_np, P=P)
+        cfg = ExecutorConfig(execution_mode=mode)
+        sched = SlotScheduler(Executor(dict(db), SimComm(P), cfg), slots=2,
+                              stats=stats)
+        envs[mode], reps[mode] = sched.execute(plan)
+    for q in sgf:
+        a, w = envs["async"][q.name], envs["waves"][q.name]
+        assert a.to_set() == w.to_set()
+        np.testing.assert_array_equal(np.asarray(a.data), np.asarray(w.data))
+        np.testing.assert_array_equal(np.asarray(a.valid), np.asarray(w.valid))
+    # both accountings satisfy the replay identities
+    for rep in reps.values():
+        assert rep.net_time_by_events(None) == rep.net_time
+        assert rep.net_time_by_events(1) == rep.total_time
+
+
+def test_service_async_matches_waves_mode():
+    """Fused multi-tenant batches are bit-identical across execution modes
+    (the service-level differential of the satellite checklist)."""
+    tenants = [[Q.make_queries("A1")[0]], [Q.make_queries("A3")[0]]]
+    flat = [q for qs in tenants for q in qs]
+    db_np = Q.gen_db(flat, n_guard=96, n_cond=96)
+    outs = {}
+    for mode in ("async", "waves"):
+        svc = SGFService(
+            catalog_from_numpy(db_np, P=P), comm=SimComm(P), slots=2,
+            config=ExecutorConfig(execution_mode=mode),
+        )
+        reqs = [svc.submit(qs) for qs in tenants]
+        svc.tick()
+        outs[mode] = [
+            {name: rel.to_set() for name, rel in req.outputs.items()}
+            for req in reqs
+        ]
+        rep = svc.last_report
+        assert rep.net_time_by_events(None) == rep.net_time
+        assert rep.net_time_by_events(1) == rep.total_time
+    assert outs["async"] == outs["waves"]
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    for req_out, qs in zip(outs["async"], tenants):
+        for q in qs:
+            assert req_out[q.name] == ref_engine.eval_bsgf(setdb, q)
+
+
+def test_waves_unbounded_reproduces_seed_rounds():
+    """execution_mode="waves" + slots=None is the seed barrier-round
+    executor: waves coincide with plan rounds, one barrier start each."""
+    qs = Q.make_queries("A1")
+    db = db_from_dict(Q.gen_db(qs, n_guard=96, n_cond=96), P=P)
+    cfg = ExecutorConfig(execution_mode="waves")
+    ex = Executor(dict(db), SimComm(P), cfg)
+    env, rep = ex.execute(plan_par(qs))
+    starts = {}
+    for rec in rep.records:
+        starts.setdefault(rec.round_idx, set()).add(rec.start)
+    assert all(len(s) == 1 for s in starts.values())
+    assert rep.event_makespan() == rep.net_time
+
+
+def test_async_dispatch_in_flight_outputs_identical():
+    """sync_per_job=False keeps jax async dispatch in flight across jobs;
+    results must not change (only the wall attribution does)."""
+    qs = Q.make_queries("A3")
+    db_np = Q.gen_db(qs, n_guard=96, n_cond=96)
+    env0, _ = execute_plan(
+        db_from_dict(db_np, P=P), plan_par(qs), SimComm(P), ExecutorConfig()
+    )
+    env1, _ = execute_plan(
+        db_from_dict(db_np, P=P), plan_par(qs), SimComm(P),
+        ExecutorConfig(sync_per_job=False),
+    )
+    assert env0["Z"].to_set() == env1["Z"].to_set()
+
+
+def test_execution_mode_validated_eagerly():
+    with pytest.raises(ValueError, match="async, waves"):
+        ExecutorConfig(execution_mode="bogus")
+    for mode in ("async", "waves"):
+        assert ExecutorConfig(execution_mode=mode).execution_mode == mode
+
+
+def test_executor_slots_validation():
+    qs = Q.make_queries("A3")
+    db = db_from_dict(Q.gen_db(qs, n_guard=32, n_cond=32), P=P)
+    ex = Executor(dict(db), SimComm(P))
+    with pytest.raises(ValueError, match="slots"):
+        ex.execute(plan_par(qs), slots=0)
+
+
+# ---------------------------------------------------------------------------
+# Event-replay accounting on synthetic records (pure python, no jax)
+# ---------------------------------------------------------------------------
+
+
+def _mk_report(walls_by_round) -> Report:
+    rep = Report()
+    for ri, walls in enumerate(walls_by_round):
+        for w in walls:
+            rep.records.append(JobRecord(None, ri, float(w), {}))
+    return rep
+
+
+def test_event_replay_empty_and_errors():
+    rep = Report()
+    assert rep.net_time_by_events(None) == 0.0 == rep.net_time
+    assert rep.net_time_by_events(1) == 0.0 == rep.total_time
+    assert rep.event_makespan() == 0.0
+    rep = _mk_report([[1.0, 2.0]])
+    with pytest.raises(ValueError, match="slots"):
+        rep.net_time_by_events(0)
+    assert rep.event_makespan() is None  # synthetic records lack events
+
+
+def test_event_replay_known_values():
+    # one straggler + three shorts, one round: W=2 packs the shorts onto
+    # the second slot while the straggler runs; a wave barrier cannot
+    rep = _mk_report([[10.0, 1.0, 1.0, 1.0]])
+    assert rep.net_time_by_events(None) == 10.0
+    assert rep.net_time_by_events(2) == 10.0
+    assert rep.net_time_by_events(1) == 13.0
+    # two rounds stay barriers
+    rep = _mk_report([[3.0, 1.0], [2.0]])
+    assert rep.net_time_by_events(None) == 5.0
+    assert rep.net_time_by_events(2) == 5.0
+    assert rep.net_time_by_events(1) == 6.0
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        walls=st.lists(
+            st.lists(st.floats(0.0, 10.0, allow_nan=False, allow_infinity=False),
+                     min_size=1, max_size=6),
+            min_size=1, max_size=5,
+        ),
+        slots=st.integers(1, 8),
+    )
+    @settings(max_examples=300, deadline=None)
+    def test_event_replay_identities_property(walls, slots):
+        """For ANY recorded walls: W=∞ == net_time and W=1 == total_time
+        exactly (bitwise float equality), and any finite W lands between
+        them (up to fold rounding)."""
+        rep = _mk_report(walls)
+        assert rep.net_time_by_events(None) == rep.net_time
+        assert rep.net_time_by_events(1) == rep.total_time
+        mid = rep.net_time_by_events(slots)
+        assert rep.net_time_by_events(None) <= mid + 1e-9
+        assert mid <= rep.total_time + 1e-9
+
+else:
+
+    def test_event_replay_identities_property():
+        pytest.importorskip("hypothesis")

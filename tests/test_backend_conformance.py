@@ -1,0 +1,208 @@
+"""Backend-conformance differential suite (DESIGN.md §5/§6 exactness
+invariant, systematized): every entry in PROBE_BACKENDS must produce
+bit-identical outputs on the same inputs — across key widths (KW=1
+exact-pack vs wide salted-hash fingerprints), empty relations,
+duplicate-heavy inputs, and the overflow-retry path — plus a hypothesis
+property generating random BSGF instances and cross-checking
+``costmodel.choose_backend``'s per-job pick against every other backend.
+
+Kept on deliberately small data (n≈64–128, P=2) so the whole file stays
+inside the engine shard's CPU budget.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ref_engine
+from repro.core.algebra import Atom, BSGF, all_of
+from repro.core.costmodel import choose_backend
+from repro.core.executor import (
+    Executor,
+    ExecutorConfig,
+    PROBE_BACKENDS,
+    execute_plan,
+)
+from repro.core.planner import MSJJob, plan_par
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # degrade: property tests skip, rest still run
+    HAVE_HYPOTHESIS = False
+
+P = 2
+XYZW = ("x", "y", "z", "w")
+CONCRETE = tuple(b for b in PROBE_BACKENDS if b != "auto")
+
+
+def _oracle(db_np, q):
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    return ref_engine.eval_bsgf(setdb, q)
+
+
+def _case(name):
+    """(db_np, queries) for one conformance corpus entry."""
+    rng = np.random.default_rng(7)
+    R = rng.integers(0, 24, (96, 4)).astype(np.int32)
+    if name == "kw1_exact":  # every atom keys one var -> exact fp pack
+        q = BSGF("Z", XYZW, Atom("R", *XYZW),
+                 all_of(Atom("S", "x"), Atom("T", "x")))
+        db = {"R": R,
+              "S": rng.integers(0, 24, (64, 1)).astype(np.int32),
+              "T": rng.integers(0, 24, (64, 1)).astype(np.int32)}
+    elif name == "wide_salted":  # two-var keys -> salted wide fingerprints
+        q = BSGF("Z", XYZW, Atom("R", *XYZW),
+                 all_of(Atom("S", "x", "y"), Atom("T", "y", "z")))
+        db = {"R": R,
+              "S": rng.integers(0, 24, (64, 2)).astype(np.int32),
+              "T": rng.integers(0, 24, (64, 2)).astype(np.int32)}
+    elif name == "empty_guard":
+        q = BSGF("Z", XYZW, Atom("R", *XYZW), all_of(Atom("S", "x")))
+        db = {"R": np.zeros((0, 4), np.int32),
+              "S": rng.integers(0, 24, (64, 1)).astype(np.int32)}
+    elif name == "empty_cond":
+        q = BSGF("Z", XYZW, Atom("R", *XYZW),
+                 all_of(Atom("S", "x"), Atom("T", "y")))
+        db = {"R": R,
+              "S": np.zeros((0, 1), np.int32),
+              "T": rng.integers(0, 24, (64, 1)).astype(np.int32)}
+    elif name == "dup_heavy":  # domain 2: nearly every key duplicated
+        q = BSGF("Z", XYZW, Atom("R", *XYZW),
+                 all_of(Atom("S", "x"), Atom("T", "x", "y")))
+        db = {"R": rng.integers(0, 2, (128, 4)).astype(np.int32),
+              "S": rng.integers(0, 2, (96, 1)).astype(np.int32),
+              "T": rng.integers(0, 2, (96, 2)).astype(np.int32)}
+    else:
+        raise KeyError(name)
+    return db, [q]
+
+
+CASES = ("kw1_exact", "wide_salted", "empty_guard", "empty_cond", "dup_heavy")
+
+
+@pytest.mark.parametrize("backend", PROBE_BACKENDS)
+@pytest.mark.parametrize("case", CASES)
+def test_backends_bit_identical(case, backend):
+    """Every backend (auto included) equals the set-semantics oracle, hence
+    all backends are pairwise bit-identical on the same inputs."""
+    db_np, qs = _case(case)
+    db = db_from_dict(db_np, P=P)
+    cfg = ExecutorConfig(probe_backend=backend)
+    env, rep = execute_plan(db, plan_par(qs), SimComm(P), cfg)
+    for q in qs:
+        assert env[q.name].to_set() == _oracle(db_np, q), (case, backend)
+    # the record carries the concrete backend every MSJ job ran
+    ran = {r.backend for r in rep.records if isinstance(r.job, MSJJob)}
+    if backend == "auto":
+        assert ran and ran <= set(CONCRETE)
+    else:
+        assert ran == {backend}
+
+
+@pytest.mark.parametrize("backend", PROBE_BACKENDS)
+def test_backends_agree_through_overflow_retry(backend):
+    """Deliberate undersizing (cap_slack << 1) must overflow, retry, and
+    converge to the oracle result on every backend."""
+    rng = np.random.default_rng(3)
+    q = BSGF("Z", XYZW, Atom("R", *XYZW),
+             all_of(Atom("S", "x"), Atom("T", "y")))
+    db_np = {"R": rng.integers(0, 32, (192, 4)).astype(np.int32),
+             "S": rng.integers(0, 32, (128, 1)).astype(np.int32),
+             "T": rng.integers(0, 32, (128, 1)).astype(np.int32)}
+    db = db_from_dict(db_np, P=4)
+    cfg = ExecutorConfig(probe_backend=backend, cap_slack=0.02, max_retries=3)
+    env, rep = execute_plan(db, plan_par([q]), SimComm(4), cfg)
+    assert env["Z"].to_set() == _oracle(db_np, q), backend
+    assert any(r.attempts > 1 for r in rep.records), backend
+
+
+def test_choose_backend_cost_model():
+    """The per-job decision rule: dense at trivial sizes, sorted as the
+    CPU default, the bucketed kernel only on TPU; unknown stats degrade to
+    the pre-cost-model behaviour; 'auto' is never returned."""
+    assert choose_backend(8, 8, 1, on_tpu=False) == "dense"
+    assert choose_backend(8, 8, 1, on_tpu=True) == "dense"
+    assert choose_backend(1e6, 1e6, 1, on_tpu=False) == "sorted"
+    assert choose_backend(1e6, 1e6, 1, on_tpu=True) == "pallas"
+    assert choose_backend(None, None, 1, on_tpu=False) == "sorted"
+    assert choose_backend(None, None, 1, on_tpu=True) == "pallas"
+    # one-sided unknowns behave like "large": dense is memory-gated on BOTH
+    # sides, so 16 probes against an unknown build side still sort-merge
+    assert choose_backend(None, 16, 1, on_tpu=False) == "sorted"
+    for b in (0, 1, 10, 1e3, 1e7, None):
+        for p in (0, 1, 10, 1e3, 1e7, None):
+            for kw in (1, 2, 4):
+                for tpu in (False, True):
+                    pick = choose_backend(b, p, kw, on_tpu=tpu)
+                    assert pick in CONCRETE, (b, p, kw, tpu, pick)
+
+
+def test_auto_uses_stats_for_per_job_decision():
+    """Executor statistics (not resident data) drive the decision: faked
+    row counts flip the same tiny job between dense and sorted."""
+    from repro.core.costmodel import RelStats, stats_of_db
+
+    rng = np.random.default_rng(0)
+    q = BSGF("Z", XYZW, Atom("R", *XYZW), all_of(Atom("S", "x")))
+    db_np = {"R": rng.integers(0, 8, (32, 4)).astype(np.int32),
+             "S": rng.integers(0, 8, (32, 1)).astype(np.int32)}
+    db = db_from_dict(db_np, P=P)
+    want = _oracle(db_np, q)
+
+    small = stats_of_db(db)
+    ex = Executor(dict(db), SimComm(P), ExecutorConfig(), stats=small)
+    env, rep = ex.execute(plan_par([q]))
+    assert env["Z"].to_set() == want
+    assert [r.backend for r in rep.records if isinstance(r.job, MSJJob)] == ["dense"]
+
+    big = stats_of_db(db)
+    big.rels["R"] = RelStats(rows=1e7, arity=4)
+    big.rels["S"] = RelStats(rows=1e7, arity=1)
+    ex = Executor(dict(db), SimComm(P), ExecutorConfig(), stats=big)
+    env, rep = ex.execute(plan_par([q]))
+    assert env["Z"].to_set() == want
+    assert [r.backend for r in rep.records if isinstance(r.job, MSJJob)] == ["sorted"]
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(0, 10_000), kw=st.integers(1, 2), dup=st.booleans())
+    @settings(max_examples=6, deadline=None)
+    def test_choose_backend_pick_matches_every_backend(seed, kw, dup):
+        """Random BSGF instance: run it with the cost model's own pick
+        (probe_backend="auto" + real stats), then with every other backend,
+        and require bit-identical outputs plus oracle agreement.  Shapes
+        are pinned so jit caches carry across examples."""
+        from repro.core.costmodel import stats_of_db
+
+        rng = np.random.default_rng(seed)
+        dom = 3 if dup else 24
+        keys = XYZW[:kw]
+        q = BSGF("Z", XYZW, Atom("R", *XYZW),
+                 all_of(Atom("S", *keys), Atom("T", *keys)))
+        db_np = {"R": rng.integers(0, dom, (64, 4)).astype(np.int32),
+                 "S": rng.integers(0, dom, (48, kw)).astype(np.int32),
+                 "T": rng.integers(0, dom, (48, kw)).astype(np.int32)}
+        db = db_from_dict(db_np, P=P)
+        want = _oracle(db_np, q)
+        ex = Executor(
+            dict(db), SimComm(P), ExecutorConfig(probe_backend="auto"),
+            stats=stats_of_db(db),
+        )
+        env, rep = ex.execute(plan_par([q]))
+        picks = {r.backend for r in rep.records if isinstance(r.job, MSJJob)}
+        assert picks and picks <= set(CONCRETE)
+        assert env["Z"].to_set() == want
+        for other in CONCRETE:
+            env2, _ = execute_plan(
+                db_from_dict(db_np, P=P), plan_par([q]), SimComm(P),
+                ExecutorConfig(probe_backend=other),
+            )
+            assert env2["Z"].to_set() == want, (seed, kw, dup, other)
+
+else:
+
+    def test_choose_backend_pick_matches_every_backend():
+        pytest.importorskip("hypothesis")

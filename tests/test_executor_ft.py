@@ -164,6 +164,7 @@ def test_elastic_repartition_preserves_results(rng):
     assert env4["Z"].to_set() == env2["Z"].to_set() == want["Z"]
 
 
+@pytest.mark.slow
 def test_train_crash_restart_bitexact():
     from repro.configs import get_config
     from repro.data import synthetic

@@ -28,6 +28,7 @@ def _batch(cfg, B=2, S=64, seed=0):
     return {"tokens": tokens}
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_smoke_forward_and_train_step(arch):
     """Reduced same-family config: one train step, output shapes, no NaNs."""
@@ -45,6 +46,7 @@ def test_smoke_forward_and_train_step(arch):
         assert jnp.isfinite(leaf).all(), arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_smoke_serve_shapes(arch):
     cfg = get_config(arch, smoke=True)
@@ -59,6 +61,7 @@ def test_smoke_serve_shapes(arch):
     assert jnp.isfinite(logits).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_decode_matches_teacher_forcing(arch):
     """Prefill(S-1)+decode(1) logits == full-forward logits at position S-1."""
@@ -179,6 +182,7 @@ def test_mamba2_chunked_matches_stepwise():
                                atol=1e-4, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_swa_cache_rotation_matches_full_history():
     """Windowed decode == full-cache decode for SWA models (mixtral)."""
     cfg = get_config("mixtral-8x7b", smoke=True, dtype="float32", window=16)
@@ -218,6 +222,7 @@ def test_rmsnorm_custom_vjp(rng):
         assert float(jnp.abs(a - b).max()) < 1e-4
 
 
+@pytest.mark.slow
 def test_param_counts_match_analytic():
     """ArchConfig.param_count (drives MODEL_FLOPS) vs actual init sizes."""
     for arch in list_archs():

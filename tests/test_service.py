@@ -298,18 +298,28 @@ def test_scheduler_w_inf_reproduces_rounds_and_net_time():
     db = db_from_dict(db_np, P=2)
     plan = plan_par(qs)
     env0, rep0 = Executor(dict(db), SimComm(2)).execute(plan)
-    # accounting: W=∞ is exactly the barrier-round net time
+    # accounting: W=∞ is exactly the barrier-round net time, W=1 the total
     assert rep0.net_time_under_slots(None) == rep0.net_time
     assert rep0.net_time_under_slots(1) == pytest.approx(rep0.total_time)
+    assert rep0.net_time_by_events(None) == rep0.net_time
+    assert rep0.net_time_by_events(1) == rep0.total_time
     sched = SlotScheduler(Executor(dict(db), SimComm(2)), stats=stats_of_db(db))
     env1, rep1 = sched.execute(plan)
     assert env1["Z"].to_set() == env0["Z"].to_set()
-    assert [s.wave for s in sched.schedule] == [s.round_idx for s in sched.schedule]
-    assert sched.n_waves == plan.n_rounds
+    # W=∞: every round-0 job starts at 0.0 on its own slot; the EVAL round
+    # starts at the round barrier — the event makespan IS net_time
+    r0 = [s for s in sched.schedule if s.round_idx == 0]
+    assert {s.start for s in r0} == {0.0}
+    assert len({s.slot for s in r0}) == len(r0)
+    barrier = max(s.end for s in r0)
+    assert all(s.start == barrier for s in sched.schedule if s.round_idx == 1)
+    assert rep1.event_makespan() == rep1.net_time
     assert rep1.net_time_under_slots(None) == rep1.net_time
 
 
 def test_scheduler_slot_limit_splits_rounds():
+    from itertools import combinations
+
     qs = Q.make_queries("A1")
     db_np = Q.gen_db(qs, n_guard=128, n_cond=128)
     db = db_from_dict(db_np, P=2)
@@ -318,19 +328,60 @@ def test_scheduler_slot_limit_splits_rounds():
         Executor(dict(db), SimComm(2)), slots=2, stats=stats_of_db(db)
     )
     env, rep = sched.execute(plan)
-    assert sched.n_waves == 3  # ceil(4/2) + 1
-    # LPT admission: wave 0 runs the largest modeled jobs
-    w0 = [s.est_cost for s in sched.schedule if s.wave == 0]
-    w1 = [s.est_cost for s in sched.schedule if s.wave == 1]
-    assert min(w0) >= max(w1) - 1e-9
+    assert sched.n_slots_used <= 2
+    # never two jobs on one slot at once
+    for a, b in combinations(sched.schedule, 2):
+        if a.slot == b.slot:
+            assert a.end <= b.start or b.end <= a.start
+    # LPT admission: the first two dispatches are the two largest modeled
+    # round-0 jobs
+    ests = sorted((s.est_cost for s in sched.schedule if s.round_idx == 0),
+                  reverse=True)
+    assert sorted((s.est_cost for s in sched.schedule[:2]), reverse=True) == ests[:2]
     # a job never starts before its strata deps are done
-    assert all(s.wave >= 2 for s in sched.schedule if s.round_idx == 1)
+    r0_end = max(s.end for s in sched.schedule if s.round_idx == 0)
+    assert all(s.start >= r0_end for s in sched.schedule if s.round_idx == 1)
     want = ref_engine.eval_bsgf(
         {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}, qs[0]
     )
     assert env["Z"].to_set() == want
     with pytest.raises(ValueError):
         SlotScheduler(Executor(dict(db), SimComm(2)), slots=0)
+
+
+def test_failed_async_tick_requeues_and_restores_last_tick(monkeypatch):
+    """The PR-3 invariants on the new code path: a CapacityFault raised by
+    the async executor mid-batch must requeue the admitted requests in
+    FIFO order and leave last_tick describing the last successful tick."""
+    from repro.core.executor import CapacityFault
+    from repro.service import batcher as batcher_mod
+
+    tenants, db_np = mixed_workload(2, n=64)
+    svc = SGFService(catalog_from_numpy(db_np, P=2), comm=SimComm(2))
+    svc.submit(tenants[0])
+    svc.tick()
+    good_tick = dict(svc.last_tick)
+    assert good_tick["cold_queries"] >= 1
+
+    class ExplodingExecutor(batcher_mod.Executor):
+        def run_job_ft(self, job, on_job=None):
+            raise CapacityFault(job, 7)
+
+    monkeypatch.setattr(batcher_mod, "Executor", ExplodingExecutor)
+    svc.submit(tenants[0])
+    svc.submit(tenants[1])
+    with pytest.raises(CapacityFault):
+        svc.tick()
+    assert svc.last_tick == good_tick  # restored, not the failed partition
+    assert len(svc.batcher) == 2  # both requests back in FIFO order
+    assert svc.batcher.queue[0].rid < svc.batcher.queue[1].rid
+    monkeypatch.undo()
+    done = svc.tick()
+    assert len(done) == 2 and all(r.done for r in done)
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    for req, qs in zip(done, [tenants[0], tenants[1]]):
+        for q in qs:
+            assert req.outputs[q.name].to_set() == ref_engine.eval_bsgf(setdb, q)
 
 
 def test_slot_aware_modeled_cost():

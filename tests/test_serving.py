@@ -11,6 +11,7 @@ from repro.serve.batcher import Batcher, Request
 from repro.serve.serve_step import greedy_generate
 
 
+@pytest.mark.slow
 def test_batcher_matches_unbatched():
     cfg = get_config("qwen3-0.6b", smoke=True, dtype="float32")
     params = model.init_params(cfg, jax.random.PRNGKey(0))
@@ -28,6 +29,7 @@ def test_batcher_matches_unbatched():
         np.testing.assert_array_equal(np.asarray(want), np.asarray(r.out))
 
 
+@pytest.mark.slow
 def test_batcher_ssm_family():
     cfg = get_config("falcon-mamba-7b", smoke=True, dtype="float32")
     params = model.init_params(cfg, jax.random.PRNGKey(0))
