@@ -151,6 +151,51 @@ def lpt_makespan(costs: Sequence[float], slots: int | None = None) -> float:
 
 
 # --------------------------------------------------------------------------
+# Speculative re-dispatch deadline (DESIGN.md §12)
+# --------------------------------------------------------------------------
+
+#: default multiple of a job's *own* modeled wall after which a dispatched
+#: attempt counts as a straggler.  Scaling by the job's modeled cost (not a
+#: round median) means the modeled-longest job is expected to be long and
+#: is never flagged merely for being the longest.
+SPEC_FACTOR = 2.5
+
+
+def speculation_deadline(
+    est_cost: float,
+    *,
+    scale: float | None,
+    factor: float = SPEC_FACTOR,
+    slots: int | None = None,
+    floor: float = 0.0,
+) -> float:
+    """Wall-clock deadline (seconds) after which a dispatched job should be
+    speculatively cloned onto a free slot (first completion wins).
+
+    ``est_cost`` is the job's admission-time modeled cost (cost-model
+    units); ``scale`` calibrates model units to observed wall seconds
+    (the executor maintains it online as the median wall/cost ratio of
+    completed attempts — robust to one inflated wall).  The deadline is
+    ``factor × est_cost × scale``, so it is *monotone in the modeled job
+    cost*: an expensive job
+    earns a proportionally longer leash and the modeled-longest job is
+    never flagged just for running longest.
+
+    Returns ``inf`` (never fires) when speculation cannot help or cannot
+    be priced: a single cluster slot (``slots == 1`` — the clone would
+    queue behind the original, and with W=1 the modeled-longest job in
+    particular must never be re-dispatched), no calibration yet
+    (``scale`` is ``None`` or non-positive), or a job without a modeled
+    cost (``est_cost <= 0`` — no statistics, no deadline).
+    """
+    if slots is not None and slots <= 1:
+        return math.inf
+    if scale is None or scale <= 0.0 or est_cost <= 0.0:
+        return math.inf
+    return max(factor * float(est_cost) * float(scale), float(floor))
+
+
+# --------------------------------------------------------------------------
 # Per-job probe-backend choice (how ExecutorConfig.probe_backend="auto"
 # resolves — one decision per dequeued job, so a fused multi-tenant plan
 # can mix backends across its jobs)

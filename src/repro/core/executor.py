@@ -2,12 +2,28 @@
 
 Runs a :class:`~repro.core.planner.Plan` against a database, job by job,
 through the comm runner (SimComm on CPU, MeshComm on a device mesh).  The
-plan's job DAG (:func:`repro.core.planner.job_dag`, strata edges only) is
-walked *online*: a job launches as soon as its predecessors have completed
-and one of the W cluster slots frees (event-driven list scheduling), so a
-straggler stalls only its own slot instead of a whole barrier wave.  The
-legacy barrier-wave discipline survives behind
-``ExecutorConfig.execution_mode="waves"`` for differential testing.
+plan's job DAG (:func:`repro.core.planner.job_dag`) is walked *online*: a
+job launches as soon as its predecessors have completed and one of the W
+cluster slots frees (event-driven list scheduling), so a straggler stalls
+only its own slot instead of a whole barrier wave.  Edges are
+relation-granular by default (``ExecutorConfig.dag_edges="relations"``,
+DESIGN.md §12): a job waits only for the producers of relations it
+actually reads, so independent strata overlap; ``dag_edges="strata"``
+restores the conservative round-barrier DAG and
+``ExecutorConfig.execution_mode="waves"`` the legacy barrier-wave
+discipline, both for differential testing.
+
+Straggler tolerance (``ExecutorConfig.speculate``): a dispatched job whose
+wall exceeds its cost-model-scaled deadline
+(:func:`repro.core.costmodel.speculation_deadline`) is cloned onto a free
+slot; the first attempt to complete wins, the loser is cancelled at the
+winner's completion time and priced for exactly the slot time it consumed
+(``JobRecord.attempt``/``speculative``/``cancelled``), so the replay
+identities (W=∞ == net_time, W=1 == total_time) hold with duplicate
+attempts present.  Overflow retries, injected-failure reroutes
+(:class:`TransientFault`) and speculative clones of one job share a
+single :class:`RetryState`, so a clone inherits learned capacity sizing
+instead of relaxing ``cap_slack`` twice.
 
 Timing semantics on this container (see DESIGN.md §8/§11): a SimComm job
 serializes the work of all P shards onto the host, so a job's wall time is
@@ -38,10 +54,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.algebra import BSGF
-from repro.core.costmodel import Stats, choose_backend
+from repro.core.costmodel import Stats, choose_backend, speculation_deadline
 from repro.core.eval_op import EvalUnit, run_eval
 from repro.core.msj import FusedQuery, conform_mask, make_spec, run_msj
-from repro.core.planner import EvalJob, Job, MSJJob, Plan, job_dag
+from repro.core.planner import DAG_EDGE_MODES, EvalJob, Job, MSJJob, Plan, job_dag
 from repro.core.relation import Relation
 from repro.engine.comm import Comm
 
@@ -53,6 +69,44 @@ class CapacityFault(RuntimeError):
         super().__init__(f"{job}: shuffle overflow of {overflow} messages")
         self.job = job
         self.overflow = overflow
+
+
+class TransientFault(RuntimeError):
+    """A retryable injected/external job failure (a preempted or crashed
+    worker).  Raised by ``on_job`` hooks (e.g. the fault supervisor's
+    injection policy); the executor's retry helper reroutes the job up to
+    ``max_restarts`` times before letting it propagate."""
+
+
+@dataclass
+class RetryState:
+    """Per-plan-job retry state shared across *all* dispatches of one job:
+    overflow retries, injected-failure reroutes, and speculative clones.
+
+    Sharing one state object is what keeps the capacity ladder monotone —
+    a speculative clone of a job whose original attempt already overflowed
+    starts from the learned ``cap``/``slack`` instead of relaxing
+    ``cap_slack`` a second time (and never mutates the ExecutorConfig).
+    """
+
+    cap: int | None = None  # learned forward-capacity override
+    slack: float | None = None  # learned cap_slack override (1.0 = cleared)
+    overflow_retries: int = 0
+    fault_retries: int = 0
+
+    def effective_slack(self, config: "ExecutorConfig") -> float:
+        return config.cap_slack if self.slack is None else self.slack
+
+    def on_overflow(self, config: "ExecutorConfig", stats: dict) -> None:
+        """Advance the sizing ladder one step: the first relaxation drops
+        deliberate undersizing (cap_slack < 1) and re-sizes from counts /
+        the worst-case bound; further overflows (stale counts) double the
+        observed capacity."""
+        if self.effective_slack(config) < 1.0:
+            self.cap, self.slack = None, 1.0
+        else:
+            self.cap = max(int(stats.get("forward_cap", 0)), 1) * 2
+        self.overflow_retries += 1
 
 
 @dataclass
@@ -69,6 +123,14 @@ class JobRecord:
     start: float = -1.0
     end: float = -1.0
     slot: int = -1
+    #: speculative re-dispatch: dispatch index of this attempt (0 = the
+    #: original), whether it was a speculative clone, and whether it lost
+    #: the first-completion-wins race (cancelled at the winner's end; its
+    #: ``wall`` then prices exactly the slot time consumed, keeping
+    #: ``end == start + wall`` and the replay identities exact).
+    attempt: int = 0
+    speculative: bool = False
+    cancelled: bool = False
 
 
 @dataclass(frozen=True)
@@ -82,6 +144,7 @@ class ScheduledJob:
     start: float
     end: float
     est_cost: float
+    attempt: int = 0  # > 0: a speculative clone of the same plan job
 
 
 def int_stats(stats: dict) -> tuple[dict, str]:
@@ -96,16 +159,28 @@ def int_stats(stats: dict) -> tuple[dict, str]:
 class Report:
     records: list[JobRecord] = field(default_factory=list)
 
+    def _round_major(self) -> list[JobRecord]:
+        """Records in stable round-major order: the relation-granular DAG
+        lets the async walk dispatch (and record) a later-round job before
+        an earlier round fully drains, so round-grouped accounting must
+        re-bucket records into plan rounds first.  The sort is stable —
+        dispatch order is preserved within a round — and is the identity
+        on barrier-ordered records, keeping the replay identities
+        bit-exact in both regimes."""
+        return sorted(self.records, key=lambda r: r.round_idx)
+
     @property
     def total_time(self) -> float:
-        return sum(r.wall for r in self.records)
+        # summed round-major so net_time_by_events(1) threads the identical
+        # float additions even when dispatch interleaved rounds
+        return sum(r.wall for r in self._round_major())
 
     @property
     def net_time(self) -> float:
         by_round: dict[int, float] = {}
         for r in self.records:
             by_round[r.round_idx] = max(by_round.get(r.round_idx, 0.0), r.wall)
-        return sum(by_round.values())
+        return sum(by_round[ri] for ri in sorted(by_round))
 
     def net_time_under_slots(self, slots: int | None = None) -> float:
         """Makespan-style net time if each round ran on ``slots`` concurrent
@@ -119,7 +194,7 @@ class Report:
         by_round: dict[int, list[float]] = {}
         for r in self.records:
             by_round.setdefault(r.round_idx, []).append(r.wall)
-        return sum(lpt_makespan(ws, slots) for ws in by_round.values())
+        return sum(lpt_makespan(by_round[ri], slots) for ri in sorted(by_round))
 
     def event_makespan(self) -> float | None:
         """Net time of the schedule that actually ran: the latest recorded
@@ -133,7 +208,10 @@ class Report:
     def net_time_by_events(self, slots: int | None = None) -> float:
         """Critical-path net time of the recorded walls under ``slots``
         concurrent cluster slots: replays event-driven list scheduling in
-        record (dispatch) order with plan rounds as barriers.
+        round-major record order (stable — dispatch order within a round)
+        with plan rounds as barriers.  Speculative duplicate attempts are
+        ordinary records (loser walls are truncated at cancellation), so
+        they price without double-counting.
 
         Unlike :meth:`event_makespan` this re-derives the timeline from the
         walls alone, so the same records can be priced under any W:
@@ -141,7 +219,7 @@ class Report:
         ``slots=1`` reproduces :attr:`total_time` *exactly* — the replay
         threads the identical float additions.
         """
-        recs = self.records
+        recs = self._round_major()
         if not recs:
             return 0.0
         if slots is None or math.isinf(slots):
@@ -179,6 +257,11 @@ class Report:
     def n_jobs(self) -> int:
         return len(self.records)
 
+    @property
+    def n_speculative(self) -> int:
+        """Speculative clone dispatches recorded (0 without speculation)."""
+        return sum(r.speculative for r in self.records)
+
     def summary(self) -> dict:
         return {
             "net_time": self.net_time,
@@ -186,6 +269,7 @@ class Report:
             "jobs": self.n_jobs,
             "bytes_shuffled": self.bytes_shuffled(),
             "input_rows": self.input_rows(),
+            "speculative": self.n_speculative,
         }
 
 
@@ -252,6 +336,21 @@ class ExecutorConfig:
     #: scheduling, DESIGN.md §11); "waves" restores the barrier-wave
     #: discipline (with unbounded slots: the seed round-by-round executor).
     execution_mode: str = "async"
+    #: job-DAG edge derivation (planner.job_dag): "relations" (default)
+    #: depends only on the producers of relations a job actually reads —
+    #: independent strata overlap (DESIGN.md §12); "strata" restores the
+    #: conservative round-barrier edges for differential testing.
+    dag_edges: str = "relations"
+    #: speculative re-dispatch in the async walk: clone a dispatched job
+    #: onto a free slot once its wall exceeds spec_factor × its modeled
+    #: cost (calibrated online to wall seconds); first completion wins.
+    #: Needs per-job cost estimates (a SlotScheduler with statistics) and
+    #: W >= 2 to ever fire; inert in "waves" mode.
+    speculate: bool = False
+    #: straggler threshold as a multiple of the job's own modeled wall
+    #: (costmodel.speculation_deadline; the modeled-longest job is never
+    #: flagged merely for being longest).
+    spec_factor: float = 2.5
     #: block on each job's output arrays before timing it.  False keeps
     #: jax async dispatch in flight across jobs (outputs materialize while
     #: later jobs launch); the overflow check still syncs the stats scalar,
@@ -268,6 +367,11 @@ class ExecutorConfig:
             raise ValueError(
                 f"unknown execution mode {self.execution_mode!r}; "
                 f"valid names: {', '.join(EXECUTION_MODES)}"
+            )
+        if self.dag_edges not in DAG_EDGE_MODES:
+            raise ValueError(
+                f"unknown dag edge mode {self.dag_edges!r}; "
+                f"valid names: {', '.join(DAG_EDGE_MODES)}"
             )
 
 
@@ -321,6 +425,12 @@ class Executor:
         self.stats = stats
         #: dispatch log of the last :meth:`execute` call.
         self.schedule: list[ScheduledJob] = []
+        #: fault-tolerance counters of the last :meth:`execute` call
+        #: (overflow retries, injected-failure reroutes, speculative
+        #: clone dispatches) — what the supervisor's FTStats reads.
+        self.ft_counters: dict[str, int] = dict(
+            overflow_retries=0, fault_retries=0, speculative=0
+        )
 
     # -- per-job backend decision ------------------------------------------
     def _probe_backend_for(self, job: MSJJob) -> str:
@@ -395,36 +505,81 @@ class Executor:
         stats["input_rows"] = input_rows
         return outs, stats
 
-    def run_job_ft(self, job: Job, on_job: Callable | None = None) -> tuple[dict, dict, int]:
-        """Run with overflow-retry (the executor-level fault path)."""
+    def run_job_ft(
+        self,
+        job: Job,
+        on_job: Callable | None = None,
+        *,
+        state: RetryState | None = None,
+        max_restarts: int = 0,
+    ) -> tuple[dict, dict, int]:
+        """Run with retries: exact shuffle-overflow recovery (the capacity
+        ladder of :class:`RetryState`) and rerouting of injected/external
+        :class:`TransientFault` failures (up to ``max_restarts``).
+
+        ``state`` carries the retry state across dispatches of the same
+        plan job; the speculative clone path passes the original's state so
+        learned capacity sizing is inherited rather than re-derived (the
+        ExecutorConfig itself is never mutated — deliberate undersizing
+        stays in force for later jobs and plans).
+        """
+        state = RetryState() if state is None else state
         attempts = 0
-        cap = None
-        # slack relaxation is scoped to THIS job: replacing self.config here
-        # would permanently drop deliberate undersizing (cap_slack < 1) for
-        # every later job and plan after a single overflow
-        slack: float | None = None
         while True:
             attempts += 1
-            if on_job is not None:
-                on_job(job, attempts)
-            outs, stats = self.run_job(job, cap_override=cap, cap_slack=slack)
+            try:
+                if on_job is not None:
+                    on_job(job, attempts)
+                outs, stats = self.run_job(
+                    job, cap_override=state.cap, cap_slack=state.slack
+                )
+            except TransientFault:
+                state.fault_retries += 1
+                self.ft_counters["fault_retries"] += 1
+                if state.fault_retries > max_restarts:
+                    raise
+                continue
             ovf = int(stats.get("overflow", 0))
             if ovf == 0:
                 return outs, stats, attempts
-            if attempts > self.config.max_retries:
+            if state.overflow_retries >= self.config.max_retries:
                 raise CapacityFault(job, ovf)
-            # first retry drops any deliberate undersizing (cap_slack < 1)
-            # and re-sizes from counts / the worst-case bound; if that still
-            # overflows (stale counts), double the observed capacity
-            effective = self.config.cap_slack if slack is None else slack
-            if effective < 1.0:
-                cap = None
-                slack = 1.0
-            else:
-                used = int(stats.get("forward_cap", 0))
-                cap = max(used, 1) * 2
+            state.on_overflow(self.config, stats)
+            self.ft_counters["overflow_retries"] += 1
 
     # -- job-granular entry (what the ready-queue walk drives) -------------
+    def _attempt(
+        self,
+        job: Job,
+        on_job: Callable | None,
+        state: RetryState,
+        max_restarts: int,
+        wall_scale: Callable | None,
+        attempt: int,
+    ) -> tuple[dict, dict, int, float]:
+        """One timed dispatch attempt: run to completion (with retries) and
+        measure its wall, without publishing outputs (first-completion-wins
+        decides what gets published).  ``wall_scale(job, attempt)`` scales
+        the measured wall in the *virtual* timeline — the fault-injection
+        hook benchmarks/tests use to create deterministic stragglers."""
+        t0 = time.perf_counter()
+        outs, stats, attempts = self.run_job_ft(
+            job, on_job, state=state, max_restarts=max_restarts
+        )
+        if self.config.sync_per_job:
+            for v in outs.values():
+                jax.block_until_ready(v.data)
+        wall = time.perf_counter() - t0
+        if wall_scale is not None:
+            wall *= float(wall_scale(job, attempt))
+        return outs, stats, attempts, wall
+
+    def _publish(self, outs: dict) -> None:
+        for name, rel in outs.items():
+            if self.config.compact:
+                rel = rel.compacted()
+            self.env[name] = rel
+
     def execute_job(
         self,
         job: Job,
@@ -432,19 +587,15 @@ class Executor:
         report: Report,
         *,
         on_job: Callable | None = None,
+        max_restarts: int = 0,
+        wall_scale: Callable | None = None,
     ) -> JobRecord:
         """Run one job to completion: time it, publish its outputs into the
         environment, and append a :class:`JobRecord` to ``report``."""
-        t0 = time.perf_counter()
-        outs, stats, attempts = self.run_job_ft(job, on_job)
-        if self.config.sync_per_job:
-            for v in outs.values():
-                jax.block_until_ready(v.data)
-        wall = time.perf_counter() - t0
-        for name, rel in outs.items():
-            if self.config.compact:
-                rel = rel.compacted()
-            self.env[name] = rel
+        outs, stats, attempts, wall = self._attempt(
+            job, on_job, RetryState(), max_restarts, wall_scale, 0
+        )
+        self._publish(outs)
         ints, backend = int_stats(stats)
         rec = JobRecord(job, round_idx, wall, ints, attempts, backend)
         report.records.append(rec)
@@ -458,21 +609,31 @@ class Executor:
         slots: int | None = None,
         est: dict[int, float] | None = None,
         on_job: Callable | None = None,
+        max_restarts: int = 0,
+        wall_scale: Callable | None = None,
     ) -> tuple[dict, Report]:
         """Run a whole plan under ``config.execution_mode``.
 
         ``slots`` bounds the concurrent cluster slots W (None = unbounded);
-        ``est`` maps job-DAG indices to modeled costs for LPT ordering (the
-        slot scheduler's admission-time estimate; absent = plan order).
+        ``est`` maps job-DAG indices to modeled costs for LPT ordering and
+        speculation deadlines (the slot scheduler's admission-time
+        estimate; absent = plan order, speculation inert); ``max_restarts``
+        bounds :class:`TransientFault` reroutes per job (the supervisor's
+        policy); ``wall_scale(job, attempt)`` scales measured walls in the
+        virtual timeline (deterministic straggler injection).
 
         * ``"async"`` (default) — dependency-driven ready-queue walk of
-          :func:`repro.core.planner.job_dag`: a job launches as soon as its
-          predecessors completed and a slot frees (event-driven list
-          scheduling); a straggler stalls only its own slot.
+          :func:`repro.core.planner.job_dag` under ``config.dag_edges``:
+          a job launches as soon as its predecessors completed and a slot
+          frees (event-driven list scheduling); a straggler stalls only
+          its own slot, and with ``config.speculate`` is additionally
+          cloned onto a free slot past its cost-model deadline (first
+          completion wins).
         * ``"waves"`` — the legacy barrier discipline: at most W ready jobs
           per wave, the whole wave joins before the next is admitted.  With
-          ``slots=None`` waves coincide with plan rounds (the seed
-          barrier-round executor), kept for differential testing.
+          ``slots=None`` and ``dag_edges="strata"`` waves coincide with
+          plan rounds (the seed barrier-round executor), kept for
+          differential testing.  No speculation.
 
         Jobs still *execute* serially on this container (SimComm serializes
         shard work onto the host — DESIGN.md §8); the recorded
@@ -482,27 +643,44 @@ class Executor:
         """
         if slots is not None and slots < 1:
             raise ValueError(f"slots must be >= 1 or None (unbounded), got {slots}")
-        nodes = job_dag(plan)
+        nodes = job_dag(plan, edges=self.config.dag_edges)
         if est is None:
             est = {n.idx: 0.0 for n in nodes}
         self.schedule = []
+        self.ft_counters = dict(overflow_retries=0, fault_retries=0, speculative=0)
         if self.config.execution_mode == "waves":
-            return self._execute_waves(nodes, slots, est, on_job)
-        return self._execute_async(nodes, slots, est, on_job)
+            return self._execute_waves(nodes, slots, est, on_job, max_restarts, wall_scale)
+        return self._execute_async(nodes, slots, est, on_job, max_restarts, wall_scale)
 
-    def _execute_async(self, nodes, slots, est, on_job) -> tuple[dict, Report]:
-        """Event-driven ready-queue walk (DESIGN.md §11).
+    def _execute_async(
+        self, nodes, slots, est, on_job, max_restarts=0, wall_scale=None
+    ) -> tuple[dict, Report]:
+        """Event-driven ready-queue walk (DESIGN.md §11/§12).
 
         Dispatch rule: take the slot that frees earliest; among jobs whose
         predecessors have all completed by then, start the longest modeled
         one (LPT).  If every ready job is still blocked on in-flight
         predecessors, the slot idles until the earliest one unblocks.
+
+        Speculation (``config.speculate``): once a dispatched job's wall
+        exceeds its deadline (``spec_factor ×`` its modeled cost, scaled
+        online to wall seconds by completed attempts), a clone is launched
+        on the earliest-freeing *other* slot — but only when the clone
+        could still win.  First completion wins: the winner's outputs are
+        published and release dependants; the loser is cancelled at the
+        winner's end, its record priced for exactly the slot time consumed
+        (``end == start + wall`` holds for every record, so the replay
+        identities are unaffected by duplicate attempts).
         """
         report = Report()
         n_slots = len(nodes) if slots is None else max(1, min(slots, len(nodes)))
         slot_free = [0.0] * max(n_slots, 1)
         end_at: dict[int, float] = {}
         pending = {n.idx: n for n in nodes}
+        # online model-units -> wall-seconds calibration: median of the
+        # per-attempt wall/cost ratios (robust to one inflated wall, e.g.
+        # residual compilation on the first dispatch)
+        ratios: list[float] = []
 
         def ready_at(node) -> float:
             return max((end_at[d] for d in node.deps), default=0.0)
@@ -519,17 +697,82 @@ class Executor:
             else:
                 node = min(ready, key=lambda n: (ready_at(n), -est[n.idx], n.idx))
                 start = ready_at(node)
-            rec = self.execute_job(node.job, node.round_idx, report, on_job=on_job)
-            rec.start, rec.end, rec.slot = start, start + rec.wall, s
-            slot_free[s] = rec.end
-            end_at[node.idx] = rec.end
-            self.schedule.append(
-                ScheduledJob(node.idx, node.round_idx, s, rec.start, rec.end, est[node.idx])
+            state = RetryState()
+            outs, stats, attempts, wall = self._attempt(
+                node.job, on_job, state, max_restarts, wall_scale, 0
             )
+            end = start + wall
+            deadline = speculation_deadline(
+                est[node.idx],
+                scale=sorted(ratios)[len(ratios) // 2] if ratios else None,
+                factor=self.config.spec_factor,
+                slots=n_slots,
+            )
+            clone = None
+            if self.config.speculate and wall > deadline:
+                others = [i for i in range(len(slot_free)) if i != s]
+                if others:
+                    s2 = min(others, key=slot_free.__getitem__)
+                    t2 = max(start + deadline, slot_free[s2])
+                    if t2 < end:  # the clone could still win
+                        try:
+                            outs2, stats2, attempts2, wall2 = self._attempt(
+                                node.job, on_job, state, max_restarts, wall_scale, 1
+                            )
+                            clone = (outs2, stats2, attempts2, wall2, s2, t2)
+                            self.ft_counters["speculative"] += 1
+                        except (TransientFault, CapacityFault):
+                            # speculation is an optimization: a clone that
+                            # dies (injected faults / exhausted shared
+                            # retry budget) must not abort a plan whose
+                            # original attempt already completed
+                            clone = None
+            if clone is None:
+                self._publish(outs)
+                ints, backend = int_stats(stats)
+                rec = JobRecord(node.job, node.round_idx, wall, ints, attempts,
+                                backend, start, end, s)
+                recs = [rec]
+                win_end = end
+            else:
+                outs2, stats2, attempts2, wall2, s2, t2 = clone
+                end2 = t2 + wall2
+                win_end = min(end, end2)  # ties go to the original
+                clone_wins = end2 < end
+                self._publish(outs2 if clone_wins else outs)
+                ints, backend = int_stats(stats)
+                ints2, backend2 = int_stats(stats2)
+                rec = JobRecord(
+                    node.job, node.round_idx, win_end - start, ints, attempts,
+                    backend, start, win_end, s,
+                    attempt=0, cancelled=clone_wins,
+                )
+                rec2 = JobRecord(
+                    node.job, node.round_idx, win_end - t2, ints2, attempts2,
+                    backend2, t2, win_end, s2,
+                    attempt=1, speculative=True, cancelled=not clone_wins,
+                )
+                slot_free[s2] = rec2.end
+                recs = [rec, rec2]
+            # calibrate on the winning attempt (its wall is the full
+            # measured one; the loser's is truncated at cancellation)
+            if est[node.idx] > 0.0:
+                win_wall = next(r.wall for r in recs if not r.cancelled)
+                ratios.append(win_wall / est[node.idx])
+            for r in recs:
+                report.records.append(r)
+                self.schedule.append(
+                    ScheduledJob(node.idx, node.round_idx, r.slot, r.start,
+                                 r.end, est[node.idx], r.attempt)
+                )
+            slot_free[s] = rec.end
+            end_at[node.idx] = win_end
             del pending[node.idx]
         return self.env, report
 
-    def _execute_waves(self, nodes, slots, est, on_job) -> tuple[dict, Report]:
+    def _execute_waves(
+        self, nodes, slots, est, on_job, max_restarts=0, wall_scale=None
+    ) -> tuple[dict, Report]:
         """Barrier-wave discipline: admit ≤ W ready jobs (LPT), join them
         all, repeat.  Every admitted job starts at the wave barrier on its
         own slot, so the event timeline prices Σ_waves max_wall."""
@@ -547,7 +790,10 @@ class Executor:
             admitted = ready if slots is None else ready[:slots]
             wave_end = wave_start
             for si, n in enumerate(admitted):
-                rec = self.execute_job(n.job, n.round_idx, report, on_job=on_job)
+                rec = self.execute_job(
+                    n.job, n.round_idx, report, on_job=on_job,
+                    max_restarts=max_restarts, wall_scale=wall_scale,
+                )
                 rec.start, rec.end, rec.slot = wave_start, wave_start + rec.wall, si
                 wave_end = max(wave_end, rec.end)
                 self.schedule.append(

@@ -6,9 +6,14 @@ Plan IR
 A :class:`Plan` is a sequence of :class:`Round`s; jobs within a round may
 run in parallel on the cluster, rounds are barriers.  :func:`job_dag`
 exposes the same structure as a job-level dependency DAG, which the
-ready-queue executor (``Executor.execute``, DESIGN.md §11) walks online —
-rounds then constrain *precedence*, not wave membership.  Two job kinds
-mirror the paper's operators:
+ready-queue executor (``Executor.execute``, DESIGN.md §11/§12) walks
+online — rounds then constrain *precedence*, not wave membership.  The
+default ``edges="relations"`` mode derives edges from each job's
+read/write sets (:func:`job_reads` / :func:`job_writes`): a job depends
+only on the jobs that *produce* a relation it actually reads, so
+independent strata overlap; ``edges="strata"`` keeps the conservative
+round-barrier reading for differential testing.  Two job kinds mirror
+the paper's operators:
 
 * :class:`MSJJob` — one multi-semi-join job.  ``sjs`` are the equations to
   evaluate; ``fused`` are BSGF queries whose Boolean formula is applied
@@ -122,29 +127,126 @@ class JobNode:
     job: Job
     round_idx: int
     deps: tuple[int, ...]  # indices of jobs that must finish first
+    #: relation names this job reads / produces (drives ``edges="relations"``)
+    reads: frozenset[str] = frozenset()
+    writes: frozenset[str] = frozenset()
 
 
-def job_dag(plan: Plan) -> tuple[JobNode, ...]:
-    """Job-level dependency DAG of a plan, strata edges only.
+def job_reads(job: Job) -> frozenset[str]:
+    """Relation names a job reads: guard + conditional relations of an MSJ
+    job (fused formulas evaluate on the in-job route-back bitmap, so a
+    fused query adds nothing beyond its guard and atoms), and the guard
+    projections plus X_i inputs of an EVAL job."""
+    if isinstance(job, MSJJob):
+        rels: set[str] = set()
+        for sj in job.sjs:
+            rels.add(sj.guard.rel)
+            rels.add(sj.cond_atom.rel)
+        for q in job.fused:
+            rels.add(q.guard.rel)
+            rels.update(a.rel for a in q.atoms)
+        return frozenset(rels)
+    rels = {q.guard.rel for q in job.queries}
+    for xin in job.atom_inputs:
+        rels.update(xin)
+    return frozenset(rels)
 
-    Rounds are barriers, so every job depends on all jobs of the previous
-    round and on nothing else.  This is the conservative reading of the
-    Plan IR the ready-queue executor walks online (``Executor.execute``):
-    a job is dispatched as soon as its predecessors completed and a slot
-    frees.  With W=∞ slots and ``execution_mode="waves"`` the admitted
-    waves coincide exactly with the plan's rounds.
+
+def job_writes(job: Job) -> frozenset[str]:
+    """Relation names a job publishes into the environment: the X_i
+    equation outputs and fused query outputs of an MSJ job, or the query
+    outputs of an EVAL job (mirrors run_msj / run_eval return keys)."""
+    if isinstance(job, MSJJob):
+        return frozenset({sj.out for sj in job.sjs} | {q.name for q in job.fused})
+    return frozenset(q.name for q in job.queries)
+
+
+#: valid :func:`job_dag` edge modes (mirrored by ExecutorConfig.dag_edges).
+DAG_EDGE_MODES = ("relations", "strata")
+
+
+def job_dag(plan: Plan, edges: str = "relations") -> tuple[JobNode, ...]:
+    """Job-level dependency DAG of a plan.
+
+    ``edges="relations"`` (default) derives edges from read/write sets:
+    job J depends exactly on the most recent prior producers of the
+    relations J reads (flow dependences), plus anti/output dependences
+    when a later round reuses an intermediate name (two strata pooling
+    the same (guard, atom) pair at the same pool index produce colliding
+    ``X<i>@guard|atom`` names; the WAR/WAW edges keep reuse of a name
+    safe under out-of-round execution).  Jobs of one round are committed
+    against the state of *earlier* rounds only — the Plan IR guarantees
+    same-round jobs are independent — so every edge crosses a round
+    boundary and the relation DAG is a subgraph of the strata DAG's
+    transitive closure.
+
+    ``edges="strata"`` is the conservative pre-§12 reading: rounds are
+    barriers, every job depends on all jobs of the previous round.  With
+    W=∞ slots and ``execution_mode="waves"`` the admitted waves then
+    coincide exactly with the plan's rounds.
     """
+    if edges not in DAG_EDGE_MODES:
+        raise ValueError(
+            f"unknown dag edge mode {edges!r}; valid names: {', '.join(DAG_EDGE_MODES)}"
+        )
     nodes: list[JobNode] = []
-    prev: tuple[int, ...] = ()
     idx = 0
+    if edges == "strata":
+        prev: tuple[int, ...] = ()
+        for ri, rnd in enumerate(plan.rounds):
+            cur: list[int] = []
+            for job in rnd.jobs:
+                nodes.append(
+                    JobNode(idx, job, ri, prev, job_reads(job), job_writes(job))
+                )
+                cur.append(idx)
+                idx += 1
+            prev = tuple(cur)
+        return tuple(nodes)
+    last_writer: dict[str, int] = {}
+    readers: dict[str, list[int]] = {}  # readers since the last write
     for ri, rnd in enumerate(plan.rounds):
-        cur: list[int] = []
+        staged: list[tuple[int, frozenset, frozenset]] = []
         for job in rnd.jobs:
-            nodes.append(JobNode(idx, job, ri, prev))
-            cur.append(idx)
+            reads, writes = job_reads(job), job_writes(job)
+            deps: set[int] = set()
+            for r in reads:
+                if r in last_writer:  # flow (RAW): producer of what we read
+                    deps.add(last_writer[r])
+            for r in writes:
+                if r in last_writer:  # output (WAW): don't clobber early
+                    deps.add(last_writer[r])
+                deps.update(readers.get(r, ()))  # anti (WAR)
+            nodes.append(JobNode(idx, job, ri, tuple(sorted(deps)), reads, writes))
+            staged.append((idx, reads, writes))
             idx += 1
-        prev = tuple(cur)
+        # commit the whole round at once: same-round jobs never see each
+        # other (the IR contract: jobs of a round may run in parallel)
+        for i, reads, _ in staged:
+            for r in reads:
+                readers.setdefault(r, []).append(i)
+        for i, _, writes in staged:
+            for r in writes:
+                last_writer[r] = i
+                readers[r] = []
     return tuple(nodes)
+
+
+def estimate_job_costs(
+    nodes: Sequence[JobNode],
+    stats: "Stats",
+    consts: CostConstants = HADOOP,
+    *,
+    model: str = "gumbo",
+) -> dict[int, float]:
+    """Modeled per-job cost for each DAG node, in node (plan) order so
+    ``register_output`` feeds later rounds — the admission-time estimate
+    both the slot scheduler's LPT ordering and the executor's speculation
+    deadlines consume.  ``stats`` is copied; the caller's is untouched."""
+    import copy
+
+    st = copy.deepcopy(stats)
+    return {n.idx: job_cost(n.job, st, consts, model=model) for n in nodes}
 
 
 # --------------------------------------------------------------------------

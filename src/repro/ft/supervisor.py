@@ -1,33 +1,46 @@
-"""Fault supervisor: retries, straggler re-dispatch, and fault injection.
+"""Fault injection + fault-tolerance policy for the ready-queue executor.
 
-Wraps the SGF plan :class:`~repro.core.executor.Executor`:
+Since DESIGN.md §12 the supervisor no longer runs its own barrier round
+loop — execution, overflow retries, failure rerouting, and speculative
+straggler re-dispatch all live in ``Executor.execute``'s ready-queue walk
+(first-completion-wins, event-timeline accounting included).  What
+remains here is *policy and injection*:
 
-* **capacity faults** — exact shuffle-overflow detection already raises
-  :class:`CapacityFault`; the supervisor re-plans the job with doubled
-  forward capacity (Hadoop's "task retry with more memory" analogue).
-* **injected faults** — ``fault_rate`` makes jobs raise
-  :class:`SimulatedFault` (a stand-in for preempted / failed workers);
-  the supervisor retries up to ``max_restarts`` times per job.
-* **stragglers** — jobs slower than ``straggler_factor ×`` the round's
-  median are speculatively re-dispatched and the fastest attempt wins —
-  job-level speculative execution (tasks are short on TPU, so whole-job
-  re-dispatch replaces Hadoop's per-task speculation).
+* **fault injection** — ``fault_rate`` makes job attempts raise
+  :class:`SimulatedFault` (a stand-in for preempted / failed workers)
+  through the executor's ``on_job`` hook; the executor reroutes the job
+  up to ``max_restarts`` times (the ``TransientFault`` retry path,
+  sharing one :class:`~repro.core.executor.RetryState` with overflow
+  recovery).
+* **policy config** — ``speculative``/``straggler_factor`` map onto the
+  executor's ``speculate``/``spec_factor`` (the cost-model-scaled
+  deadline of ``costmodel.speculation_deadline``; whole-job re-dispatch
+  replaces Hadoop's per-task speculation since tasks are short on TPU).
+* **capacity faults** — exact shuffle-overflow detection; the executor's
+  capacity ladder retries with cleared slack / doubled capacity
+  (Hadoop's "task retry with more memory" analogue), surfaced here as
+  ``FTStats.capacity_retries``.
 
-The same class supervises the training loop via :func:`run_train_loop`:
+The same module supervises the training loop via :func:`run_train_loop`:
 checkpoint every N steps, crash injection, resume-from-latest.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, replace
 
 import numpy as np
 
-from repro.core.executor import CapacityFault, Executor, JobRecord, Report, int_stats
+from repro.core.executor import (  # noqa: F401  (CapacityFault re-exported)
+    CapacityFault,
+    Executor,
+    Report,
+    TransientFault,
+)
 
 
-class SimulatedFault(RuntimeError):
-    pass
+class SimulatedFault(TransientFault):
+    """An injected worker failure; retryable by the executor's ready-queue
+    walk (it subclasses :class:`~repro.core.executor.TransientFault`)."""
 
 
 @dataclass
@@ -48,63 +61,67 @@ class FTStats:
 
 
 class Supervisor:
+    """Applies the FT policy to an executor and injects faults.
+
+    For the duration of :meth:`execute` the executor's config is
+    policy-extended (``speculate``/``spec_factor`` from the FT config —
+    restored afterwards, the caller's ExecutorConfig is never retained)
+    and the ready-queue walk is driven with the injection hook; records
+    carry the full event timeline, and speculative attempts appear as
+    duplicate :class:`~repro.core.executor.JobRecord`\\ s with
+    ``attempt``/``speculative`` set (DESIGN.md §12).  Speculation
+    deadlines need modeled job costs: an executor constructed with
+    ``stats=...`` gets them derived here (mirroring the slot scheduler's
+    admission-time estimate); without statistics the deadline is
+    unpriceable and re-dispatch stays off.
+    """
+
     def __init__(self, executor: Executor, config: FTConfig | None = None):
         self.ex = executor
         self.cfg = config or FTConfig()
         self.rng = np.random.default_rng(self.cfg.seed)
         self.stats = FTStats()
 
-    def _run_with_faults(self, job):
-        attempts = 0
-        while True:
-            attempts += 1
-            try:
-                if self.rng.random() < self.cfg.fault_rate:
-                    self.stats.faults_injected += 1
-                    raise SimulatedFault(f"injected fault on {job}")
-                return self.ex.run_job(job)
-            except (SimulatedFault, CapacityFault) as e:
-                if isinstance(e, CapacityFault):
-                    self.stats.capacity_retries += 1
-                self.stats.retries += 1
-                if attempts > self.cfg.max_restarts:
-                    raise
+    def _inject(self, job, attempt: int) -> None:
+        """The executor's ``on_job`` hook: one biased coin per attempt."""
+        if attempt > 1:
+            self.stats.retries += 1
+        if self.rng.random() < self.cfg.fault_rate:
+            self.stats.faults_injected += 1
+            raise SimulatedFault(f"injected fault on {job}")
 
-    def execute(self, plan) -> tuple[dict, Report]:
-        import jax
+    def _estimate(self, plan) -> dict[int, float] | None:
+        """Modeled per-job costs for LPT ordering and speculation
+        deadlines, when the executor carries catalog statistics (the same
+        derivation the slot scheduler uses at admission time)."""
+        if self.ex.stats is None:
+            return None
+        from repro.core.planner import estimate_job_costs, job_dag
 
-        report = Report()
-        for ri, rnd in enumerate(plan.rounds):
-            walls, results = [], []
-            for job in rnd.jobs:
-                t0 = time.perf_counter()
-                outs, stats = self._run_with_faults(job)
-                for v in outs.values():
-                    jax.block_until_ready(v.data)
-                walls.append(time.perf_counter() - t0)
-                results.append((job, outs, stats))
-            # straggler mitigation: re-dispatch jobs ≫ the round median
-            if self.cfg.speculative and len(walls) > 1:
-                med = float(np.median(walls))
-                for i, (job, outs, stats) in enumerate(results):
-                    if walls[i] > self.cfg.straggler_factor * max(med, 1e-9):
-                        self.stats.speculative_redispatches += 1
-                        t0 = time.perf_counter()
-                        outs2, stats2 = self._run_with_faults(job)
-                        for v in outs2.values():
-                            jax.block_until_ready(v.data)
-                        w2 = time.perf_counter() - t0
-                        if w2 < walls[i]:  # fastest attempt wins
-                            walls[i] = w2
-                            results[i] = (job, outs2, stats2)
-            for (job, outs, stats), wall in zip(results, walls):
-                for name, rel in outs.items():
-                    if self.ex.config.compact:
-                        rel = rel.compacted()
-                    self.ex.env[name] = rel
-                ints, backend = int_stats(stats)
-                report.records.append(JobRecord(job, ri, wall, ints, backend=backend))
-        return self.ex.env, report
+        return estimate_job_costs(
+            job_dag(plan, edges=self.ex.config.dag_edges), self.ex.stats
+        )
+
+    def execute(self, plan, *, wall_scale=None) -> tuple[dict, Report]:
+        base = self.ex.config
+        self.ex.config = replace(
+            base,
+            speculate=self.cfg.speculative,
+            spec_factor=self.cfg.straggler_factor,
+        )
+        try:
+            env, report = self.ex.execute(
+                plan,
+                est=self._estimate(plan),
+                on_job=self._inject,
+                max_restarts=self.cfg.max_restarts,
+                wall_scale=wall_scale,
+            )
+        finally:
+            self.ex.config = base
+        self.stats.capacity_retries += self.ex.ft_counters["overflow_retries"]
+        self.stats.speculative_redispatches += self.ex.ft_counters["speculative"]
+        return env, report
 
 
 def run_train_loop(

@@ -10,13 +10,15 @@ What remains here is the *admission-time* side of the old static LPT
 plan:
 
 * per-job modeled costs (`planner.job_cost` over the catalog statistics)
-  are derived once per plan and handed to the executor, which uses them
-  to order its ready queue longest-first (LPT list scheduling, the
-  classic 4/3-approximation);
+  are derived once per plan — over the executor's configured job-DAG edge
+  mode (relation-granular by default, DESIGN.md §12) — and handed to the
+  executor, which uses them to order its ready queue longest-first (LPT
+  list scheduling, the classic 4/3-approximation) and to scale the
+  speculative re-dispatch deadlines (`costmodel.speculation_deadline`);
 * the W bound is forwarded and the executor's dispatch log
   (:class:`~repro.core.executor.ScheduledJob` entries with the event
-  timeline and the estimate that ordered each dispatch) is retained on
-  ``self.schedule`` for introspection.
+  timeline and the estimate that ordered each dispatch, speculative
+  clones included) is retained on ``self.schedule`` for introspection.
 
 Jobs still *execute* serially on this container (SimComm serializes
 shard work onto the host — DESIGN.md §8), so the slot/start/end timeline
@@ -25,12 +27,11 @@ structure before it.
 """
 from __future__ import annotations
 
-import copy
 from typing import Callable
 
 from repro.core.costmodel import CostConstants, HADOOP, Stats
 from repro.core.executor import Executor, Report, ScheduledJob  # re-export
-from repro.core.planner import Plan, job_cost, job_dag
+from repro.core.planner import Plan, estimate_job_costs, job_dag
 
 __all__ = ["ScheduledJob", "SlotScheduler"]
 
@@ -61,19 +62,20 @@ class SlotScheduler:
         """Modeled per-job cost for LPT ordering (0.0 without statistics)."""
         if self.stats is None:
             return {n.idx: 0.0 for n in nodes}
-        st = copy.deepcopy(self.stats)
-        # cost in plan order so register_output feeds later rounds, as in
-        # plan_cost; the estimate is an ordering heuristic, not accounting.
-        return {
-            n.idx: job_cost(n.job, st, self.consts, model=self.model) for n in nodes
-        }
+        return estimate_job_costs(nodes, self.stats, self.consts, model=self.model)
 
     def execute(
-        self, plan: Plan, *, on_job: Callable | None = None
+        self,
+        plan: Plan,
+        *,
+        on_job: Callable | None = None,
+        max_restarts: int = 0,
+        wall_scale: Callable | None = None,
     ) -> tuple[dict, Report]:
-        est = self._estimate(job_dag(plan))
+        est = self._estimate(job_dag(plan, edges=self.executor.config.dag_edges))
         env, report = self.executor.execute(
-            plan, slots=self.slots, est=est, on_job=on_job
+            plan, slots=self.slots, est=est, on_job=on_job,
+            max_restarts=max_restarts, wall_scale=wall_scale,
         )
         self.schedule = list(self.executor.schedule)
         return env, report

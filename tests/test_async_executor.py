@@ -235,6 +235,20 @@ def test_event_replay_empty_and_errors():
     assert rep.event_makespan() is None  # synthetic records lack events
 
 
+def test_event_replay_out_of_round_record_order():
+    """The relation-granular DAG (DESIGN.md §12) can dispatch — and
+    record — a later-round job before an earlier round fully drains; the
+    replay re-buckets records round-major (stable), so the identities
+    hold for ANY record order."""
+    rep = Report()
+    for ri, w in [(0, 1.7), (2, 0.3123), (1, 2.00001), (1, 0.9), (0, 4.1)]:
+        rep.records.append(JobRecord(None, ri, float(w), {}))
+    assert rep.net_time_by_events(None) == rep.net_time
+    assert rep.net_time_by_events(1) == rep.total_time
+    assert rep.net_time == 4.1 + 2.00001 + 0.3123
+    assert rep.net_time_by_events(2) <= rep.total_time + 1e-9
+
+
 def test_event_replay_known_values():
     # one straggler + three shorts, one round: W=2 packs the shorts onto
     # the second slot while the straggler runs; a wave barrier cannot
@@ -258,13 +272,16 @@ if HAVE_HYPOTHESIS:
             min_size=1, max_size=5,
         ),
         slots=st.integers(1, 8),
+        shuffle=st.randoms(use_true_random=False),
     )
     @settings(max_examples=300, deadline=None)
-    def test_event_replay_identities_property(walls, slots):
-        """For ANY recorded walls: W=∞ == net_time and W=1 == total_time
-        exactly (bitwise float equality), and any finite W lands between
-        them (up to fold rounding)."""
+    def test_event_replay_identities_property(walls, slots, shuffle):
+        """For ANY recorded walls in ANY record order (relation-granular
+        dispatch interleaves rounds): W=∞ == net_time and W=1 ==
+        total_time exactly (bitwise float equality), and any finite W
+        lands between them (up to fold rounding)."""
         rep = _mk_report(walls)
+        shuffle.shuffle(rep.records)
         assert rep.net_time_by_events(None) == rep.net_time
         assert rep.net_time_by_events(1) == rep.total_time
         mid = rep.net_time_by_events(slots)

@@ -1,0 +1,335 @@
+"""Property + differential tests for the relation-granular job DAG
+(DESIGN.md §12): edges derive from each job's read/write sets, so a job
+depends exactly on the producers of relations it actually reads.  The
+suite pins four contracts:
+
+* the relation DAG is a subgraph of the strata DAG's transitive closure
+  (every edge crosses a round boundary forward);
+* edges are exactly the read/write intersections (flow dependences to the
+  most recent prior writer, plus anti/output dependences on intermediate
+  name reuse), checked against an independent reference derivation;
+* both modes are topologically valid over the same vertex set, with
+  ``edges="strata"`` unchanged from the seed behaviour;
+* async execution over both edge modes is bit-identical (and matches the
+  set-semantics oracle), at the executor and the service level.
+"""
+import numpy as np
+import pytest
+
+from repro.core import queries as Q, ref_engine
+from repro.core.algebra import SGF, Atom, BSGF, SemiJoin, all_of
+from repro.core.executor import Executor, ExecutorConfig
+from repro.core.planner import (
+    EvalJob,
+    MSJJob,
+    Plan,
+    Round,
+    job_dag,
+    job_reads,
+    job_writes,
+    plan_sgf,
+)
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+from repro.service import SGFService, catalog_from_numpy
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+P = 2
+
+
+# ---------------------------------------------------------------------------
+# reference read/write-set derivation (independent of planner.job_reads)
+# ---------------------------------------------------------------------------
+
+
+def _reads(job) -> set:
+    if isinstance(job, EvalJob):
+        rels = set()
+        for q, xin in zip(job.queries, job.atom_inputs):
+            rels.add(q.guard.rel)
+            rels.update(xin)
+        return rels
+    rels = set()
+    for sj in job.sjs:
+        rels.add(sj.guard.rel)
+        rels.add(sj.cond_atom.rel)
+    for q in job.fused:
+        rels.add(q.guard.rel)
+        rels.update(a.rel for a in q.atoms)
+    return rels
+
+
+def _writes(job) -> set:
+    if isinstance(job, EvalJob):
+        return {q.name for q in job.queries}
+    return {sj.out for sj in job.sjs} | {q.name for q in job.fused}
+
+
+def _expected_deps(plan: Plan) -> list[set]:
+    """Reference derivation straight from the dependence definitions — an
+    O(n²) per-pair scan, deliberately NOT the production one-pass
+    last-writer/readers-since algorithm, so a shared logic bug cannot
+    hide.  For node v (in round k_v):
+
+    * flow (RAW): for each relation v reads, the single latest
+      earlier-round writer of it;
+    * output (WAW): for each relation v writes, likewise the latest
+      earlier-round writer;
+    * anti (WAR): for each relation v writes, every earlier-round reader
+      of it whose round is *after* that latest write (a reader in the
+      same round as a writer saw the pre-write version and is already
+      serialized against it, so it does not constrain v).
+    """
+    flat = [
+        (idx, ri, job)
+        for idx, (ri, job) in enumerate(
+            (ri, job) for ri, rnd in enumerate(plan.rounds) for job in rnd.jobs
+        )
+    ]
+    deps: list[set] = []
+    for v, kv, job_v in flat:
+        d: set[int] = set()
+        for r in _reads(job_v) | _writes(job_v):
+            writers = [u for u, ku, ju in flat if ku < kv and r in _writes(ju)]
+            if writers:
+                d.add(max(writers))
+        for r in _writes(job_v):
+            writers = [u for u, ku, ju in flat if ku < kv and r in _writes(ju)]
+            k_last = flat[max(writers)][1] if writers else -1
+            d |= {
+                u
+                for u, ku, ju in flat
+                if k_last < ku < kv and r in _reads(ju)
+            }
+        deps.append(d - {v})
+    return deps
+
+
+def _check_dag_contracts(plan: Plan) -> None:
+    rel = job_dag(plan, "relations")
+    strata = job_dag(plan, "strata")
+    # same vertex set, both topologically valid
+    assert [(n.idx, n.round_idx) for n in rel] == [
+        (n.idx, n.round_idx) for n in strata
+    ]
+    for n in rel:
+        assert all(d < n.idx for d in n.deps)
+        # subgraph of the strata closure: every edge crosses rounds forward
+        assert all(rel[d].round_idx < n.round_idx for d in n.deps)
+    # strata mode unchanged from the seed: exactly the previous round
+    for n in strata:
+        assert n.deps == tuple(
+            m.idx for m in strata if m.round_idx == n.round_idx - 1
+        )
+    # relation edges are exactly the read/write intersections
+    expected = _expected_deps(plan)
+    for n in rel:
+        assert set(n.deps) == expected[n.idx], (n.idx, n.job)
+        assert n.reads == frozenset(_reads(n.job))
+        assert n.writes == frozenset(_writes(n.job))
+        assert job_reads(n.job) == n.reads and job_writes(n.job) == n.writes
+    # with unique producer names (the common case) the edge set degenerates
+    # to the pure "u writes something v reads" intersection form
+    all_w = [w for n in rel for w in _writes(n.job)]
+    if len(all_w) == len(set(all_w)):
+        for n in rel:
+            inter = {
+                m.idx
+                for m in rel
+                if m.idx != n.idx and _writes(m.job) & _reads(n.job)
+            }
+            assert all(i < n.idx for i in inter)
+            assert set(n.deps) == inter
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random SGF batches
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def sgfs(draw):
+        """Random SGF batches: guards from base relations or earlier
+        outputs, conditions over base unary atoms or earlier outputs."""
+        n = draw(st.integers(1, 5))
+        queries: list[BSGF] = []
+        for i in range(n):
+            gpick = draw(st.integers(0, 2 + i))
+            guard = (
+                Atom(f"G{gpick}", "x", "y")
+                if gpick < 3
+                else Atom(queries[gpick - 3].name, "x", "y")
+            )
+            n_atoms = draw(st.integers(1, 3))
+            atoms = []
+            for _ in range(n_atoms):
+                apick = draw(st.integers(0, 3 + i))
+                atoms.append(
+                    Atom(f"S{apick}", "x")
+                    if apick < 4
+                    else Atom(queries[apick - 4].name, "x", "y")
+                )
+            out_vars = ("x", "y") if draw(st.booleans()) else ("x",)
+            # outputs used as guards/atoms above assume arity 2; force it
+            # for all but the last query so references stay well-typed
+            if i < n - 1:
+                out_vars = ("x", "y")
+            queries.append(BSGF(f"Q{i}", out_vars, guard, all_of(*atoms)))
+        return SGF(queries)
+
+    @given(
+        sgf=sgfs(),
+        strategy=st.sampled_from(["parunit", "sequnit", "one_round"]),
+    )
+    @settings(max_examples=150, deadline=None)
+    def test_relation_dag_properties(sgf, strategy):
+        _check_dag_contracts(plan_sgf(sgf, strategy))
+
+else:
+
+    def test_relation_dag_properties():
+        pytest.importorskip("hypothesis")
+
+
+# ---------------------------------------------------------------------------
+# concrete structure
+# ---------------------------------------------------------------------------
+
+
+def test_paper_families_dag_contracts():
+    for qid in ("C1", "C2", "C3", "C4"):
+        for strategy in ("parunit", "sequnit"):
+            _check_dag_contracts(plan_sgf(Q.make_sgf(qid), strategy))
+    for qid in ("A1", "A3", "A5", "B2"):
+        _check_dag_contracts(plan_sgf(SGF(Q.make_queries(qid)), "parunit"))
+
+
+def _closure(nodes) -> dict[int, frozenset]:
+    """Transitive predecessor sets of a job DAG (deps point backwards)."""
+    anc: dict[int, frozenset] = {}
+    for n in nodes:  # deps have smaller idx, so one forward pass suffices
+        anc[n.idx] = frozenset().union(
+            *({d} | anc[d] for d in n.deps), frozenset()
+        )
+    return anc
+
+
+def test_relation_edges_are_strictly_finer_for_independent_chains():
+    """C3 sequnit: Z4's side branch shares no relations with the Z1-Z3
+    chain, so relation edges free it from the chain's rounds entirely.
+    Direct edge counts can grow (relation edges reach across rounds the
+    strata DAG only covers transitively) — the real claim is about the
+    transitive closure: never more constraints, strictly fewer here."""
+    plan = plan_sgf(Q.make_sgf("C3"), "sequnit")
+    rel = job_dag(plan, "relations")
+    strata = job_dag(plan, "strata")
+    c_rel, c_strata = _closure(rel), _closure(strata)
+    for i in c_rel:
+        assert c_rel[i] <= c_strata[i]
+    assert sum(map(len, c_rel.values())) < sum(map(len, c_strata.values()))
+    freed = [
+        n for n in rel if n.round_idx > 0 and not n.deps and strata[n.idx].deps
+    ]
+    assert freed, "some later-round job must become dependency-free"
+
+
+def test_name_reuse_gets_anti_and_output_edges():
+    """Two strata pooling the same (guard, atom-rel) shape can emit
+    colliding X names; WAR/WAW edges must serialize the reuse so the
+    first reader never sees the second writer's version."""
+    sj_a = SemiJoin("X", ("x", "y"), Atom("R", "x", "y"), Atom("S", "x"))
+    sj_b = SemiJoin("X", ("x", "y"), Atom("R", "x", "y"), Atom("T", "x"))
+    qa = BSGF("ZA", ("x", "y"), Atom("R", "x", "y"), Atom("S", "x"))
+    qb = BSGF("ZB", ("x", "y"), Atom("R", "x", "y"), Atom("T", "x"))
+    plan = Plan(
+        (
+            Round((MSJJob((sj_a,)),)),
+            Round((EvalJob((qa,), (("X",),)),)),
+            Round((MSJJob((sj_b,)),)),
+            Round((EvalJob((qb,), (("X",),)),)),
+        )
+    )
+    nodes = job_dag(plan, "relations")
+    assert nodes[1].deps == (0,)  # flow: reads the X job 0 wrote
+    assert set(nodes[2].deps) == {0, 1}  # WAW vs job 0, WAR vs its reader
+    assert nodes[3].deps == (2,)  # flow from the second writer
+    _check_dag_contracts(plan)
+
+
+def test_job_dag_rejects_unknown_edge_mode():
+    plan = plan_sgf(SGF(Q.make_queries("A3")), "parunit")
+    with pytest.raises(ValueError, match="relations, strata"):
+        job_dag(plan, "bogus")
+    with pytest.raises(ValueError, match="relations, strata"):
+        ExecutorConfig(dag_edges="bogus")
+
+
+# ---------------------------------------------------------------------------
+# execution differential: both edge modes bit-identical
+# ---------------------------------------------------------------------------
+
+
+def _oracle(db_np, sgf):
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    out = {}
+    for q in sgf:
+        out[q.name] = ref_engine.eval_bsgf(setdb, q)
+        setdb[q.name] = out[q.name]
+    return out
+
+
+@pytest.mark.parametrize(
+    "qid,strategy", [("C3", "sequnit"), ("C4", "parunit")]
+)
+def test_async_bit_identical_across_edge_modes(qid, strategy):
+    sgf = Q.make_sgf(qid)
+    plan = plan_sgf(sgf, strategy)
+    db_np = Q.gen_db(sgf, n_guard=64, n_cond=64)
+    envs, reps = {}, {}
+    for mode in ("relations", "strata"):
+        db = db_from_dict(db_np, P=P)
+        ex = Executor(dict(db), SimComm(P), ExecutorConfig(dag_edges=mode))
+        envs[mode], reps[mode] = ex.execute(plan, slots=2)
+        # the recorded timeline respects the mode's own DAG + slot bound
+        by_idx = {}
+        for s in ex.schedule:
+            by_idx[s.idx] = s
+        for n in job_dag(plan, mode):
+            for d in n.deps:
+                assert by_idx[d].end <= by_idx[n.idx].start
+        assert len({s.slot for s in ex.schedule}) <= 2
+    want = _oracle(db_np, sgf)
+    for q in sgf:
+        a, b = envs["relations"][q.name], envs["strata"][q.name]
+        assert a.to_set() == b.to_set() == want[q.name]
+        np.testing.assert_array_equal(np.asarray(a.data), np.asarray(b.data))
+        np.testing.assert_array_equal(np.asarray(a.valid), np.asarray(b.valid))
+    for rep in reps.values():
+        assert rep.net_time_by_events(None) == rep.net_time
+        assert rep.net_time_by_events(1) == rep.total_time
+
+
+def test_service_bit_identical_across_edge_modes():
+    tenants = [[Q.make_queries("A1")[0]], [Q.make_queries("A3")[0]]]
+    flat = [q for qs in tenants for q in qs]
+    db_np = Q.gen_db(flat, n_guard=64, n_cond=64)
+    outs = {}
+    for mode in ("relations", "strata"):
+        svc = SGFService(
+            catalog_from_numpy(db_np, P=P), comm=SimComm(P), slots=2,
+            config=ExecutorConfig(dag_edges=mode),
+        )
+        reqs = [svc.submit(qs) for qs in tenants]
+        svc.tick()
+        outs[mode] = [
+            {name: rel.to_set() for name, rel in req.outputs.items()}
+            for req in reqs
+        ]
+    assert outs["relations"] == outs["strata"]

@@ -364,7 +364,7 @@ def test_failed_async_tick_requeues_and_restores_last_tick(monkeypatch):
     assert good_tick["cold_queries"] >= 1
 
     class ExplodingExecutor(batcher_mod.Executor):
-        def run_job_ft(self, job, on_job=None):
+        def run_job_ft(self, job, on_job=None, **kw):
             raise CapacityFault(job, 7)
 
     monkeypatch.setattr(batcher_mod, "Executor", ExplodingExecutor)

@@ -1,0 +1,339 @@
+"""Speculative re-dispatch + failure rerouting in the ready-queue executor
+(DESIGN.md §12): injected-straggler runs keep first-completion-wins output
+equality with speculation on/off, duplicate attempts never double-count in
+the replay identities, injected failures reroute through the shared
+retry-state helper (one cap_slack relaxation even for a speculative clone
+that also overflows, ExecutorConfig never mutated), and the retired
+supervisor round loop now drives the ready queue (records carry the event
+timeline).  Plus unit coverage for the cost-model deadline: monotone in
+modeled job cost, never firing on the modeled-longest job when W=1.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import queries as Q, ref_engine
+from repro.core.algebra import Atom, BSGF, all_of
+from repro.core.costmodel import stats_of_db, speculation_deadline
+from repro.core.executor import (
+    Executor,
+    ExecutorConfig,
+    TransientFault,
+)
+from repro.core.planner import MSJJob, Plan, Round, plan_par, pooled_semijoins
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+from repro.ft import supervisor
+from repro.service.scheduler import SlotScheduler
+
+XYZW = ("x", "y", "z", "w")
+P = 2
+
+
+def _fused_star_scenario(n_jobs: int = 6, n_rows: int = 128, seed: int = 0):
+    """One round of fused single-equation MSJ jobs over distinct guards —
+    the minimal shape where a straggling slot can be backfilled."""
+    rng = np.random.default_rng(seed)
+    qs, db_np = [], {}
+    for i in range(n_jobs):
+        qs.append(BSGF(f"Z{i}", XYZW, Atom(f"G{i}", *XYZW), all_of(Atom("S", "x"))))
+        db_np[f"G{i}"] = rng.integers(0, 64, (n_rows, 4)).astype(np.int32)
+    db_np["S"] = rng.integers(0, 64, (n_rows, 1)).astype(np.int32)
+    jobs = []
+    for q in qs:
+        sjs, _ = pooled_semijoins([q])
+        jobs.append(MSJJob(tuple(sjs), fused=(q,)))
+    return qs, db_np, Plan((Round(tuple(jobs)),)), jobs
+
+
+def _oracle(db_np, qs):
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    return {q.name: ref_engine.eval_bsgf(setdb, q) for q in qs}
+
+
+# ---------------------------------------------------------------------------
+# deadline model (costmodel.speculation_deadline)
+# ---------------------------------------------------------------------------
+
+
+def test_speculation_deadline_monotone_in_modeled_cost():
+    ds = [speculation_deadline(c, scale=0.5, slots=4) for c in (1.0, 2.0, 5.0, 10.0)]
+    assert ds == sorted(ds) and len(set(ds)) == len(ds)
+    # factor × est × scale exactly (default factor via keyword)
+    assert speculation_deadline(2.0, scale=0.5, slots=4, factor=3.0) == 3.0
+    assert speculation_deadline(2.0, scale=0.5, slots=None, factor=3.0) == 3.0
+
+
+def test_speculation_deadline_never_fires_on_longest_job_at_w1():
+    ests = [1.0, 5.0, 100.0]
+    # W=1: the clone would queue behind the original — never fire, and in
+    # particular never on the modeled-longest job
+    assert speculation_deadline(max(ests), scale=1.0, slots=1) == math.inf
+    assert all(speculation_deadline(e, scale=1.0, slots=1) == math.inf for e in ests)
+
+
+def test_speculation_deadline_uncalibrated_or_unmodeled_never_fires():
+    assert speculation_deadline(5.0, scale=None, slots=4) == math.inf
+    assert speculation_deadline(5.0, scale=0.0, slots=4) == math.inf
+    assert speculation_deadline(0.0, scale=1.0, slots=4) == math.inf
+
+
+def test_no_speculation_at_w1_end_to_end():
+    """The modeled-longest job 10x slower under W=1: speculation must not
+    fire (there is no slot to clone onto)."""
+    qs, db_np, plan, jobs = _fused_star_scenario()
+    db = db_from_dict(db_np, P=P)
+    stats = stats_of_db(db)
+    target = jobs[-1]
+    ws = lambda job, attempt: 10.0 if (job is target and attempt == 0) else 1.0
+    sched = SlotScheduler(
+        Executor(dict(db), SimComm(P), ExecutorConfig(speculate=True)),
+        slots=1, stats=stats,
+    )
+    env, rep = sched.execute(plan, wall_scale=ws)
+    assert rep.n_speculative == 0 and rep.n_jobs == len(jobs)
+    assert {q.name: env[q.name].to_set() for q in qs} == _oracle(db_np, qs)
+
+
+# ---------------------------------------------------------------------------
+# injected stragglers: first completion wins, outputs unchanged
+# ---------------------------------------------------------------------------
+
+
+def test_injected_straggler_first_completion_wins():
+    qs, db_np, plan, jobs = _fused_star_scenario()
+    db = db_from_dict(db_np, P=P)
+    stats = stats_of_db(db)
+    target = jobs[-1]
+    ws = lambda job, attempt: 30.0 if (job is target and attempt == 0) else 1.0
+    # warm jit caches so walls (and the online calibration) are uniform
+    SlotScheduler(Executor(dict(db), SimComm(P)), slots=2, stats=stats).execute(plan)
+
+    outs, makespans, reps = {}, {}, {}
+    for spec in (False, True):
+        sched = SlotScheduler(
+            Executor(dict(db), SimComm(P), ExecutorConfig(speculate=spec)),
+            slots=2, stats=stats,
+        )
+        env, rep = sched.execute(plan, wall_scale=ws)
+        outs[spec] = {q.name: env[q.name].to_set() for q in qs}
+        makespans[spec] = rep.event_makespan()
+        reps[spec] = rep
+        # replay identities hold with and without duplicate attempts
+        assert rep.net_time_by_events(None) == rep.net_time
+        assert rep.net_time_by_events(1) == rep.total_time
+        for r in rep.records:
+            assert r.end == pytest.approx(r.start + r.wall, abs=1e-12)
+
+    assert outs[False] == outs[True] == _oracle(db_np, qs)
+    rep = reps[True]
+    assert rep.n_speculative == 1 and rep.n_jobs == len(jobs) + 1
+    dup = [r for r in rep.records if r.job is target]
+    assert len(dup) == 2
+    assert {r.attempt for r in dup} == {0, 1}
+    assert sum(r.cancelled for r in dup) == 1
+    assert sum(r.speculative for r in dup) == 1
+    # first completion wins: both attempts end at the winner's end (the
+    # loser is cancelled there), on different slots
+    assert dup[0].end == dup[1].end
+    assert dup[0].slot != dup[1].slot
+    winner = next(r for r in dup if not r.cancelled)
+    loser = next(r for r in dup if r.cancelled)
+    assert winner.speculative and not loser.speculative  # the clone won
+    assert loser.wall < 30.0 * winner.wall  # cancelled early, priced as such
+    # the 30x-injected straggler dominated the non-speculative makespan;
+    # killing it must shrink net time (margin is ~29 walls, far over noise)
+    assert makespans[True] < makespans[False]
+    # the dispatch log carries the clone with its attempt index
+    sched_attempts = [s.attempt for s in sched.schedule]
+    assert sched_attempts.count(1) == 1
+
+
+def test_speculation_losing_clone_is_ignored():
+    """A clone slower than the original (injection on the *clone*) loses
+    the race; the original's outputs stand and net time is unaffected."""
+    qs, db_np, plan, jobs = _fused_star_scenario()
+    db = db_from_dict(db_np, P=P)
+    stats = stats_of_db(db)
+    target = jobs[-1]
+
+    def ws(job, attempt):
+        if job is target:
+            return 4.0 if attempt == 0 else 100.0  # straggles, clone worse
+        return 1.0
+
+    SlotScheduler(Executor(dict(db), SimComm(P)), slots=2, stats=stats).execute(plan)
+    sched = SlotScheduler(
+        Executor(dict(db), SimComm(P), ExecutorConfig(speculate=True)),
+        slots=2, stats=stats,
+    )
+    env, rep = sched.execute(plan, wall_scale=ws)
+    assert {q.name: env[q.name].to_set() for q in qs} == _oracle(db_np, qs)
+    if rep.n_speculative:  # the 4x injection crossed the deadline
+        dup = [r for r in rep.records if r.job is target]
+        loser = next(r for r in dup if r.cancelled)
+        assert loser.speculative  # the original won, the clone was cancelled
+        assert rep.net_time_by_events(None) == rep.net_time
+        assert rep.net_time_by_events(1) == rep.total_time
+
+
+def test_failing_clone_falls_back_to_original():
+    """A speculative clone that dies (injected fault, shared retry budget
+    exhausted) must not abort the plan: the original attempt already
+    completed, so its result stands and no speculative record lands."""
+    qs, db_np, plan, jobs = _fused_star_scenario()
+    target = jobs[-1]
+    db = db_from_dict(db_np, P=P)
+    stats = stats_of_db(db)
+    ws = lambda job, attempt: 30.0 if (job is target and attempt == 0) else 1.0
+    calls = {"n": 0}
+
+    def inject(job, attempt):
+        if job is target:  # original's first attempt passes; clone faults
+            calls["n"] += 1
+            if calls["n"] > 1:
+                raise TransientFault("clone dies")
+
+    SlotScheduler(Executor(dict(db), SimComm(P)), slots=2, stats=stats).execute(plan)
+    sched = SlotScheduler(
+        Executor(dict(db), SimComm(P), ExecutorConfig(speculate=True)),
+        slots=2, stats=stats,
+    )
+    env, rep = sched.execute(plan, on_job=inject, wall_scale=ws)
+    assert calls["n"] > 1  # the clone was dispatched and died
+    assert rep.n_speculative == 0 and rep.n_jobs == len(jobs)
+    assert not any(r.cancelled for r in rep.records)
+    assert {q.name: env[q.name].to_set() for q in qs} == _oracle(db_np, qs)
+    assert rep.net_time_by_events(None) == rep.net_time
+    assert rep.net_time_by_events(1) == rep.total_time
+
+
+# ---------------------------------------------------------------------------
+# injected failures reroute through the shared retry state
+# ---------------------------------------------------------------------------
+
+
+def test_injected_failure_rerouting():
+    qs = Q.make_queries("A3")
+    db_np = Q.gen_db(qs, n_guard=64, n_cond=64)
+    db = db_from_dict(db_np, P=P)
+    plan = plan_par(qs)
+    failed = set()
+
+    def inject(job, attempt):
+        if id(job) not in failed:
+            failed.add(id(job))
+            raise TransientFault(f"injected on {job}")
+
+    ex = Executor(dict(db), SimComm(P))
+    env, rep = ex.execute(plan, on_job=inject, max_restarts=2)
+    assert all(r.attempts == 2 for r in rep.records)
+    assert ex.ft_counters["fault_retries"] == rep.n_jobs
+    assert env["Z"].to_set() == _oracle(db_np, qs)["Z"]
+    # with no restart budget the fault propagates
+    with pytest.raises(TransientFault):
+        Executor(dict(db), SimComm(P)).execute(
+            plan, on_job=lambda j, a: (_ for _ in ()).throw(TransientFault("x"))
+        )
+
+
+def test_supervisor_drives_ready_queue_with_event_timeline():
+    """Supervisor-retirement regression: the ft path now goes through the
+    ready-queue walk — records carry the event timeline (the old round
+    loop recorded none) and outputs still match the oracle under faults."""
+    qs = Q.make_queries("A1")
+    db_np = Q.gen_db(qs, n_guard=128, n_cond=128)
+    db = db_from_dict(db_np, P=P)
+    config = ExecutorConfig()
+    ex = Executor(dict(db), SimComm(P), config)
+    sup = supervisor.Supervisor(ex, supervisor.FTConfig(fault_rate=0.3, seed=2))
+    env, rep = sup.execute(plan_par(qs))
+    # the FT policy is scoped to execute(): the caller's config comes back
+    assert ex.config is config and config.speculate is False
+    assert env["Z"].to_set() == _oracle(db_np, qs)["Z"]
+    assert sup.stats.faults_injected > 0
+    assert sup.stats.retries >= sup.stats.faults_injected
+    assert rep.event_makespan() is not None  # every record has event info
+    assert all(r.slot >= 0 and r.end >= r.start >= 0.0 for r in rep.records)
+    assert rep.net_time_by_events(None) == rep.net_time
+    assert rep.net_time_by_events(1) == rep.total_time
+
+
+def test_supervisor_speculates_with_statistics():
+    """With catalog statistics on the executor the supervisor's policy
+    actually re-dispatches stragglers: the deadline is priced from the
+    derived per-job cost estimates (regression: est must not silently
+    default to 0.0 through the ft path, which would disable speculation).
+    """
+    qs, db_np, plan, jobs = _fused_star_scenario()
+    db = db_from_dict(db_np, P=P)
+    stats = stats_of_db(db)
+    target = jobs[-1]
+    ws = lambda job, attempt: 30.0 if (job is target and attempt == 0) else 1.0
+    SlotScheduler(Executor(dict(db), SimComm(P)), slots=2, stats=stats).execute(plan)
+    config = ExecutorConfig()
+    ex = Executor(dict(db), SimComm(P), config, stats=stats)
+    sup = supervisor.Supervisor(
+        ex, supervisor.FTConfig(speculative=True, straggler_factor=2.5)
+    )
+    env, rep = sup.execute(plan, wall_scale=ws)
+    assert sup.stats.speculative_redispatches >= 1
+    assert rep.n_speculative >= 1
+    assert ex.config is config and config.speculate is False  # restored
+    assert {q.name: env[q.name].to_set() for q in qs} == _oracle(db_np, qs)
+    # speculation off through the same path: no clones, same outputs
+    ex2 = Executor(dict(db), SimComm(P), ExecutorConfig(), stats=stats)
+    sup2 = supervisor.Supervisor(ex2, supervisor.FTConfig(speculative=False))
+    env2, rep2 = sup2.execute(plan, wall_scale=ws)
+    assert rep2.n_speculative == 0
+    assert {q.name: env2[q.name].to_set() for q in qs} == _oracle(db_np, qs)
+
+
+# ---------------------------------------------------------------------------
+# shared retry state: one relaxation across overflow + speculation
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_clone_shares_retry_state_single_relaxation():
+    """A job that overflows (undersized cap_slack), succeeds after one
+    relaxation, and then straggles into a speculative clone: the clone
+    must inherit the learned sizing (cap_slack relaxed exactly once) and
+    the ExecutorConfig must come out of the mixed-failure run unchanged."""
+    qs, db_np, plan, jobs = _fused_star_scenario()
+    target = jobs[-1]
+    seen = []
+
+    class FlakyExecutor(Executor):
+        def run_job(self, job, *, cap_override=None, cap_slack=None):
+            outs, stats = super().run_job(
+                job, cap_override=cap_override, cap_slack=cap_slack
+            )
+            if job is target:
+                seen.append((cap_override, cap_slack))
+                if len(seen) == 1:  # overflow only the very first attempt
+                    stats = dict(stats)
+                    stats["overflow"] = 3
+                    stats["forward_cap"] = 512
+            return outs, stats
+
+    db = db_from_dict(db_np, P=P)
+    stats = stats_of_db(db)
+    ws = lambda job, attempt: 30.0 if (job is target and attempt == 0) else 1.0
+    SlotScheduler(Executor(dict(db), SimComm(P)), slots=2, stats=stats).execute(plan)
+    config = ExecutorConfig(cap_slack=0.5, speculate=True)
+    ex = FlakyExecutor(dict(db), SimComm(P), config)
+    sched = SlotScheduler(ex, slots=2, stats=stats)
+    env, rep = sched.execute(plan, wall_scale=ws)
+    # attempt 1 undersized -> overflow; retry cleared the slack; the
+    # speculative clone inherited (None, 1.0) instead of relaxing again
+    assert seen == [(None, None), (None, 1.0), (None, 1.0)]
+    assert rep.n_speculative == 1
+    # ≥ 1: cap_slack=0.5 may genuinely undersize the other jobs too; the
+    # forced overflow above is pinned by the ``seen`` sequence regardless
+    assert ex.ft_counters["overflow_retries"] >= 1
+    # the config object was never swapped or mutated by the mixed failures
+    assert ex.config is config
+    assert config.cap_slack == 0.5 and config.speculate is True
+    assert config == ExecutorConfig(cap_slack=0.5, speculate=True)
+    assert {q.name: env[q.name].to_set() for q in qs} == _oracle(db_np, qs)
