@@ -29,6 +29,13 @@ next to many short ones.  Barrier waves stall both slots on the
 straggler; the ready-queue executor backfills the freed slot, so its net
 time must come out strictly below (DESIGN.md §11).
 
+Part 5 (chaos soak) — a fault_rate × shard-loss × quarantine ladder over
+a multi-tenant service under ``fail_policy="isolate"``: one poison tenant
+whose jobs raise blamed PermanentFaults, transient faults, and
+lineage-recoverable shard losses.  Clean tenants must keep completing
+(goodput floor) with outputs bit-identical to the fault-free baseline,
+and quarantine must hit exactly the poison tenant (DESIGN.md §13).
+
 Part 4 (dag × speculation) — a two-level dependent plan under W=2 with
 one injected 5x-slow attempt, run over the full
 ``dag_edges={strata,relations} × speculation={off,on}`` grid:
@@ -61,11 +68,24 @@ import numpy as np
 from repro.core import queries as Q
 from repro.core.algebra import Atom, BSGF, all_of
 from repro.core.costmodel import stats_of_db
-from repro.core.executor import Executor, ExecutorConfig
-from repro.core.planner import MSJJob, plan_greedy
+from repro.core.executor import (
+    Executor,
+    ExecutorConfig,
+    PermanentFault,
+    ShardLoss,
+    TransientFault,
+)
+from repro.core.planner import MSJJob, job_reads, plan_greedy
 from repro.core.relation import db_from_dict
 from repro.engine.comm import SimComm
-from repro.service import SGFService, SlotScheduler, catalog_from_numpy
+from repro.ft.elastic import lose_shard
+from repro.service import (
+    QuarantinedError,
+    RetryPolicy,
+    SGFService,
+    SlotScheduler,
+    catalog_from_numpy,
+)
 
 XYZW = ("x", "y", "z", "w")
 DEFAULT_P = 8
@@ -473,6 +493,169 @@ def dag_speculation(
     }
 
 
+def chaos_soak(
+    *, P: int = 4, n_guard: int = 512, n_cond: int = 512,
+    ticks: int = 40, goodput_floor: float = 0.9, seed: int = 0,
+    grid=((0.0, 0.0, False), (0.25, 0.0, True), (0.25, 0.05, True)),
+) -> list[dict]:
+    """Part 5 (chaos soak, DESIGN.md §13) — a fault_rate × shard-loss ×
+    quarantine ladder over a multi-tenant service with
+    ``fail_policy="isolate"``.
+
+    Four tenants share cond relations; tenant 1 guards on its own relation
+    ``PG``.  At poisoned grid points every job touching PG raises a blamed
+    :class:`PermanentFault` — the executor narrows the fused multi-tenant
+    jobs around the blame, the service fails only tenant 1's requests
+    (backoff, then quarantine), and the co-batched tenants keep completing.
+    Transient faults and lineage-recoverable shard losses are layered on
+    top.  Acceptance, checked per grid point:
+
+    * every completed clean-tenant output is **bit-identical** to the
+      fault-free baseline (lineage recovery and blame narrowing leave no
+      trace in survivor results);
+    * clean-tenant goodput stays above ``goodput_floor`` (1.0 at the
+      fault-free control point);
+    * the quarantined tenant set is exactly {1} at poisoned points and
+      empty at the control point;
+    * the replay identities hold on every report the soak produced.
+    """
+    guards = ("R", "PG", "G", "H")  # tenant 1 is the poison tenant
+    tenants = [
+        [BSGF("Z", XYZW, Atom(g, *XYZW),
+              all_of(*[Atom(r, v) for r, v in zip("STUV", XYZW)]))]
+        for g in guards
+    ]
+    clean = [t for t in range(len(guards)) if t != 1]
+    db_np = Q.gen_db([q for qs in tenants for q in qs],
+                     n_guard=n_guard, n_cond=n_cond)
+
+    def mk_service():
+        return SGFService(
+            catalog_from_numpy(db_np, P=P),
+            config=ExecutorConfig(fail_policy="isolate"),
+            result_cache_capacity=0,
+            retry_policy=RetryPolicy(max_failures=3, backoff_base=1,
+                                     quarantine_ticks=4),
+        )
+
+    # fault-free baseline arrays, per clean tenant
+    base_svc = mk_service()
+    base_reqs = [base_svc.submit(tenants[t], tenant=t) for t in clean]
+    base_svc.tick()
+    baseline = {
+        t: (np.asarray(r.outputs["Z"].data), np.asarray(r.outputs["Z"].valid))
+        for t, r in zip(clean, base_reqs)
+    }
+
+    rows: list[dict] = []
+    for fault_rate, shard_loss_rate, poison in grid:
+        rng = np.random.default_rng(seed)
+        svc = mk_service()
+        n_lost = 0
+
+        def hook(job, attempt):
+            nonlocal n_lost
+            if poison and "PG" in job_reads(job):
+                raise PermanentFault("poisoned tenant guard", rels={"PG"})
+            if shard_loss_rate and rng.random() < shard_loss_rate:
+                ex = svc._executor
+                cands = sorted(job_reads(job) & ex.lineage.keys())
+                cands = [r for r in cands if r in ex.env and r != "PG"]
+                if cands:
+                    rel_name = cands[int(rng.integers(len(cands)))]
+                    rel = ex.env[rel_name]
+                    shard = int(rng.integers(rel.P))
+                    ex.env[rel_name] = lose_shard(rel, shard)
+                    n_lost += 1
+                    raise ShardLoss(rel_name, shard)
+            if fault_rate and rng.random() < fault_rate:
+                raise TransientFault(f"chaos fault on {job}")
+
+        svc.on_job = hook
+        svc.max_restarts = 4
+
+        submitted = {t: 0 for t in range(len(guards))}
+        completed = {t: 0 for t in range(len(guards))}
+        mismatches = quarantine_rejected = 0
+        live: list = []
+
+        def reap():
+            nonlocal mismatches, live
+            still = []
+            for t, req in live:
+                if req.done:
+                    completed[t] += 1
+                    if t != 1:
+                        d, v = baseline[t]
+                        same = np.array_equal(
+                            np.asarray(req.outputs["Z"].data), d
+                        ) and np.array_equal(
+                            np.asarray(req.outputs["Z"].valid), v
+                        )
+                        mismatches += not same
+                elif not req.failed:  # failed requests are terminal
+                    still.append((t, req))
+            live = still
+
+        for _ in range(ticks):
+            for t in range(len(guards)):
+                if t == 1 and not poison:
+                    continue
+                try:
+                    req = svc.submit(tenants[t], tenant=t)
+                except QuarantinedError:
+                    quarantine_rejected += 1
+                    continue
+                submitted[t] += 1
+                live.append((t, req))
+            svc.tick()
+            reap()
+        # drain the backoff tail so late retries get their verdict
+        for _ in range(ticks // 4 + 4):
+            if not any(t in clean for t, _ in live):
+                break
+            svc.tick()
+            reap()
+
+        for rep in svc.reports:
+            _check_events(rep)
+        clean_submitted = sum(submitted[t] for t in clean)
+        clean_done = sum(completed[t] for t in clean)
+        goodput = clean_done / max(clean_submitted, 1)
+        quarantined = sorted(set(svc.strikes))
+        row = dict(
+            fault_rate=fault_rate, shard_loss_rate=shard_loss_rate,
+            poison=poison, ticks=ticks,
+            submitted=clean_submitted, completed=clean_done,
+            goodput=round(goodput, 4), bit_identical=mismatches == 0,
+            shard_losses=n_lost, failed_requests=svc.failed_requests,
+            retries_scheduled=svc.retries_scheduled,
+            quarantines=svc.quarantines,
+            quarantine_rejected=quarantine_rejected,
+            quarantined_tenants=quarantined,
+        )
+        assert mismatches == 0, (
+            f"chaos soak {row}: survivor outputs must be bit-identical "
+            f"to the fault-free baseline"
+        )
+        assert goodput >= (1.0 if not poison and not fault_rate
+                           else goodput_floor), (
+            f"chaos soak {row}: clean-tenant goodput {goodput:.3f} below floor"
+        )
+        assert quarantined == ([1] if poison else []), (
+            f"chaos soak {row}: quarantine must hit exactly the poison tenant"
+        )
+        if poison:
+            assert svc.quarantines >= 1 and quarantine_rejected >= 1, (
+                f"chaos soak {row}: the poison tenant must be quarantined "
+                f"and have submissions rejected"
+            )
+        if shard_loss_rate:
+            assert n_lost > 0, f"chaos soak {row}: no shard losses injected"
+        rows.append(row)
+    return rows
+
+
 def acceptance_checks(
     *, n_guard: int = 512, n_cond: int = 512, P: int = DEFAULT_P,
     slots: int | None = None, quick: bool = False,
@@ -530,6 +713,10 @@ def acceptance_checks(
     # ladder (bit-identical outputs; relations ≤ strata; speculative
     # strictly below non-speculative with one injected 5x-slow attempt)
     dag_spec = dag_speculation(P=P, slots=2, n_rows=2048 if quick else 4096)
+    # ISSUE-6: the chaos-soak ladder (fault_rate × shard-loss × quarantine);
+    # chaos_soak asserts bit-identical survivors, the goodput floor, and
+    # that quarantine hits exactly the poison tenant at every grid point
+    soak = chaos_soak(P=P, ticks=40 if quick else 150)
     return {
         "warm_tick_zero_jobs_zero_bytes": bool(warm_zero),
         "warm_bit_identical_to_cold": bool(bit_identical),
@@ -537,6 +724,15 @@ def acceptance_checks(
         "event_accounting_exact": True,  # _check_events would have raised
         "straggler": strag,
         "dag_speculation": dag_spec,
+        "chaos_soak": {
+            "survivors_bit_identical": all(r["bit_identical"] for r in soak),
+            "goodput_min": min(r["goodput"] for r in soak),
+            "quarantine_exact": all(
+                r["quarantined_tenants"] == ([1] if r["poison"] else [])
+                for r in soak
+            ),
+            "points": soak,
+        },
         "rel_epochs": dict(svc.catalog.rel_epochs),
         "plan_cache": svc.cache.counters(),
         "result_cache": svc.results.counters(),
@@ -609,6 +805,13 @@ def main(argv=None) -> None:
           f"+speculation={ds['relations_spec_net_time']}s "
           f"(x{ds['speedup_speculation']}, "
           f"{ds['speculative_dispatches']} clone)", file=sys.stderr)
+    cs = acceptance["chaos_soak"]
+    for p in cs["points"]:
+        print(f"# chaos fault={p['fault_rate']} shard_loss={p['shard_loss_rate']} "
+              f"poison={p['poison']}: goodput={p['goodput']} "
+              f"bit_identical={p['bit_identical']} losses={p['shard_losses']} "
+              f"quarantines={p['quarantines']} "
+              f"quarantined={p['quarantined_tenants']}", file=sys.stderr)
     print(f"# service_throughput done in {time.time()-t0:.1f}s", file=sys.stderr)
     if args.json:
         write_json(args.json, rows, repeat_rows, acceptance,

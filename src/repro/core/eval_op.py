@@ -13,6 +13,7 @@ Output relations are distinct-tuple sets (the reducer groups by tuple).
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Sequence
 
@@ -42,6 +43,26 @@ class EvalUnit:
     atoms: tuple[Atom, ...]  # conditional atoms, aligned with xs
     cond: Cond | None
     out_pos: tuple[int, ...] | None = None
+    #: shuffle-placement salt; ``None`` falls back to a hash of ``name``
+    salt: int | None = None
+
+
+def _unit_salt(name: str) -> int:
+    """Shuffle salt for an EVAL unit, derived from its *name* rather than
+    its position in the job: a unit's output placement must not change when
+    failure isolation narrows the job around it (DESIGN.md §13)."""
+    return zlib.crc32(name.encode()) & 0x7FFFFFFF
+
+
+def query_salt(q) -> int:
+    """Placement salt from a BSGF query's *structure* — not its name, which
+    in the service is canonical and batch-positional (``q0, q1, ...``).
+    The same query must land its output rows on the same shards no matter
+    which co-batched queries it is fused with (and no matter how failure
+    isolation narrows the job), or survivor outputs would not be
+    bit-identical across batch compositions (DESIGN.md §13)."""
+    key = repr((q.out_vars, q.guard, q.atoms, q.cond))
+    return zlib.crc32(key.encode()) & 0x7FFFFFFF
 
 
 def run_eval(
@@ -83,7 +104,9 @@ def run_eval(
                 tup = jnp.concatenate(
                     [tup, jnp.zeros((rel.cap, A - rel.arity), jnp.int32)], axis=1
                 )
-            h = hashing.hash_cols(tup[:, : arities[ui]], salt=ui)
+            u = units[ui]
+            salt = u.salt if u.salt is not None else _unit_salt(u.name)
+            h = hashing.hash_cols(tup[:, : arities[ui]], salt=salt)
             msgs.append(
                 jnp.concatenate(
                     [

@@ -47,17 +47,27 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Sequence
+from dataclasses import dataclass, field, replace
+from typing import Callable, Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.algebra import BSGF
 from repro.core.costmodel import Stats, choose_backend, speculation_deadline
-from repro.core.eval_op import EvalUnit, run_eval
+from repro.core.eval_op import EvalUnit, query_salt, run_eval
 from repro.core.msj import FusedQuery, conform_mask, make_spec, run_msj
-from repro.core.planner import DAG_EDGE_MODES, EvalJob, Job, MSJJob, Plan, job_dag
+from repro.core.planner import (
+    DAG_EDGE_MODES,
+    EvalJob,
+    Job,
+    MSJJob,
+    Plan,
+    job_dag,
+    job_reads,
+    job_writes,
+    narrow_job,
+)
 from repro.core.relation import Relation
 from repro.engine.comm import Comm
 
@@ -76,6 +86,39 @@ class TransientFault(RuntimeError):
     worker).  Raised by ``on_job`` hooks (e.g. the fault supervisor's
     injection policy); the executor's retry helper reroutes the job up to
     ``max_restarts`` times before letting it propagate."""
+
+
+class PermanentFault(RuntimeError):
+    """A non-retryable job failure (a poison query, a deterministic bug):
+    retrying cannot help, so the retry helper lets it propagate
+    immediately.  Under ``fail_policy="isolate"`` the ready-queue walk
+    records the job as failed and sweeps its taint closure instead of
+    aborting the plan (DESIGN.md §13).
+
+    ``rels`` optionally *blames* specific relations (the poison tenant's
+    guard, an unrecoverable lost shard's relation).  A blamed failure of a
+    fused multi-tenant job is narrowed (:func:`repro.core.planner.narrow_job`):
+    only the units touching a blamed relation fail, the innocent remainder
+    is re-dispatched — without blame the whole job is the failure unit."""
+
+    def __init__(self, msg: str, *, rels: Iterable[str] = ()):
+        super().__init__(msg)
+        self.rels = frozenset(rels)
+
+
+class ShardLoss(TransientFault):
+    """One shard of a base relation was lost mid-execute (a failed worker
+    holding that partition).  Retryable *after recovery*: the executor
+    re-materializes the lost partition from its lineage sources (the
+    catalog's host-resident rows, via ``ft/elastic.recover_shard``) before
+    re-dispatching the job.  Injectors must damage ``executor.env`` (see
+    ``ft/elastic.lose_shard``) before raising, so the recovery path is
+    actually exercised."""
+
+    def __init__(self, rel: str, shard: int):
+        super().__init__(f"lost shard {shard} of relation {rel!r}")
+        self.rel = rel
+        self.shard = shard
 
 
 @dataclass
@@ -131,6 +174,13 @@ class JobRecord:
     attempt: int = 0
     speculative: bool = False
     cancelled: bool = False
+    #: how the record ended (DESIGN.md §13): "ok" (outputs published),
+    #: "failed" (restarts/retries exhausted or a PermanentFault under
+    #: fail_policy="isolate"; nothing published), "tainted" (skipped
+    #: without dispatch because an upstream failure poisoned a relation it
+    #: reads; wall == 0.0), or "cancelled" (a speculative attempt that
+    #: lost the first-completion-wins race).
+    outcome: str = "ok"
 
 
 @dataclass(frozen=True)
@@ -262,6 +312,31 @@ class Report:
         """Speculative clone dispatches recorded (0 without speculation)."""
         return sum(r.speculative for r in self.records)
 
+    @property
+    def failed_jobs(self) -> list[JobRecord]:
+        """Records of jobs that exhausted their retries or hit a
+        :class:`PermanentFault` under ``fail_policy="isolate"``."""
+        return [r for r in self.records if r.outcome == "failed"]
+
+    @property
+    def tainted_jobs(self) -> list[JobRecord]:
+        """Records of jobs skipped without dispatch because an upstream
+        failure poisoned a relation they read (wall == 0.0)."""
+        return [r for r in self.records if r.outcome == "tainted"]
+
+    def tainted_relations(self) -> frozenset[str]:
+        """Every relation a failed or tainted job should have written —
+        the blast radius the service's partial commit excludes.  Matches
+        the executor's online taint closure exactly (failed writes seed
+        it, tainted writes keep it transitively closed)."""
+        from repro.core.planner import job_writes
+
+        rels: set[str] = set()
+        for r in self.records:
+            if r.outcome in ("failed", "tainted"):
+                rels |= job_writes(r.job)
+        return frozenset(rels)
+
     def summary(self) -> dict:
         return {
             "net_time": self.net_time,
@@ -270,6 +345,8 @@ class Report:
             "bytes_shuffled": self.bytes_shuffled(),
             "input_rows": self.input_rows(),
             "speculative": self.n_speculative,
+            "failed": len(self.failed_jobs),
+            "tainted": len(self.tainted_jobs),
         }
 
 
@@ -311,6 +388,9 @@ PROBE_BACKENDS = ("auto", "sorted", "pallas", "dense")
 #: valid ExecutorConfig.execution_mode names.
 EXECUTION_MODES = ("async", "waves")
 
+#: valid ExecutorConfig.fail_policy names.
+FAIL_POLICIES = ("abort", "isolate")
+
 
 @dataclass
 class ExecutorConfig:
@@ -351,6 +431,22 @@ class ExecutorConfig:
     #: (costmodel.speculation_deadline; the modeled-longest job is never
     #: flagged merely for being longest).
     spec_factor: float = 2.5
+    #: what a job failure (TransientFault restarts exhausted, CapacityFault
+    #: retries exhausted, or a PermanentFault) does to the rest of the
+    #: plan.  "abort" (default) propagates the exception — the seed
+    #: whole-plan failure domain.  "isolate" narrows a blamed failure to
+    #: the poisoned units (planner.narrow_job), records them as a failed
+    #: JobRecord, sweeps exactly their taint closure off the ready queue
+    #: (downstream units transitively *reading* a relation they should
+    #: have written are recorded as zero-wall tainted records), and keeps
+    #: executing everything else — failure becomes a per-unit event
+    #: (DESIGN.md §13).  Async mode only.
+    fail_policy: str = "abort"
+    #: elastically shrink the slot budget by one (down to 1) for the
+    #: remainder of the execute after each recovered ShardLoss — the lost
+    #: worker's slot is gone until the resize, so pricing W-1 slots is the
+    #: honest schedule (ft/elastic.py).
+    shrink_on_shard_loss: bool = False
     #: block on each job's output arrays before timing it.  False keeps
     #: jax async dispatch in flight across jobs (outputs materialize while
     #: later jobs launch); the overflow check still syncs the stats scalar,
@@ -372,6 +468,11 @@ class ExecutorConfig:
             raise ValueError(
                 f"unknown dag edge mode {self.dag_edges!r}; "
                 f"valid names: {', '.join(DAG_EDGE_MODES)}"
+            )
+        if self.fail_policy not in FAIL_POLICIES:
+            raise ValueError(
+                f"unknown fail policy {self.fail_policy!r}; "
+                f"valid names: {', '.join(FAIL_POLICIES)}"
             )
 
 
@@ -418,18 +519,28 @@ class Executor:
         config: ExecutorConfig | None = None,
         *,
         stats: Stats | None = None,
+        lineage: dict[str, Relation] | None = None,
     ):
         self.env: dict[str, Relation] = dict(db)
         self.comm = comm
         self.config = config or ExecutorConfig()
         self.stats = stats
+        #: durable lineage sources for shard-loss recovery: relation name →
+        #: the authoritative Relation a lost partition is re-materialized
+        #: from (the catalog's host-resident rows in the service).  Default
+        #: is the initial ``db`` mapping — base relations are recoverable,
+        #: in-flight intermediates are not (their producers would have to
+        #: re-run; under fail_policy="isolate" that surfaces as a failed
+        #: job instead of an abort).
+        self.lineage: dict[str, Relation] = dict(db) if lineage is None else dict(lineage)
         #: dispatch log of the last :meth:`execute` call.
         self.schedule: list[ScheduledJob] = []
         #: fault-tolerance counters of the last :meth:`execute` call
         #: (overflow retries, injected-failure reroutes, speculative
-        #: clone dispatches) — what the supervisor's FTStats reads.
+        #: clone dispatches, shard-loss recoveries) — what the
+        #: supervisor's FTStats reads.
         self.ft_counters: dict[str, int] = dict(
-            overflow_retries=0, fault_retries=0, speculative=0
+            overflow_retries=0, fault_retries=0, speculative=0, shard_recoveries=0
         )
 
     # -- per-job backend decision ------------------------------------------
@@ -498,7 +609,10 @@ class Executor:
             env[x0] = guard_projection(self.env[q.guard.rel], q, x0)
             out_pos = tuple(q.guard.vars.index(v) for v in q.out_vars)
             units.append(
-                EvalUnit(q.name, x0, tuple(xin), tuple(q.atoms), q.cond, out_pos)
+                EvalUnit(
+                    q.name, x0, tuple(xin), tuple(q.atoms), q.cond, out_pos,
+                    salt=query_salt(q),
+                )
             )
             input_rows += int(env[x0].count()) + sum(int(self.env[x].count()) for x in xin)
         outs, stats = run_eval(env, units, self.comm)
@@ -533,9 +647,15 @@ class Executor:
                 outs, stats = self.run_job(
                     job, cap_override=state.cap, cap_slack=state.slack
                 )
-            except TransientFault:
+            except TransientFault as fault:
                 state.fault_retries += 1
                 self.ft_counters["fault_retries"] += 1
+                if isinstance(fault, ShardLoss):
+                    # recover *before* the budget check: the lost partition
+                    # must be re-materialized even if this job gives up, or
+                    # every later job reading the relation computes on a
+                    # silently-damaged copy
+                    self._recover_shard(fault)
                 if state.fault_retries > max_restarts:
                     raise
                 continue
@@ -546,6 +666,68 @@ class Executor:
                 raise CapacityFault(job, ovf)
             state.on_overflow(self.config, stats)
             self.ft_counters["overflow_retries"] += 1
+
+    def _recover_shard(self, fault: ShardLoss) -> None:
+        """Re-materialize a lost base-relation partition from lineage
+        (DESIGN.md §13): the durable source rows are host-resident, so the
+        damaged in-memory copy is spliced back bit-identically
+        (``ft/elastic.recover_shard``; a source resident at a different P
+        is re-partitioned first).  Without a lineage source the loss is
+        unrecoverable and escalates to a :class:`PermanentFault`."""
+        src = self.lineage.get(fault.rel)
+        if src is None:
+            raise PermanentFault(
+                f"shard {fault.shard} of {fault.rel!r} lost with no lineage "
+                "source (in-flight intermediate); cannot re-materialize",
+                rels={fault.rel},
+            ) from fault
+        from repro.ft.elastic import recover_shard
+
+        self.env[fault.rel] = recover_shard(
+            self.env[fault.rel], src, fault.shard
+        )
+        self.ft_counters["shard_recoveries"] += 1
+
+    def _taint_sweep(
+        self,
+        pending: dict,
+        seed_rels: Iterable[str],
+        end: float,
+        report: "Report",
+        end_at: dict[int, float],
+    ) -> None:
+        """Propagate a failure's taint through the not-yet-dispatched jobs
+        (DESIGN.md §13): any pending job reading a tainted relation is
+        *narrowed* (:func:`repro.core.planner.narrow_job`) — its poisoned
+        units are recorded as a zero-wall tainted JobRecord (start == end
+        at the failure, slot -1, so every replay identity holds trivially)
+        and their writes join the closure; the untouched units stay
+        queued.  Jobs related only by anti/output (WAR/WAW) dependences
+        never read a tainted relation and keep running."""
+        rels = set(seed_rels)
+        changed = True
+        while changed:
+            changed = False
+            for ti, tn in list(pending.items()):
+                if not (tn.reads & rels):
+                    continue
+                kept, dropped = narrow_job(tn.job, rels)
+                if dropped is None:
+                    continue  # reads overlap but no unit touches the taint
+                changed = True
+                rels |= job_writes(dropped)
+                report.records.append(
+                    JobRecord(dropped, tn.round_idx, 0.0, {}, 0, "none",
+                              end, end, -1, outcome="tainted")
+                )
+                if kept is None:
+                    end_at[ti] = end
+                    del pending[ti]
+                else:
+                    pending[ti] = replace(
+                        tn, job=kept, reads=job_reads(kept),
+                        writes=job_writes(kept),
+                    )
 
     # -- job-granular entry (what the ready-queue walk drives) -------------
     def _attempt(
@@ -647,8 +829,15 @@ class Executor:
         if est is None:
             est = {n.idx: 0.0 for n in nodes}
         self.schedule = []
-        self.ft_counters = dict(overflow_retries=0, fault_retries=0, speculative=0)
+        self.ft_counters = dict(
+            overflow_retries=0, fault_retries=0, speculative=0, shard_recoveries=0
+        )
         if self.config.execution_mode == "waves":
+            if self.config.fail_policy == "isolate":
+                raise ValueError(
+                    "fail_policy='isolate' requires execution_mode='async': "
+                    "the barrier-wave walk has no per-job taint sweep"
+                )
             return self._execute_waves(nodes, slots, est, on_job, max_restarts, wall_scale)
         return self._execute_async(nodes, slots, est, on_job, max_restarts, wall_scale)
 
@@ -685,6 +874,21 @@ class Executor:
         def ready_at(node) -> float:
             return max((end_at[d] for d in node.deps), default=0.0)
 
+        def maybe_shrink(recov0: int) -> None:
+            # elastic shrink after a recovered shard loss (DESIGN.md §13):
+            # drop the latest-freeing slot so the remainder of the execute
+            # runs at W-1 — the cluster just demonstrated a slot is flaky
+            nonlocal n_slots
+            if (
+                self.config.shrink_on_shard_loss
+                and self.ft_counters["shard_recoveries"] > recov0
+                and len(slot_free) > 1
+            ):
+                slot_free.pop(max(range(len(slot_free)), key=slot_free.__getitem__))
+                n_slots = len(slot_free)
+
+        isolate = self.config.fail_policy == "isolate"
+
         while pending:
             ready = [n for n in pending.values() if all(d in end_at for d in n.deps)]
             if not ready:
@@ -698,9 +902,58 @@ class Executor:
                 node = min(ready, key=lambda n: (ready_at(n), -est[n.idx], n.idx))
                 start = ready_at(node)
             state = RetryState()
-            outs, stats, attempts, wall = self._attempt(
-                node.job, on_job, state, max_restarts, wall_scale, 0
-            )
+            recov0 = self.ft_counters["shard_recoveries"]
+            t0 = time.perf_counter()
+            try:
+                outs, stats, attempts, wall = self._attempt(
+                    node.job, on_job, state, max_restarts, wall_scale, 0
+                )
+            except (TransientFault, CapacityFault, PermanentFault) as exc:
+                if not isolate:
+                    raise
+                # blast-radius isolation (DESIGN.md §13): record the failure,
+                # sweep its taint closure off the ready queue, and keep
+                # every other job running.  A blamed PermanentFault narrows
+                # the failed job first — only the units touching a blamed
+                # relation fail, the innocent remainder of a fused
+                # multi-tenant job is re-dispatched.  The failed record is
+                # priced for the slot time it actually consumed; tainted
+                # jobs are zero-wall markers (start == end at the failure),
+                # so the event-replay identities hold unchanged.
+                wall = time.perf_counter() - t0
+                end = start + wall
+                attempts = max(1, state.fault_retries + state.overflow_retries)
+                blamed = frozenset(getattr(exc, "rels", ()) or ())
+                kept = dropped = None
+                if blamed:
+                    kept, dropped = narrow_job(node.job, blamed)
+                if dropped is None:  # no blame (or blame touches nothing):
+                    kept, dropped = None, node.job  # the whole job failed
+                rec = JobRecord(dropped, node.round_idx, wall, {}, attempts,
+                                "none", start, end, s, outcome="failed")
+                report.records.append(rec)
+                self.schedule.append(
+                    ScheduledJob(node.idx, node.round_idx, s, start, end,
+                                 est[node.idx], 0)
+                )
+                slot_free[s] = end
+                if kept is None:
+                    end_at[node.idx] = end
+                    del pending[node.idx]
+                else:
+                    pending[node.idx] = replace(
+                        node, job=kept, reads=job_reads(kept),
+                        writes=job_writes(kept),
+                    )
+                # blamed inputs seed the sweep alongside the failed writes:
+                # a downstream unit guarding directly on a poisoned base
+                # relation must drop even though that relation has a clean
+                # producer (none — it's a base input)
+                self._taint_sweep(
+                    pending, job_writes(dropped) | blamed, end, report, end_at
+                )
+                maybe_shrink(recov0)
+                continue
             end = start + wall
             deadline = speculation_deadline(
                 est[node.idx],
@@ -721,7 +974,7 @@ class Executor:
                             )
                             clone = (outs2, stats2, attempts2, wall2, s2, t2)
                             self.ft_counters["speculative"] += 1
-                        except (TransientFault, CapacityFault):
+                        except (TransientFault, CapacityFault, PermanentFault):
                             # speculation is an optimization: a clone that
                             # dies (injected faults / exhausted shared
                             # retry budget) must not abort a plan whose
@@ -746,11 +999,13 @@ class Executor:
                     node.job, node.round_idx, win_end - start, ints, attempts,
                     backend, start, win_end, s,
                     attempt=0, cancelled=clone_wins,
+                    outcome="cancelled" if clone_wins else "ok",
                 )
                 rec2 = JobRecord(
                     node.job, node.round_idx, win_end - t2, ints2, attempts2,
                     backend2, t2, win_end, s2,
                     attempt=1, speculative=True, cancelled=not clone_wins,
+                    outcome="ok" if clone_wins else "cancelled",
                 )
                 slot_free[s2] = rec2.end
                 recs = [rec, rec2]
@@ -768,6 +1023,7 @@ class Executor:
             slot_free[s] = rec.end
             end_at[node.idx] = win_end
             del pending[node.idx]
+            maybe_shrink(recov0)
         return self.env, report
 
     def _execute_waves(

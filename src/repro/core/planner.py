@@ -232,6 +232,95 @@ def job_dag(plan: Plan, edges: str = "relations") -> tuple[JobNode, ...]:
     return tuple(nodes)
 
 
+def taint_closure(
+    nodes: Iterable[JobNode], tainted_rels: Iterable[str]
+) -> tuple[frozenset[int], frozenset[str]]:
+    """Blast radius of a failure, over read/write sets (DESIGN.md §13).
+
+    Given the relations a failed job should have written (``tainted_rels``)
+    and the not-yet-executed ``nodes``, returns the node indices that must
+    be skipped — every job transitively *reading* a tainted relation —
+    plus the closed tainted-relation set (the skipped jobs' writes join
+    it, which is what makes the closure transitive).  Jobs related to the
+    failure only by anti/output (WAR/WAW) dependences never read a
+    tainted relation and stay runnable; a healthy re-writer of a tainted
+    *name* does not clear the taint (conservative on cross-stratum name
+    reuse — readers of the re-written name are still skipped).
+    """
+    rels = set(tainted_rels)
+    tainted: set[int] = set()
+    pending = list(nodes)
+    changed = True
+    while changed:  # nodes arrive in plan order, so this converges fast
+        changed = False
+        for n in pending:
+            if n.idx not in tainted and n.reads & rels:
+                tainted.add(n.idx)
+                rels |= n.writes
+                changed = True
+    return frozenset(tainted), frozenset(rels)
+
+
+def narrow_job(job: Job, tainted: Iterable[str]) -> tuple[Job | None, Job | None]:
+    """Split a job against a tainted-relation set: ``(kept, dropped)``.
+
+    Fused multi-tenant jobs are shared failure domains — one MSJ job
+    carries many tenants' equations, one EVAL job many tenants' Boolean
+    evaluations.  Skipping the whole job over one poisoned input would
+    cliff the tick; instead the job is *narrowed* to the units that touch
+    no tainted relation (DESIGN.md §13):
+
+    * MSJ — equations whose guard or conditional relation is tainted are
+      dropped, as are fused queries whose guard or any atom relation is
+      tainted (a fused query's equations share its guard, so its
+      equations drop with it).
+    * EVAL — per-query units whose guard or any X_i input is tainted are
+      dropped.
+
+    Either side of the split is ``None`` when empty.  ``kept`` touching
+    no tainted relation is the invariant the executor's sweep relies on
+    for convergence; ``dropped`` carries exactly the poisoned units, so
+    recording it as a tainted :class:`~repro.core.executor.JobRecord`
+    makes ``Report.tainted_relations`` transitively exact.
+    """
+    rels = set(tainted)
+    if isinstance(job, MSJJob):
+        bad_sj = lambda sj: sj.guard.rel in rels or sj.cond_atom.rel in rels  # noqa: E731
+        bad_q = lambda q: q.guard.rel in rels or any(  # noqa: E731
+            a.rel in rels for a in q.atoms
+        )
+        keep_sjs = tuple(sj for sj in job.sjs if not bad_sj(sj))
+        keep_fused = tuple(q for q in job.fused if not bad_q(q))
+        drop_sjs = tuple(sj for sj in job.sjs if bad_sj(sj))
+        drop_fused = tuple(q for q in job.fused if bad_q(q))
+        # a fused query routes back on its equations' bitmaps: if any of
+        # them dropped, the query cannot evaluate in-job
+        fused_alive = []
+        for q in keep_fused:
+            eqs = {(q.guard, a) for a in q.atoms}
+            if all((sj.guard, sj.cond_atom) not in eqs or not bad_sj(sj) for sj in job.sjs):
+                fused_alive.append(q)
+            else:
+                drop_fused = drop_fused + (q,)
+        keep_fused = tuple(fused_alive)
+        kept = MSJJob(keep_sjs, keep_fused) if keep_sjs else None
+        dropped = (
+            MSJJob(drop_sjs, drop_fused) if (drop_sjs or drop_fused) else None
+        )
+        return kept, dropped
+    pairs = list(zip(job.queries, job.atom_inputs))
+    bad = lambda q, xin: q.guard.rel in rels or any(x in rels for x in xin)  # noqa: E731
+    keep = [(q, xin) for q, xin in pairs if not bad(q, xin)]
+    drop = [(q, xin) for q, xin in pairs if bad(q, xin)]
+    kept = (
+        EvalJob(tuple(q for q, _ in keep), tuple(x for _, x in keep)) if keep else None
+    )
+    dropped = (
+        EvalJob(tuple(q for q, _ in drop), tuple(x for _, x in drop)) if drop else None
+    )
+    return kept, dropped
+
+
 def estimate_job_costs(
     nodes: Sequence[JobNode],
     stats: "Stats",

@@ -148,6 +148,11 @@ class Relation:
         order = jnp.argsort(~valid, axis=1, stable=True)[:, :cap]
         new_data = jnp.take_along_axis(data, order[:, :, None], axis=1)
         new_valid = jnp.take_along_axis(valid, order, axis=1)
+        # Zero the tail beyond the packed rows: invalid slots otherwise carry
+        # whatever the producing job left there, which would make otherwise
+        # identical outputs differ bit-wise across job compositions
+        # (failure-narrowed jobs must reproduce the fault-free arrays).
+        new_data = jnp.where(new_valid[:, :, None], new_data, 0)
         return Relation(self.name, new_data, new_valid)
 
 

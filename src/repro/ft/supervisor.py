@@ -30,10 +30,12 @@ from dataclasses import dataclass, replace
 
 import numpy as np
 
-from repro.core.executor import (  # noqa: F401  (CapacityFault re-exported)
+from repro.core.executor import (  # noqa: F401  (fault taxonomy re-exported)
     CapacityFault,
     Executor,
+    PermanentFault,
     Report,
+    ShardLoss,
     TransientFault,
 )
 
@@ -50,6 +52,11 @@ class FTConfig:
     speculative: bool = True
     max_restarts: int = 5
     seed: int = 0
+    #: probability, per job attempt, that one shard of one base relation
+    #: the job reads is lost (the injector damages ``executor.env`` via
+    #: ``ft/elastic.lose_shard`` *then* raises ShardLoss, so the
+    #: executor's lineage-recovery path is genuinely exercised).
+    shard_loss_rate: float = 0.0
 
 
 @dataclass
@@ -58,6 +65,8 @@ class FTStats:
     retries: int = 0
     speculative_redispatches: int = 0
     capacity_retries: int = 0
+    shard_losses: int = 0
+    shard_recoveries: int = 0
 
 
 class Supervisor:
@@ -86,9 +95,29 @@ class Supervisor:
         """The executor's ``on_job`` hook: one biased coin per attempt."""
         if attempt > 1:
             self.stats.retries += 1
+        if self.rng.random() < self.cfg.shard_loss_rate:
+            self._lose_shard(job)
         if self.rng.random() < self.cfg.fault_rate:
             self.stats.faults_injected += 1
             raise SimulatedFault(f"injected fault on {job}")
+
+    def _lose_shard(self, job) -> None:
+        """Damage one recoverable input partition *in the executor's live
+        environment*, then raise :class:`ShardLoss` — losses that only
+        raise without damaging would let a broken recovery path pass."""
+        from repro.core.planner import job_reads
+        from repro.ft.elastic import lose_shard
+
+        candidates = sorted(job_reads(job) & self.ex.lineage.keys())
+        candidates = [r for r in candidates if r in self.ex.env]
+        if not candidates:
+            return  # job reads no recoverable base relation; nothing to lose
+        rel_name = candidates[int(self.rng.integers(len(candidates)))]
+        rel = self.ex.env[rel_name]
+        shard = int(self.rng.integers(rel.P))
+        self.ex.env[rel_name] = lose_shard(rel, shard)
+        self.stats.shard_losses += 1
+        raise ShardLoss(rel_name, shard)
 
     def _estimate(self, plan) -> dict[int, float] | None:
         """Modeled per-job costs for LPT ordering and speculation
@@ -119,8 +148,13 @@ class Supervisor:
             )
         finally:
             self.ex.config = base
-        self.stats.capacity_retries += self.ex.ft_counters["overflow_retries"]
-        self.stats.speculative_redispatches += self.ex.ft_counters["speculative"]
+            # accumulate counters even when execute raises (exhausted
+            # restarts under fail_policy="abort", a CapacityFault past the
+            # ladder): the retries that led up to the failure happened and
+            # must be accounted
+            self.stats.capacity_retries += self.ex.ft_counters["overflow_retries"]
+            self.stats.speculative_redispatches += self.ex.ft_counters["speculative"]
+            self.stats.shard_recoveries += self.ex.ft_counters["shard_recoveries"]
         return env, report
 
 
@@ -140,7 +174,7 @@ def run_train_loop(
 
     Returns (state, history).  If a checkpoint exists in ``ckpt_dir`` the
     loop resumes after its step — calling this twice around a simulated
-    crash exercises the restart path end to end (tests/test_ft.py).
+    crash exercises the restart path end to end (tests/test_executor_ft.py).
     """
     import jax
 

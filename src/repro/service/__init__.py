@@ -12,7 +12,9 @@ probe-backend dispatch — DESIGN.md §11) → per-request output scatter.
 from repro.service.batcher import (
     AdmissionBatcher,
     FusedBatch,
+    QuarantinedError,
     QueryRequest,
+    RetryPolicy,
     SGFService,
     fuse_requests,
 )
@@ -27,7 +29,9 @@ __all__ = [
     "CatalogError",
     "FusedBatch",
     "PlanCache",
+    "QuarantinedError",
     "QueryRequest",
+    "RetryPolicy",
     "ResultCache",
     "SGFService",
     "SlotScheduler",

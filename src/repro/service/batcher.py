@@ -56,12 +56,24 @@ from repro.service.scheduler import SlotScheduler
 @dataclass
 class QueryRequest:
     """One tenant's submission: an ordered batch of BSGF queries (an SGF
-    body); outputs are filled in under the tenant's own names."""
+    body); outputs are filled in under the tenant's own names.
+
+    Failure-domain fields (DESIGN.md §13): a request whose outputs land
+    in a tick's taint closure is *failed for that tick only* — ``failures``
+    counts those events, ``retry_after`` is the absolute tick number at
+    which the service re-admits it (exponential backoff), and ``failed``
+    marks terminal abandonment (its tenant entered quarantine).
+    """
 
     rid: int
     queries: tuple[BSGF, ...]
     outputs: dict[str, Relation] = field(default_factory=dict)
     done: bool = False
+    tenant: int = 0
+    failures: int = 0
+    retry_after: int = -1  # absolute tick eligible for re-admission; -1 = n/a
+    failed: bool = False  # terminal: budget exhausted, tenant quarantined
+    error: str = ""  # last failure description (empty while clean)
 
 
 @dataclass(frozen=True)
@@ -108,15 +120,67 @@ def fuse_requests(requests: Sequence[QueryRequest]) -> FusedBatch:
     return FusedBatch(tuple(requests), tuple(queries), out_map)
 
 
+class QuarantinedError(RuntimeError):
+    """Submission rejected: the tenant is quarantined after exhausting its
+    retry budget (DESIGN.md §13).  Carries the re-admission tick."""
+
+    def __init__(self, tenant: int, until: int):
+        super().__init__(f"tenant {tenant} quarantined until tick {until}")
+        self.tenant = tenant
+        self.until = until
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Per-request retry budget + tenant quarantine policy (DESIGN.md §13).
+
+    A request failed by a tick (its outputs taint-reachable) is retried
+    with exponential backoff: re-admission at
+    ``tick + backoff_base * 2**(failures-1)`` ticks.  After
+    ``max_failures`` failures the request is abandoned and its tenant
+    quarantined for ``quarantine_ticks * 2**(strikes-1)`` ticks; on
+    re-admission the tenant's strike count decays by ``strike_decay``
+    (a long-clean tenant earns its way back to short quarantines).
+    """
+
+    max_failures: int = 3
+    backoff_base: int = 1
+    quarantine_ticks: int = 8
+    strike_decay: float = 0.5
+
+    def backoff(self, failures: int) -> int:
+        return self.backoff_base * 2 ** max(failures - 1, 0)
+
+    def quarantine(self, strikes: float) -> int:
+        return self.quarantine_ticks * 2 ** max(int(strikes) - 1, 0)
+
+
 class AdmissionBatcher:
-    """FIFO request queue drained ``max_admit`` requests per tick."""
+    """FIFO request queue drained ``max_admit`` requests per tick.
+
+    ``submit`` rejects a rid already queued (double-submission of the same
+    request object would double-scatter its outputs); ``requeue`` is the
+    idempotent re-admission path — a failed tick putting its batch back
+    and a backoff expiry re-admitting the same request must not collide
+    into a duplicate (the satellite-6 regression)."""
 
     def __init__(self, *, max_admit: int = 16):
         self.max_admit = max_admit
         self.queue: list[QueryRequest] = []
 
     def submit(self, req: QueryRequest) -> None:
+        if any(r.rid == req.rid for r in self.queue):
+            raise ValueError(f"request {req.rid} is already queued")
         self.queue.append(req)
+
+    def requeue(self, reqs: Sequence[QueryRequest], *, front: bool = False) -> None:
+        """Re-admit ``reqs``, silently skipping any already queued."""
+        queued = {r.rid for r in self.queue}
+        fresh = [r for r in reqs if r.rid not in queued]
+        if front:
+            self.queue[:0] = fresh
+        else:
+            self.queue.extend(fresh)
 
     def drain(self) -> list[QueryRequest]:
         admitted, self.queue = self.queue[: self.max_admit], self.queue[self.max_admit :]
@@ -153,6 +217,7 @@ class SGFService:
         model: str = "gumbo",
         cache_capacity: int = 128,
         result_cache_capacity: int = 256,
+        retry_policy: RetryPolicy | None = None,
     ):
         self.catalog = catalog
         self.comm = comm or SimComm(catalog.P)
@@ -165,6 +230,7 @@ class SGFService:
         #: cross-tick result/X_i materializations; capacity 0 disables
         #: (every tick then executes fully cold, the pre-cache behaviour)
         self.results = ResultCache(capacity=result_cache_capacity)
+        self.retry_policy = retry_policy or RetryPolicy()
         self.reports: list[Report] = []
         self.last_report: Report | None = None
         self.last_batch: FusedBatch | None = None
@@ -172,9 +238,26 @@ class SGFService:
         self.warm_served = 0
         self.cold_executed = 0
         self._next_rid = 0
+        #: failure-domain state (DESIGN.md §13)
+        self.tick_no = 0
+        self.delayed: list[QueryRequest] = []  # backing off, by retry_after
+        self.quarantine_until: dict[int, int] = {}  # tenant -> tick
+        self.strikes: dict[int, float] = {}  # tenant -> decayed strike count
+        self.failed_requests = 0  # per-tick request failures (transient)
+        self.retries_scheduled = 0
+        self.quarantines = 0
+        #: fault-injection seam for chaos tests/benchmarks: forwarded to the
+        #: executor's ready-queue walk each tick; injectors needing the live
+        #: environment (ShardLoss) reach it via ``self._executor.env``.
+        self.on_job = None
+        self.max_restarts = 0
+        self._executor: Executor | None = None
 
     # -- admission ---------------------------------------------------------
-    def submit(self, queries: Sequence[BSGF] | SGF | BSGF) -> QueryRequest:
+    def submit(
+        self, queries: Sequence[BSGF] | SGF | BSGF, *, tenant: int = 0
+    ) -> QueryRequest:
+        self._check_quarantine(tenant)
         if isinstance(queries, BSGF):
             queries = [queries]
         elif isinstance(queries, SGF):
@@ -187,10 +270,23 @@ class SGFService:
             # run; catch it here or the earlier duplicate silently loses
             raise ValueError(f"duplicate output names in request: {names}")
         self.catalog.validate(queries)
-        req = QueryRequest(self._next_rid, tuple(queries))
+        req = QueryRequest(self._next_rid, tuple(queries), tenant=tenant)
         self._next_rid += 1
         self.batcher.submit(req)
         return req
+
+    def _check_quarantine(self, tenant: int) -> None:
+        """Gate admission on quarantine; expiry is the *decayed
+        re-admission* point — the tenant's strike count halves (by
+        ``strike_decay``), so repeat offenders face exponentially longer
+        quarantines while a reformed tenant works back to the base."""
+        until = self.quarantine_until.get(tenant)
+        if until is None:
+            return
+        if self.tick_no < until:
+            raise QuarantinedError(tenant, until)
+        del self.quarantine_until[tenant]
+        self.strikes[tenant] = self.strikes.get(tenant, 0.0) * self.retry_policy.strike_decay
 
     # -- one service tick --------------------------------------------------
     def _plan_batch(self, queries: Sequence[BSGF], stats: Stats) -> Plan:
@@ -292,8 +388,15 @@ class SGFService:
         meta: dict,
         local_names: set[str],
         env: dict,
+        tainted: frozenset[str] = frozenset(),
     ) -> None:
-        """Populate the result cache from a completed cold execution."""
+        """Populate the result cache from a completed cold execution.
+
+        The *partial commit* rule (DESIGN.md §13): a materialization in the
+        tick's taint closure (``tainted`` — every relation a failed or
+        tainted job should have written) is withheld — its bytes are either
+        absent from ``env`` or stale, and a warm hit would replay the
+        poison into later ticks."""
         for rnd in plan.rounds:
             for job in rnd.jobs:
                 if not isinstance(job, MSJJob) or job.fused:
@@ -301,6 +404,9 @@ class SGFService:
                 for sj in job.sjs:
                     deps = self._xmat_deps(sj, local_names)
                     if deps is None:
+                        continue
+                    if sj.out in tainted or sj.out not in env:
+                        self.results.partial_skipped += 1
                         continue
                     self.results.put(
                         "xmat",
@@ -310,6 +416,9 @@ class SGFService:
                         deps,
                     )
         for q in cold:
+            if q.name in tainted or q.name not in env:
+                self.results.partial_skipped += 1
+                continue
             blob, deps = meta[q.name]
             self.results.put(
                 "query", blob, self.catalog.dep_epochs(deps), env[q.name], deps
@@ -379,10 +488,15 @@ class SGFService:
         for name, rel in injected.items():
             stats.register_output(name, float(rel.count()), rel.arity)
         # stats also feed the executor's per-job "auto" backend decision
+        # lineage = the catalog's durable relations only: warm/injected
+        # entries are cache-resident copies whose loss is indistinguishable
+        # from a cold miss, but base-relation shards re-materialize from
+        # the catalog rows bit-identically (DESIGN.md §13)
         ex = Executor(
             {**self.catalog.db(), **warm, **injected}, self.comm, self.config,
-            stats=stats,
+            stats=stats, lineage=self.catalog.db(),
         )
+        self._executor = ex  # chaos injectors reach the live env here
         sched = SlotScheduler(
             ex,
             slots=self.slots,
@@ -390,15 +504,65 @@ class SGFService:
             consts=self.consts,
             model=self.model,
         )
-        env, report = sched.execute(plan)
-        self._insert_results(plan, cold, meta, local_names, env)
+        try:
+            env, report = sched.execute(
+                plan, on_job=self.on_job, max_restarts=self.max_restarts
+            )
+        finally:
+            self._executor = None
+        tainted = report.tainted_relations()
+        self._insert_results(plan, cold, meta, local_names, env, tainted)
         return env, report
+
+    def _readmit_delayed(self) -> None:
+        """Move backing-off requests whose ``retry_after`` has arrived back
+        into the admission queue; a quarantined tenant's requests stay
+        delayed until the quarantine lifts (their clock is pushed out)."""
+        still: list[QueryRequest] = []
+        for req in self.delayed:
+            until = self.quarantine_until.get(req.tenant)
+            if until is not None and self.tick_no < until:
+                req.retry_after = max(req.retry_after, until)
+                still.append(req)
+            elif self.tick_no >= req.retry_after:
+                self.batcher.requeue([req])
+            else:
+                still.append(req)
+        self.delayed = still
+
+    def _fail_request(self, req: QueryRequest, poisoned: Sequence[str]) -> None:
+        """One request's outputs were taint-reachable this tick: charge its
+        retry budget; schedule backoff re-admission or — budget exhausted —
+        abandon it and quarantine its tenant (DESIGN.md §13)."""
+        pol = self.retry_policy
+        req.failures += 1
+        req.error = f"tick {self.tick_no}: tainted outputs {list(poisoned)}"
+        self.failed_requests += 1
+        if req.failures >= pol.max_failures:
+            strikes = self.strikes.get(req.tenant, 0.0) + 1.0
+            self.strikes[req.tenant] = strikes
+            self.quarantine_until[req.tenant] = self.tick_no + pol.quarantine(strikes)
+            self.quarantines += 1
+            req.failed = True
+            req.retry_after = -1
+        else:
+            req.retry_after = self.tick_no + pol.backoff(req.failures)
+            self.delayed.append(req)
+            self.retries_scheduled += 1
 
     def tick(self) -> list[QueryRequest]:
         """Drain the queue, run one fused job wave-set, scatter outputs.
 
-        Returns the completed requests (empty list if the queue was empty).
+        Commits *partially* (DESIGN.md §13): requests whose outputs fall in
+        the tick's taint closure are failed — charged against their retry
+        budget via :meth:`_fail_request` — while every other co-admitted
+        request is served and cached exactly as a clean tick would.
+
+        Returns the completed requests (empty list if the queue was empty;
+        failed requests are excluded — they carry ``failures``/``error``).
         """
+        self.tick_no += 1
+        self._readmit_delayed()
         admitted = self.batcher.drain()
         if not admitted:
             return []
@@ -408,24 +572,37 @@ class SGFService:
             env, report = self._run_batch(batch)
         except Exception:
             # don't lose co-admitted tenants to one failing tick (e.g. a
-            # CapacityFault after max retries): put the batch back in FIFO
-            # order so a caller can retry or re-admit after fixing capacity;
-            # last_tick must keep describing the last *successful* tick,
-            # like last_report/last_batch
+            # CapacityFault after max retries under fail_policy="abort"):
+            # put the batch back in FIFO order so a caller can retry or
+            # re-admit after fixing capacity; last_tick must keep
+            # describing the last *successful* tick, like
+            # last_report/last_batch.  requeue (not a raw splice) so a
+            # request that also sits in the delayed queue can't collide
+            # into a duplicate
             self.last_tick = prev_tick
-            self.batcher.queue[:0] = admitted
+            self.batcher.requeue(admitted, front=True)
             raise
+        poisoned = report.tainted_relations() & {q.name for q in batch.queries}
+        completed: list[QueryRequest] = []
         for req in batch.requests:
+            mine = {batch.out_map[(req.rid, q.name)] for q in req.queries}
+            hit = sorted(mine & poisoned)
+            if hit:
+                self._fail_request(req, hit)
+                continue
             for q in req.queries:
                 cname = batch.out_map[(req.rid, q.name)]
                 req.outputs[q.name] = env[cname].rename(q.name)
             req.done = True
+            completed.append(req)
+        self.last_tick["poisoned_queries"] = len(poisoned)
+        self.last_tick["failed_requests"] = len(batch.requests) - len(completed)
         self.warm_served += self.last_tick.get("warm_queries", 0)
         self.cold_executed += self.last_tick.get("cold_queries", 0)
         self.reports.append(report)
         self.last_report = report
         self.last_batch = batch
-        return admitted
+        return completed
 
     def run(self) -> None:
         """Tick until the queue is empty."""
@@ -451,6 +628,11 @@ class SGFService:
         c["warm_queries"] = self.warm_served
         c["cold_queries"] = self.cold_executed
         c["ticks"] = len(self.reports)
+        c["failed_requests"] = self.failed_requests
+        c["retries_scheduled"] = self.retries_scheduled
+        c["quarantines"] = self.quarantines
+        c["delayed"] = len(self.delayed)
+        c["quarantined_tenants"] = len(self.quarantine_until)
         c["jobs"] = sum(r.n_jobs for r in self.reports)
         c["bytes_shuffled"] = sum(r.bytes_shuffled() for r in self.reports)
         c["net_time"] = sum(self._net_time(r) for r in self.reports)

@@ -67,6 +67,11 @@ class ResultCache:
         self.x_hits = 0
         self.x_misses = 0
         self.stale_evicted = 0
+        #: insertions withheld by the service's partial commit: a
+        #: materialization whose producing job failed or was tainted
+        #: (DESIGN.md §13) must never enter the cache — a later warm hit
+        #: would serve a poisoned result as if it were clean.
+        self.partial_skipped = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -139,5 +144,6 @@ class ResultCache:
             "x_hits": self.x_hits,
             "x_misses": self.x_misses,
             "stale_evicted": self.stale_evicted,
+            "partial_skipped": self.partial_skipped,
             "size": len(self._entries),
         }

@@ -152,6 +152,36 @@ def test_overflow_exhausts_retries_raises_capacity_fault():
         ex.execute(plan_greedy(qs, stats_of_db(db)))
 
 
+def test_supervisor_accumulates_stats_when_execute_raises():
+    """Regression: FTStats accumulation lives in a ``finally`` — the
+    capacity retries that led up to an aborting CapacityFault must still
+    be accounted (they happened), and the policy-extended config must be
+    restored on the raise path."""
+    from repro.core.executor import CapacityFault
+    from repro.core.planner import MSJJob
+
+    qs = Q.make_queries("A3")
+    db = db_from_dict(Q.gen_db(qs, n_guard=64, n_cond=64), P=2)
+
+    class AlwaysOverflow(Executor):
+        def run_job(self, job, *, cap_override=None, cap_slack=None):
+            outs, stats = super().run_job(
+                job, cap_override=cap_override, cap_slack=cap_slack
+            )
+            if isinstance(job, MSJJob):
+                stats = dict(stats)
+                stats["overflow"] = 1
+            return outs, stats
+
+    base = ExecutorConfig(cap_slack=0.5, max_retries=2)
+    ex = AlwaysOverflow(db, SimComm(2), base)
+    sup = supervisor.Supervisor(ex, supervisor.FTConfig(fault_rate=0.0, seed=0))
+    with pytest.raises(CapacityFault, match="overflow"):
+        sup.execute(plan_greedy(qs, stats_of_db(db)))
+    assert sup.stats.capacity_retries >= base.max_retries
+    assert ex.config is base  # caller's config restored despite the raise
+
+
 def test_elastic_repartition_preserves_results(rng):
     qs = Q.make_queries("A1")
     db_np = Q.gen_db(qs, n_guard=200, n_cond=200)

@@ -1,0 +1,518 @@
+"""Failure-domain tests (DESIGN.md §13): blast-radius-isolated execution
+(``fail_policy="isolate"`` + taint closure), shard-loss lineage recovery,
+elastic repartition properties, and the service's partial commit with
+per-request backoff and tenant quarantine."""
+import numpy as np
+import pytest
+
+from repro.core import queries as Q, ref_engine
+from repro.core.costmodel import stats_of_db
+from repro.core.executor import (
+    Executor,
+    ExecutorConfig,
+    PermanentFault,
+    ShardLoss,
+    TransientFault,
+)
+from repro.core.planner import (
+    job_dag,
+    job_reads,
+    job_writes,
+    plan_par,
+    plan_sgf,
+    taint_closure,
+)
+from repro.core.relation import Relation, db_from_dict
+from repro.engine.comm import SimComm
+from repro.ft import elastic, supervisor
+from repro.service import (
+    QuarantinedError,
+    RetryPolicy,
+    SGFService,
+    catalog_from_numpy,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+def _want(qs, db_np):
+    setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}
+    out = {}
+    for q in qs:
+        out[q.name] = ref_engine.eval_bsgf(setdb, q)
+        setdb[q.name] = out[q.name]
+    return out
+
+
+def _check_replay_identities(report):
+    assert report.net_time_by_events(None) == report.net_time
+    assert report.net_time_by_events(1) == report.total_time
+
+
+# --------------------------------------------------------------------------
+# taint closure (planner level)
+# --------------------------------------------------------------------------
+
+
+def test_taint_closure_follows_reads_transitively():
+    """example5: Q1→Q2→Q3→Q5, Q4→Q5.  Failing the producer of Q2 must
+    taint everything downstream of Q2 but leave Q4's jobs untouched."""
+    sgf = Q.example5_sgf()
+    plan = plan_sgf(sgf, "sequnit")
+    nodes = job_dag(plan, edges="relations")
+    fail = next(n for n in nodes if "Q2" in n.writes)
+    rest = [n for n in nodes if n.idx > fail.idx]
+    tainted_idx, tainted_rels = taint_closure(rest, fail.writes)
+    tainted_writes = set().union(
+        *(n.writes for n in rest if n.idx in tainted_idx), frozenset()
+    )
+    assert {"Q3", "Q5"} <= tainted_writes | set(tainted_rels)
+    # Q4 reads only base relations: never tainted
+    for n in rest:
+        if "Q4" in n.writes and not (n.reads & ({"Q2", "Q3", "Q5"} | set())):
+            assert n.idx not in tainted_idx
+    assert "Q2" in tainted_rels  # the seed stays in the closure
+
+
+def test_taint_closure_empty_seed_taints_nothing():
+    plan = plan_sgf(Q.example5_sgf(), "sequnit")
+    nodes = job_dag(plan)
+    idx, rels = taint_closure(nodes, frozenset())
+    assert idx == frozenset() and rels == frozenset()
+
+
+# --------------------------------------------------------------------------
+# fail_policy="isolate" (executor level)
+# --------------------------------------------------------------------------
+
+
+def test_fail_policy_validated_and_waves_incompatible():
+    with pytest.raises(ValueError, match="abort, isolate"):
+        ExecutorConfig(fail_policy="bogus")
+    qs = Q.make_queries("A3")
+    db = db_from_dict(Q.gen_db(qs, n_guard=32, n_cond=32), P=2)
+    cfg = ExecutorConfig(fail_policy="isolate", execution_mode="waves")
+    with pytest.raises(ValueError, match="isolate"):
+        Executor(db, SimComm(2), cfg).execute(plan_par(qs))
+
+
+def test_isolate_permanent_fault_spares_independent_query():
+    """A4: Z1 and Z2 share nothing.  Poisoning Z1's pipeline must fail only
+    Z1 — Z2's output stays bit-identical to the fault-free run, the report
+    carries failed/tainted records, and the replay identities hold."""
+    qs = Q.make_queries("A4")
+    db_np = Q.gen_db(qs, n_guard=96, n_cond=96)
+    db = db_from_dict(db_np, P=2)
+    plan = plan_par(qs)
+    clean_env, _ = Executor(db, SimComm(2)).execute(plan)
+
+    def poison(job, attempt):
+        if "R" in job_reads(job):  # Z1's guard; Z2 guards on G
+            raise PermanentFault("poisoned pipeline")
+
+    ex = Executor(db, SimComm(2), ExecutorConfig(fail_policy="isolate"))
+    env, report = ex.execute(plan, on_job=poison)
+    assert len(report.failed_jobs) >= 1
+    assert all(r.outcome == "failed" for r in report.failed_jobs)
+    assert "Z1" in report.tainted_relations()
+    assert "Z2" not in report.tainted_relations()
+    assert "Z1" not in env  # nothing published for the failed pipeline
+    want = _want(qs, db_np)
+    assert env["Z2"].to_set() == want["Z2"]
+    np.testing.assert_array_equal(
+        np.asarray(env["Z2"].data), np.asarray(clean_env["Z2"].data)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(env["Z2"].valid), np.asarray(clean_env["Z2"].valid)
+    )
+    _check_replay_identities(report)
+
+
+def test_isolate_taints_downstream_not_siblings():
+    """C3 chain: failing Z1's producer taints Z2/Z3/Z5 but Z4 (the side
+    branch) completes correctly; tainted records are zero-wall."""
+    sgf = Q.make_sgf("C3")
+    db_np = Q.gen_db(sgf, n_guard=96, n_cond=96)
+    db = db_from_dict(db_np, P=2)
+    plan = plan_sgf(sgf, "sequnit")
+
+    def poison(job, attempt):
+        if "Z1" in job_writes(job):
+            raise PermanentFault("poisoned Z1")
+
+    ex = Executor(db, SimComm(2), ExecutorConfig(fail_policy="isolate"))
+    env, report = ex.execute(plan, on_job=poison)
+    tainted = report.tainted_relations()
+    assert {"Z1", "Z2", "Z3", "Z5"} <= tainted
+    assert "Z4" not in tainted
+    want = _want(list(sgf.queries), db_np)
+    assert env["Z4"].to_set() == want["Z4"]
+    for rec in report.tainted_jobs:
+        assert rec.wall == 0.0 and rec.start == rec.end and rec.slot == -1
+    _check_replay_identities(report)
+
+
+def test_isolate_transient_exhaustion_records_failure():
+    """A TransientFault that outlives max_restarts becomes a failed record
+    (not a raise) under isolate, with the attempts accounted."""
+    qs = Q.make_queries("A3")
+    db = db_from_dict(Q.gen_db(qs, n_guard=32, n_cond=32), P=2)
+
+    def always_fail(job, attempt):
+        raise TransientFault("flaky forever")
+
+    ex = Executor(db, SimComm(2), ExecutorConfig(fail_policy="isolate"))
+    env, report = ex.execute(plan_par(qs), on_job=always_fail, max_restarts=2)
+    assert report.failed_jobs and all(r.attempts >= 3 for r in report.failed_jobs)
+    assert not any(r.outcome == "ok" for r in report.records)
+    _check_replay_identities(report)
+
+
+def test_abort_policy_still_raises():
+    qs = Q.make_queries("A3")
+    db = db_from_dict(Q.gen_db(qs, n_guard=32, n_cond=32), P=2)
+
+    def poison(job, attempt):
+        raise PermanentFault("poison")
+
+    with pytest.raises(PermanentFault):
+        Executor(db, SimComm(2)).execute(plan_par(qs), on_job=poison)
+
+
+# --------------------------------------------------------------------------
+# shard loss + lineage recovery
+# --------------------------------------------------------------------------
+
+
+def test_lose_recover_shard_roundtrip_bit_identical():
+    rng = np.random.default_rng(0)
+    rel = Relation.from_numpy("R", rng.integers(0, 50, (37, 3)), P=4)
+    damaged = elastic.lose_shard(rel, 2)
+    assert damaged.count() < rel.count()
+    recovered = elastic.recover_shard(damaged, rel, 2)
+    np.testing.assert_array_equal(np.asarray(recovered.data), np.asarray(rel.data))
+    np.testing.assert_array_equal(np.asarray(recovered.valid), np.asarray(rel.valid))
+
+
+def test_recover_shard_from_differently_sharded_lineage():
+    """The elastic case: lineage resident at a different P still restores
+    the lost rows (content equality, not slot layout)."""
+    rng = np.random.default_rng(1)
+    rows = rng.integers(0, 50, (40, 2))
+    rel4 = Relation.from_numpy("R", rows, P=4, cap=32)
+    src2 = Relation.from_numpy("R", rows, P=2)
+    damaged = elastic.lose_shard(rel4, 1)
+    recovered = elastic.recover_shard(damaged, src2, 1)
+    assert recovered.to_set() == rel4.to_set()
+
+
+def test_recover_shard_validates_arity_and_range():
+    rel = Relation.from_numpy("R", np.arange(8).reshape(4, 2), P=2)
+    bad = Relation.from_numpy("R", np.arange(9).reshape(3, 3), P=2)
+    with pytest.raises(ValueError, match="arity"):
+        elastic.recover_shard(rel, bad, 0)
+    with pytest.raises(ValueError, match="out of range"):
+        elastic.lose_shard(rel, 5)
+
+
+def test_executor_recovers_shard_loss_bit_identical():
+    """ShardLoss mid-execute: the executor re-materializes the partition
+    from lineage and the final outputs are bit-identical to a clean run."""
+    qs = Q.make_queries("A1")
+    db_np = Q.gen_db(qs, n_guard=128, n_cond=128)
+    db = db_from_dict(db_np, P=4)
+    plan = plan_par(qs)
+    clean_env, _ = Executor(db, SimComm(4)).execute(plan)
+
+    ex = Executor(db, SimComm(4))
+    fired = []
+
+    def injector(job, attempt):
+        if not fired and "R" in job_reads(job):
+            fired.append(True)
+            ex.env["R"] = elastic.lose_shard(ex.env["R"], 1)
+            raise ShardLoss("R", 1)
+
+    env, report = ex.execute(plan, on_job=injector, max_restarts=2)
+    assert fired and ex.ft_counters["shard_recoveries"] == 1
+    np.testing.assert_array_equal(
+        np.asarray(env["Z"].data), np.asarray(clean_env["Z"].data)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(env["Z"].valid), np.asarray(clean_env["Z"].valid)
+    )
+    _check_replay_identities(report)
+
+
+def test_shard_loss_without_lineage_escalates():
+    qs = Q.make_queries("A1")
+    db = db_from_dict(Q.gen_db(qs, n_guard=32, n_cond=32), P=2)
+    ex = Executor(db, SimComm(2), lineage={})  # nothing is recoverable
+
+    def injector(job, attempt):
+        if "R" in job_reads(job):
+            ex.env["R"] = elastic.lose_shard(ex.env["R"], 0)
+            raise ShardLoss("R", 0)
+
+    with pytest.raises(PermanentFault, match="no lineage"):
+        ex.execute(plan_par(qs), on_job=injector, max_restarts=3)
+
+
+def test_supervisor_injects_and_recovers_shard_loss():
+    qs = Q.make_queries("A1")
+    db_np = Q.gen_db(qs, n_guard=128, n_cond=128)
+    db = db_from_dict(db_np, P=4)
+    ex = Executor(db, SimComm(4))
+    sup = supervisor.Supervisor(
+        ex, supervisor.FTConfig(shard_loss_rate=0.5, max_restarts=6, seed=3)
+    )
+    env, report = sup.execute(plan_par(qs))
+    assert sup.stats.shard_losses > 0
+    assert sup.stats.shard_recoveries == sup.stats.shard_losses
+    assert env["Z"].to_set() == _want(qs, db_np)["Z"]
+
+
+def test_shrink_on_shard_loss_drops_a_slot():
+    """After a recovered loss with shrink_on_shard_loss, the remainder of
+    the execute runs on W-1 slots (later dispatches all land on slot 0)."""
+    qs = Q.make_queries("A4")  # two independent pipelines -> parallel jobs
+    db_np = Q.gen_db(qs, n_guard=64, n_cond=64)
+    db = db_from_dict(db_np, P=2)
+    cfg = ExecutorConfig(shrink_on_shard_loss=True)
+    ex = Executor(db, SimComm(2), cfg)
+    fired = []
+
+    def injector(job, attempt):
+        if not fired:
+            fired.append(True)
+            rel = sorted(job_reads(job) & ex.lineage.keys())[0]
+            ex.env[rel] = elastic.lose_shard(ex.env[rel], 0)
+            raise ShardLoss(rel, 0)
+
+    env, report = ex.execute(plan_par(qs), slots=2, on_job=injector, max_restarts=2)
+    assert ex.ft_counters["shard_recoveries"] == 1
+    first_end = min(s.end for s in ex.schedule)
+    later = [s for s in ex.schedule if s.start >= first_end]
+    assert later and {s.slot for s in later} == {0}
+    want = _want(qs, db_np)
+    assert env["Z1"].to_set() == want["Z1"] and env["Z2"].to_set() == want["Z2"]
+
+
+# --------------------------------------------------------------------------
+# elastic repartition properties (satellite: reshard_state / repartition)
+# --------------------------------------------------------------------------
+
+
+def test_reshard_state_roundtrip():
+    import jax
+    from jax.sharding import PartitionSpec
+
+    state = {"w": np.arange(8, dtype=np.float32), "b": np.ones((2, 2), np.float32)}
+    specs = {"w": PartitionSpec(), "b": PartitionSpec()}
+    mesh = jax.make_mesh((1,), ("data",))
+    out = elastic.reshard_state(state, specs, mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]), state["w"])
+    np.testing.assert_array_equal(np.asarray(out["b"]), state["b"])
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        p0=st.integers(min_value=1, max_value=5),
+        p1=st.integers(min_value=1, max_value=5),
+        partition=st.sampled_from(["block", "hash"]),
+        n=st.integers(min_value=0, max_value=40),
+        drop=st.integers(min_value=0, max_value=7),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_repartition_roundtrip_property(p0, p1, partition, n, drop, seed):
+        """Round-trip property: repartitioning (any P, block or hash, with
+        invalidated rows) preserves the valid-row multiset, hence any
+        query result computed from it."""
+        rng = np.random.default_rng(seed)
+        rows = rng.integers(0, 30, (n, 2)).astype(np.int32)
+        rel = Relation.from_numpy("R", rows, P=p0, partition=partition)
+        if drop and n:
+            # invalidate a few rows: repartition must not resurrect them
+            mask = np.asarray(rel.valid).copy()
+            flat = np.flatnonzero(mask.reshape(-1))[:drop]
+            mask.reshape(-1)[flat] = False
+            import jax.numpy as jnp
+
+            rel = rel.with_mask(jnp.asarray(mask))
+        want = rel.to_set()
+        hop = elastic.repartition_relation(rel, p1, partition=partition)
+        back = elastic.repartition_relation(hop, p0, partition=partition)
+        assert hop.P == p1 and back.P == p0
+        assert hop.to_set() == want and back.to_set() == want
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        p1=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_repartition_preserves_query_results_property(p1, seed):
+        qs = Q.make_queries("A3")
+        db_np = Q.gen_db(qs, n_guard=48, n_cond=48, seed=seed % 7)
+        want = _want(qs, db_np)["Z"]
+        db = elastic.repartition_db(db_from_dict(db_np, P=3), p1)
+        from repro.core.executor import execute_plan
+
+        env, _ = execute_plan(db, plan_par(qs), SimComm(p1))
+        assert env["Z"].to_set() == want
+
+
+def test_hypothesis_available_for_property_suite():
+    pytest.importorskip("hypothesis")
+    assert HAVE_HYPOTHESIS
+
+
+# --------------------------------------------------------------------------
+# service: partial commit, backoff, quarantine
+# --------------------------------------------------------------------------
+
+XYZW = ("x", "y", "z", "w")
+
+
+def _poison_workload(n_tenants=3, n=64):
+    """Tenant 1 guards on its own relation PG so its jobs are identifiable
+    (and poisonable) by read set; others guard on shared R."""
+    from repro.core.algebra import Atom, BSGF, all_of
+
+    tenants = []
+    for t in range(n_tenants):
+        guard = "PG" if t == 1 else "R"
+        conds = [Atom(r, v) for r, v in zip("STUV", XYZW)]
+        tenants.append([BSGF("Z", XYZW, Atom(guard, *XYZW), all_of(*conds))])
+    db_np = Q.gen_db([q for qs in tenants for q in qs], n_guard=n, n_cond=n)
+    return tenants, db_np
+
+
+def _poison_hook(svc):
+    """Blamed poison: jobs touching tenant 1's guard PG fail *those units*
+    — the executor narrows fused multi-tenant jobs around the blame, so
+    co-batched tenants keep their outputs (DESIGN.md §13)."""
+
+    def hook(job, attempt):
+        if "PG" in job_reads(job):
+            raise PermanentFault("poison tenant", rels={"PG"})
+
+    return hook
+
+
+def _mk_service(db_np, **kw):
+    kw.setdefault("config", ExecutorConfig(fail_policy="isolate"))
+    kw.setdefault("result_cache_capacity", 0)
+    kw.setdefault(
+        "retry_policy",
+        RetryPolicy(max_failures=2, backoff_base=1, quarantine_ticks=3),
+    )
+    return SGFService(catalog_from_numpy(db_np, P=2), comm=SimComm(2), **kw)
+
+
+def test_service_partial_commit_serves_clean_tenants():
+    tenants, db_np = _poison_workload()
+    svc = _mk_service(db_np)
+    svc.on_job = _poison_hook(svc)
+    reqs = [svc.submit(qs, tenant=t) for t, qs in enumerate(tenants)]
+    done = svc.tick()
+    assert reqs[0] in done and reqs[2] in done and reqs[1] not in done
+    want = _want(tenants[0], db_np)
+    assert reqs[0].outputs["Z"].to_set() == want["Z"]
+    assert reqs[1].failures == 1 and not reqs[1].done and not reqs[1].failed
+    assert reqs[1].retry_after == svc.tick_no + 1  # backoff_base * 2**0
+    assert svc.last_tick["failed_requests"] == 1
+    assert svc.last_tick["poisoned_queries"] >= 1
+
+
+def test_service_backoff_then_quarantine_then_decayed_readmission():
+    tenants, db_np = _poison_workload()
+    svc = _mk_service(db_np)
+    svc.on_job = _poison_hook(svc)
+    bad = svc.submit(tenants[1], tenant=1)
+    svc.tick()  # failure 1 -> delayed with backoff
+    assert bad in svc.delayed and svc.retries_scheduled == 1
+    svc.tick()  # re-admitted and failed again -> budget exhausted
+    assert bad.failed and bad.failures == 2
+    assert svc.quarantines == 1 and 1 in svc.quarantine_until
+    until = svc.quarantine_until[1]
+    with pytest.raises(QuarantinedError):
+        svc.submit(tenants[1], tenant=1)
+    # other tenants are untouched by the quarantine
+    ok = svc.submit(tenants[0], tenant=0)
+    assert svc.tick() == [ok]
+    while svc.tick_no < until:
+        svc.tick()
+    # decayed re-admission: the strike count halves and submission works
+    svc.on_job = None  # tenant fixed its query
+    strikes_before = svc.strikes[1]
+    req = svc.submit(tenants[1], tenant=1)
+    assert svc.strikes[1] == pytest.approx(strikes_before * 0.5)
+    assert 1 not in svc.quarantine_until
+    svc.tick()
+    assert req.done
+    assert req.outputs["Z"].to_set() == _want(tenants[1], db_np)["Z"]
+
+
+def test_requeued_request_is_not_its_own_duplicate():
+    """Satellite 6: the failed-tick requeue path and delayed re-admission
+    must both be idempotent — a request resubmitted after backoff or
+    quarantine expiry is not a duplicate of itself."""
+    from repro.service import AdmissionBatcher, QueryRequest
+
+    b = AdmissionBatcher()
+    r = QueryRequest(7, ())
+    b.submit(r)
+    with pytest.raises(ValueError, match="already queued"):
+        b.submit(r)
+    b.requeue([r])  # idempotent: silently skipped
+    assert len(b) == 1
+    b.requeue([r], front=True)
+    assert len(b) == 1
+
+    # end to end: fail -> backoff -> re-admit -> complete, no duplicate
+    tenants, db_np = _poison_workload()
+    svc = _mk_service(
+        db_np, retry_policy=RetryPolicy(max_failures=3, backoff_base=1)
+    )
+    svc.on_job = _poison_hook(svc)
+    bad = svc.submit(tenants[1], tenant=1)
+    svc.tick()
+    assert bad in svc.delayed
+    svc.on_job = None
+    svc.tick()  # re-admission tick: drains the requeued request cleanly
+    assert bad.done and bad not in svc.delayed
+    assert bad.outputs["Z"].to_set() == _want(tenants[1], db_np)["Z"]
+
+
+def test_service_poisoned_results_never_cached():
+    tenants, db_np = _poison_workload()
+    svc = _mk_service(db_np, result_cache_capacity=64)
+    svc.on_job = _poison_hook(svc)
+    svc.submit(tenants[1], tenant=1)
+    svc.tick()
+    assert svc.results.partial_skipped >= 1
+    # a later identical submission must re-execute cold, not hit warm
+    assert svc.results.query_hits == 0
+
+
+def test_service_tick_requeue_after_abort_still_works(monkeypatch):
+    """fail_policy='abort' keeps the legacy whole-tick requeue semantics,
+    now routed through the idempotent requeue."""
+    tenants, db_np = _poison_workload()
+    svc = _mk_service(db_np, config=ExecutorConfig())  # abort policy
+    svc.on_job = _poison_hook(svc)
+    svc.submit(tenants[0], tenant=0)
+    svc.submit(tenants[1], tenant=1)
+    with pytest.raises(PermanentFault):
+        svc.tick()
+    assert len(svc.batcher) == 2  # both back in FIFO order
+    svc.on_job = None
+    done = svc.tick()
+    assert len(done) == 2 and all(r.done for r in done)

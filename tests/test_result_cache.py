@@ -128,7 +128,7 @@ def test_fully_repeated_tick_runs_zero_jobs_bit_identical():
     svc.tick()
     assert svc.last_tick == {
         "canonical_queries": 2, "warm_queries": 2, "cold_queries": 0,
-        "x_injected": 0,
+        "x_injected": 0, "poisoned_queries": 0, "failed_requests": 0,
     }
     # the warm path never reached the scheduler: 0 jobs, 0 bytes shuffled
     assert svc.last_report.n_jobs == 0
