@@ -1,0 +1,195 @@
+"""Bench regression gates: current BENCH_*.json vs a committed baseline.
+
+The perf trajectory files (``BENCH_msj.json``, ``BENCH_serve.json``) are
+committed at quick/CI sizes, so a CI run produces directly comparable
+numbers.  The gate separates two kinds of metric:
+
+* **deterministic** — bytes shuffled, job counts, input rows, cache hit
+  counts, acceptance booleans.  These are functions of the plan and the
+  seeded data, not of machine speed: any drift is a real behaviour change
+  and fails the gate *exactly*.
+* **timing** — ``net_s``/``total_s``/kernel ms.  CI machines are noisy;
+  a current value fails only beyond ``1 + time_tol`` of the baseline
+  (default 75% headroom — the gate exists to catch order-of-magnitude
+  regressions like an accidentally-disabled cache or a de-jitted kernel,
+  not 10% jitter).  Speedup ratios (straggler async-vs-waves,
+  DAG/speculation) are self-normalizing and must stay >= 1 whenever the
+  baseline achieved >= 1.
+
+Usage (CI copies the committed files aside before benchmarks overwrite
+them)::
+
+    python -m benchmarks.regression --baseline BASELINE_msj.json \\
+        --current BENCH_msj.json
+
+or through the bench driver (baselines are loaded before the output file
+is truncated, so gating against the committed file in place is safe)::
+
+    python -m benchmarks.run --quick --only msj --json BENCH_msj.json \\
+        --baseline BENCH_msj.json
+
+Exit status 1 on any regression; every problem is printed, one per line,
+prefixed ``REGRESSION:``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: timing headroom: current <= baseline * (1 + TIME_TOL)
+TIME_TOL = 0.75
+
+#: headroom for the probe-kernel micro-bench rows: a ~10ms measurement
+#: jitters 2x+ with scheduler/cache state, so these rows only gate on
+#: order-of-magnitude regressions (a de-jitted or interpret-mode kernel
+#: is 10-100x, comfortably outside this band)
+KERNEL_TIME_TOL = 3.0
+
+_MSJ_EXACT = ("bytes_shuffled", "input_rows", "jobs", "forward_cap")
+_MSJ_TIMED = ("net_s", "total_s")
+_SRV_EXACT = ("jobs", "msj_jobs", "bytes_shuffled", "warm_queries", "deduped")
+_RPT_EXACT = ("jobs", "bytes_shuffled", "warm_queries", "cold_queries",
+              "x_hits", "plan_hits")
+_SRV_TIMED = ("net_s", "total_s")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _check_rows(problems, label, base_rows, cur_rows, keyf, exact, timed,
+                time_tol):
+    cur = {keyf(r): r for r in cur_rows}
+    for b in base_rows:
+        k = keyf(b)
+        c = cur.get(k)
+        if c is None:
+            problems.append(f"{label}: row {k!r} missing from current run")
+            continue
+        for f in exact:
+            if f in b and c.get(f) != b[f]:
+                problems.append(
+                    f"{label} {k!r}: {f} changed {b[f]} -> {c.get(f)} "
+                    "(deterministic metric; exact match required)"
+                )
+        for f in timed:
+            if f in b and b[f] > 0 and c.get(f, 0.0) > b[f] * (1 + time_tol):
+                problems.append(
+                    f"{label} {k!r}: {f} regressed {b[f]:.4f}s -> "
+                    f"{c.get(f):.4f}s (> {1 + time_tol:.2f}x baseline)"
+                )
+
+
+def _check_bools(problems, path, base, cur):
+    """Every acceptance boolean the baseline achieved must hold; every
+    speedup ratio >= 1 in the baseline must stay >= 1."""
+    if isinstance(base, dict):
+        if not isinstance(cur, dict):
+            problems.append(f"{path}: missing from current run")
+            return
+        for k, v in base.items():
+            _check_bools(problems, f"{path}.{k}", v, cur.get(k))
+        return
+    if isinstance(base, bool) and base and cur is not True:
+        problems.append(f"{path}: acceptance flag lost (True -> {cur!r})")
+    if (
+        path.rsplit(".", 1)[-1].startswith("speedup")
+        and isinstance(base, (int, float))
+        and not isinstance(base, bool)
+        and base >= 1.0
+        and not (isinstance(cur, (int, float)) and cur >= 1.0)
+    ):
+        problems.append(f"{path}: speedup lost ({base} -> {cur!r})")
+
+
+def gate_msj(current: dict, baseline: dict, *, time_tol: float = TIME_TOL
+             ) -> list[str]:
+    """Problems in a current MSJ-roofline run vs its baseline ([] = pass)."""
+    problems: list[str] = []
+    if current.get("n_guard") != baseline.get("n_guard"):
+        return [
+            f"msj: incomparable sizes (n_guard {current.get('n_guard')} vs "
+            f"baseline {baseline.get('n_guard')}); run at the baseline's size"
+        ]
+    _check_rows(
+        problems, "msj_roofline",
+        baseline.get("msj_roofline", []), current.get("msj_roofline", []),
+        lambda r: r["variant"], _MSJ_EXACT, _MSJ_TIMED, time_tol,
+    )
+    _check_rows(
+        problems, "probe_kernel",
+        baseline.get("probe_kernel", []), current.get("probe_kernel", []),
+        lambda r: (r["backend"], r["n"], r["kw"]), (), ("ms",),
+        max(time_tol, KERNEL_TIME_TOL),
+    )
+    return problems
+
+
+def gate_serve(current: dict, baseline: dict, *, time_tol: float = TIME_TOL
+               ) -> list[str]:
+    """Problems in a current service-ladder run vs its baseline ([] = pass)."""
+    problems: list[str] = []
+    if current.get("n_guard") != baseline.get("n_guard"):
+        return [
+            f"serve: incomparable sizes (n_guard {current.get('n_guard')} vs "
+            f"baseline {baseline.get('n_guard')}); run at the baseline's size"
+        ]
+    _check_rows(
+        problems, "service_throughput",
+        baseline.get("service_throughput", []),
+        current.get("service_throughput", []),
+        lambda r: (r["tenants"], r["per_tenant"], r["mode"]),
+        _SRV_EXACT, _SRV_TIMED, time_tol,
+    )
+    _check_rows(
+        problems, "repeat_traffic",
+        baseline.get("repeat_traffic", []), current.get("repeat_traffic", []),
+        lambda r: r["mode"], _RPT_EXACT, _SRV_TIMED, time_tol,
+    )
+    _check_bools(
+        problems, "acceptance",
+        baseline.get("acceptance", {}), current.get("acceptance", {}),
+    )
+    return problems
+
+
+def gate(current: dict, baseline: dict, *, time_tol: float = TIME_TOL
+         ) -> list[str]:
+    """Dispatch on the baseline's shape (msj roofline vs service ladder)."""
+    if "msj_roofline" in baseline:
+        return gate_msj(current, baseline, time_tol=time_tol)
+    if "service_throughput" in baseline or "acceptance" in baseline:
+        return gate_serve(current, baseline, time_tol=time_tol)
+    return [f"unrecognized baseline shape (keys: {sorted(baseline)})"]
+
+
+def report(problems: list[str], *, label: str = "") -> bool:
+    """Print the gate outcome; True iff it passed."""
+    tag = f" [{label}]" if label else ""
+    if problems:
+        for p in problems:
+            print(f"REGRESSION{tag}: {p}", file=sys.stderr)
+        return False
+    print(f"# regression gate{tag}: pass", file=sys.stderr)
+    return True
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
+    ap.add_argument("--current", required=True, help="freshly produced run")
+    ap.add_argument("--time-tol", type=float, default=TIME_TOL,
+                    help="allowed fractional slowdown on timing metrics "
+                         f"(default {TIME_TOL})")
+    args = ap.parse_args(argv)
+    baseline = load(args.baseline)
+    current = load(args.current)
+    ok = report(gate(current, baseline, time_tol=args.time_tol),
+                label=args.baseline)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ from benchmarks import (
     large_queries,
     msj_roofline,
     query_size,
+    regression,
     scaling,
     selectivity,
     service_throughput,
@@ -35,7 +36,19 @@ def main(argv=None) -> None:
     ap.add_argument("--skip-serve", action="store_true",
                     help="with --json: don't run/write the service ladder "
                          "(CI runs benchmarks.service_throughput separately)")
+    ap.add_argument("--baseline", action="append", default=None, metavar="BASE",
+                    help="committed BENCH_*.json to gate the fresh results "
+                         "against (repeatable; kind auto-detected); exits "
+                         "nonzero on regression — benchmarks/regression.py")
     args = ap.parse_args(argv)
+    # load baselines BEFORE any output file is truncated: gating against
+    # the committed BENCH file *in place* (--json X --baseline X) must see
+    # the committed numbers, not the empty file the fail-fast open leaves
+    baselines = []
+    if args.baseline:
+        if not args.json:
+            ap.error("--baseline compares JSON results; add --json OUT")
+        baselines = [(p, regression.load(p)) for p in args.baseline]
     if args.json:
         if args.only and "msj" not in args.only:
             ap.error("--json records the msj roofline; drop --only or include 'msj'")
@@ -112,6 +125,25 @@ def main(argv=None) -> None:
             "BENCH_serve.json", srv_rows, repeat_rows, acceptance,
             n_guard=params["n_guard"]
         )
+
+    if baselines:
+        import json
+
+        ok = True
+        for path, base in baselines:
+            # dispatch each baseline to the fresh file of its kind
+            current_path = args.json if "msj_roofline" in base else "BENCH_serve.json"
+            try:
+                current = json.load(open(current_path))
+            except (OSError, ValueError):
+                print(f"REGRESSION [{path}]: no comparable current run "
+                      f"({current_path} absent/empty — was its suite skipped?)",
+                      file=sys.stderr)
+                ok = False
+                continue
+            ok = regression.report(regression.gate(current, base), label=path) and ok
+        if not ok:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -12,12 +12,19 @@ zero jobs, zero shuffled bytes — and per-relation epochs keep the cache
 warm across unrelated catalog registrations while invalidating exactly
 the queries that read a re-registered relation.
 
+The service is constructed with a :class:`~repro.obs.Tracer`, so every
+job record carries phase spans (count-exchange, forward shuffle, probe,
+scatter — DESIGN.md §14): a per-tick phase breakdown table prints below
+and the tick's full timeline is exported as Chrome/Perfetto JSON (open it
+at https://ui.perfetto.dev).
+
 Run:  PYTHONPATH=src python examples/sgf_service.py
 """
 import numpy as np
 
 from repro.core import queries as Q, ref_engine
 from repro.core.algebra import Atom, BSGF, all_of
+from repro.obs import Tracer, phase_breakdown, write_trace
 from repro.service import SGFService, catalog_from_numpy
 
 XYZW = ("x", "y", "z", "w")
@@ -42,8 +49,9 @@ catalog = catalog_from_numpy(db_np, P=P)
 print(f"catalog: {len(catalog)} relations over P={P} shards")
 
 # 2. admit one tick of traffic and run it as one fused plan on the
-#    ready-queue executor under W slots
-svc = SGFService(catalog, slots=SLOTS)
+#    ready-queue executor under W slots; the tracer records phase spans
+#    on every job record (tracer=None would skip them at zero cost)
+svc = SGFService(catalog, slots=SLOTS, tracer=Tracer())
 requests = [svc.submit([q]) for q in workload]
 svc.tick()
 batch, report = svc.last_batch, svc.last_report
@@ -65,6 +73,20 @@ for rec in report.records:
     )
 assert report.net_time_by_events(None) == report.net_time  # W=inf identity
 assert report.net_time_by_events(1) == report.total_time  # W=1 identity
+
+# where the tick's time went, phase by phase (aggregated over the spans
+# the tracer recorded inside every job attempt)
+print("phase breakdown (tick 1):")
+print(f"  {'phase':<16s} {'count':>5s} {'wall':>9s} {'bytes':>10s}")
+for name, agg in sorted(phase_breakdown(report).items()):
+    print(f"  {name:<16s} {agg['count']:>5d} {agg['wall']*1e3:>7.1f}ms "
+          f"{agg['bytes']:>10d}")
+
+# the same timeline as a Chrome/Perfetto trace: per-slot tracks, nested
+# phase slices, flow arrows for DAG edges — load it at ui.perfetto.dev
+trace_path = write_trace("sgf_service.trace.json", report, title="tick-1",
+                         metrics=svc.metrics)
+print(f"exported trace: {trace_path}")
 
 # 3. verify against the set-semantics oracle
 setdb = {k: {tuple(map(int, r)) for r in v} for k, v in db_np.items()}

@@ -71,8 +71,14 @@ def run_eval(
     comm: Comm,
     *,
     forward_cap: int | None = None,
+    tracer=None,
 ):
-    """Execute one EVAL job. Returns ``({name: Relation}, stats)``."""
+    """Execute one EVAL job. Returns ``({name: Relation}, stats)``.
+
+    ``tracer`` records the two pipeline phases (``eval.shuffle`` — tuple
+    routing + exchange — and ``eval.reduce`` — sorted grouping + formula
+    evaluation); ``None`` runs the exact untraced path (DESIGN.md §14).
+    """
     P = comm.P
     units = tuple(units)
     max_members = max(1 + len(u.xs) for u in units)
@@ -178,8 +184,18 @@ def run_eval(
         return None, (outs, stats)
 
     stacked = {name: env[name] for name in rel_names}
-    outputs, stats = run_pipeline(comm, [stage_map, stage_reduce], stacked)
+    traced = tracer is not None and getattr(tracer, "enabled", False)
+    phase_spans = tracer.current() if traced else []
+    base = len(phase_spans)
+    outputs, stats = run_pipeline(
+        comm, [stage_map, stage_reduce], stacked,
+        tracer=tracer, names=["eval.shuffle", "eval.reduce"],
+    )
     stats = {k: jnp.asarray(v).sum() for k, v in stats.items()}
     stats["bytes_fwd"] = stats["sent_fwd"] * W * 4
     stats["bytes_bwd"] = jnp.int32(0)
+    if traced:
+        for sp in phase_spans[base:]:
+            if sp.name == "eval.shuffle":
+                sp.args["bytes"] = int(stats["bytes_fwd"])
     return outputs, stats

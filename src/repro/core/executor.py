@@ -70,6 +70,7 @@ from repro.core.planner import (
 )
 from repro.core.relation import Relation
 from repro.engine.comm import Comm
+from repro.obs.tracer import Span, rebase as _rebase_spans, scale_spans as _scale_spans
 
 
 class CapacityFault(RuntimeError):
@@ -181,6 +182,13 @@ class JobRecord:
     #: reads; wall == 0.0), or "cancelled" (a speculative attempt that
     #: lost the first-completion-wins race).
     outcome: str = "ok"
+    #: phase spans of this dispatch (DESIGN.md §14): count-exchange,
+    #: forward shuffle, probe, scatter, retry attempts, taint sweeps —
+    #: recorded only when the executor holds a Tracer, with offsets
+    #: relative to ``start`` and scaled alongside ``wall`` so every span
+    #: nests inside the job slice.  Empty when tracing is off; the
+    #: replay identities never read spans (walls alone drive them).
+    spans: list[Span] = field(default_factory=list)
 
 
 @dataclass(frozen=True)
@@ -520,11 +528,21 @@ class Executor:
         *,
         stats: Stats | None = None,
         lineage: dict[str, Relation] | None = None,
+        tracer=None,
+        metrics=None,
     ):
         self.env: dict[str, Relation] = dict(db)
         self.comm = comm
         self.config = config or ExecutorConfig()
         self.stats = stats
+        #: phase-span tracer (repro.obs.Tracer) — None (default) keeps the
+        #: hot path bit-identical to the untraced build; enabled tracing
+        #: syncs per pipeline stage so spans carry honest device time
+        #: (DESIGN.md §14).
+        self.tracer = tracer
+        #: metric registry (repro.obs.MetricRegistry) — when present,
+        #: execute() publishes msj.*/ft.* counters from each report.
+        self.metrics = metrics
         #: durable lineage sources for shard-loss recovery: relation name →
         #: the authoritative Relation a lost partition is re-materialized
         #: from (the catalog's host-resident rows in the service).  Default
@@ -594,6 +612,7 @@ class Executor:
                 fingerprint=self.config.fingerprint,
                 count_sized=self.config.count_sized,
                 cap_slack=self.config.cap_slack if cap_slack is None else cap_slack,
+                tracer=self.tracer,
             )
             stats["input_rows"] = sum(
                 int(self.env[r].count()) for r in _msj_input_rels(job, self.env)
@@ -615,7 +634,7 @@ class Executor:
                 )
             )
             input_rows += int(env[x0].count()) + sum(int(self.env[x].count()) for x in xin)
-        outs, stats = run_eval(env, units, self.comm)
+        outs, stats = run_eval(env, units, self.comm, tracer=self.tracer)
         stats["input_rows"] = input_rows
         return outs, stats
 
@@ -638,16 +657,33 @@ class Executor:
         stays in force for later jobs and plans).
         """
         state = RetryState() if state is None else state
+        tr = self.tracer
+        traced = tr is not None and getattr(tr, "enabled", False)
         attempts = 0
         while True:
             attempts += 1
+            sp = None
             try:
-                if on_job is not None:
-                    on_job(job, attempts)
-                outs, stats = self.run_job(
-                    job, cap_override=state.cap, cap_slack=state.slack
-                )
+                if traced:
+                    # one span per dispatch attempt: retries and capacity
+                    # re-runs show up as sibling ft.attempt slices with the
+                    # pipeline phase spans nested inside (DESIGN.md §14)
+                    with tr.span("ft.attempt", cat="attempt",
+                                 attempt=attempts) as sp:
+                        if on_job is not None:
+                            on_job(job, attempts)
+                        outs, stats = self.run_job(
+                            job, cap_override=state.cap, cap_slack=state.slack
+                        )
+                else:
+                    if on_job is not None:
+                        on_job(job, attempts)
+                    outs, stats = self.run_job(
+                        job, cap_override=state.cap, cap_slack=state.slack
+                    )
             except TransientFault as fault:
+                if sp is not None:
+                    sp.args["outcome"] = type(fault).__name__
                 state.fault_retries += 1
                 self.ft_counters["fault_retries"] += 1
                 if isinstance(fault, ShardLoss):
@@ -661,7 +697,11 @@ class Executor:
                 continue
             ovf = int(stats.get("overflow", 0))
             if ovf == 0:
+                if sp is not None:
+                    sp.args["outcome"] = "ok"
                 return outs, stats, attempts
+            if sp is not None:
+                sp.args["outcome"] = "overflow"
             if state.overflow_retries >= self.config.max_retries:
                 raise CapacityFault(job, ovf)
             state.on_overflow(self.config, stats)
@@ -738,23 +778,42 @@ class Executor:
         max_restarts: int,
         wall_scale: Callable | None,
         attempt: int,
-    ) -> tuple[dict, dict, int, float]:
+    ) -> tuple[dict, dict, int, float, list[Span]]:
         """One timed dispatch attempt: run to completion (with retries) and
         measure its wall, without publishing outputs (first-completion-wins
         decides what gets published).  ``wall_scale(job, attempt)`` scales
         the measured wall in the *virtual* timeline — the fault-injection
-        hook benchmarks/tests use to create deterministic stragglers."""
+        hook benchmarks/tests use to create deterministic stragglers.
+
+        When tracing is on, the attempt's phase spans are captured,
+        rebased to offsets from the dispatch, and scaled by the same
+        factor as the wall, so they nest inside the virtual job slice."""
+        tr = self.tracer
+        traced = tr is not None and getattr(tr, "enabled", False)
+        spans: list[Span] = []
         t0 = time.perf_counter()
-        outs, stats, attempts = self.run_job_ft(
-            job, on_job, state=state, max_restarts=max_restarts
-        )
-        if self.config.sync_per_job:
-            for v in outs.values():
-                jax.block_until_ready(v.data)
-        wall = time.perf_counter() - t0
+        if traced:
+            with tr.capture() as spans:
+                outs, stats, attempts = self.run_job_ft(
+                    job, on_job, state=state, max_restarts=max_restarts
+                )
+                if self.config.sync_per_job:
+                    for v in outs.values():
+                        jax.block_until_ready(v.data)
+        else:
+            outs, stats, attempts = self.run_job_ft(
+                job, on_job, state=state, max_restarts=max_restarts
+            )
+            if self.config.sync_per_job:
+                for v in outs.values():
+                    jax.block_until_ready(v.data)
+        measured = time.perf_counter() - t0
+        wall = measured
         if wall_scale is not None:
             wall *= float(wall_scale(job, attempt))
-        return outs, stats, attempts, wall
+        if spans:
+            _rebase_spans(spans, t0, wall / measured if measured > 0.0 else 1.0)
+        return outs, stats, attempts, wall, spans
 
     def _publish(self, outs: dict) -> None:
         for name, rel in outs.items():
@@ -774,12 +833,12 @@ class Executor:
     ) -> JobRecord:
         """Run one job to completion: time it, publish its outputs into the
         environment, and append a :class:`JobRecord` to ``report``."""
-        outs, stats, attempts, wall = self._attempt(
+        outs, stats, attempts, wall, spans = self._attempt(
             job, on_job, RetryState(), max_restarts, wall_scale, 0
         )
         self._publish(outs)
         ints, backend = int_stats(stats)
-        rec = JobRecord(job, round_idx, wall, ints, attempts, backend)
+        rec = JobRecord(job, round_idx, wall, ints, attempts, backend, spans=spans)
         report.records.append(rec)
         return rec
 
@@ -838,8 +897,34 @@ class Executor:
                     "fail_policy='isolate' requires execution_mode='async': "
                     "the barrier-wave walk has no per-job taint sweep"
                 )
-            return self._execute_waves(nodes, slots, est, on_job, max_restarts, wall_scale)
-        return self._execute_async(nodes, slots, est, on_job, max_restarts, wall_scale)
+            env, report = self._execute_waves(
+                nodes, slots, est, on_job, max_restarts, wall_scale
+            )
+        else:
+            env, report = self._execute_async(
+                nodes, slots, est, on_job, max_restarts, wall_scale
+            )
+        if self.metrics is not None:
+            self._publish_metrics(report)
+        return env, report
+
+    def _publish_metrics(self, report: Report) -> None:
+        """Fold one execute's report into the metric registry (DESIGN.md
+        §14): engine work under ``msj.*``, fault tolerance under ``ft.*``."""
+        m = self.metrics
+        m.counter("msj.jobs").add(report.n_jobs)
+        m.counter("msj.shuffle.bytes").add(report.bytes_shuffled())
+        m.counter("ft.speculative.dispatches").add(self.ft_counters["speculative"])
+        m.counter("ft.failed.jobs").add(len(report.failed_jobs))
+        m.counter("ft.taint.jobs").add(len(report.tainted_jobs))
+        # retry-ladder counters (overflow/fault/shard recovery) are the
+        # supervisor's: FTStats publishes them under ft.* from the same
+        # ft_counters, so publishing here too would double-count when the
+        # registry is shared
+        wall = m.histogram("msj.job.wall")
+        for r in report.records:
+            if r.outcome == "ok":
+                wall.observe(r.wall)
 
     def _execute_async(
         self, nodes, slots, est, on_job, max_restarts=0, wall_scale=None
@@ -905,7 +990,7 @@ class Executor:
             recov0 = self.ft_counters["shard_recoveries"]
             t0 = time.perf_counter()
             try:
-                outs, stats, attempts, wall = self._attempt(
+                outs, stats, attempts, wall, spans = self._attempt(
                     node.job, on_job, state, max_restarts, wall_scale, 0
                 )
             except (TransientFault, CapacityFault, PermanentFault) as exc:
@@ -949,9 +1034,22 @@ class Executor:
                 # a downstream unit guarding directly on a poisoned base
                 # relation must drop even though that relation has a clean
                 # producer (none — it's a base input)
-                self._taint_sweep(
-                    pending, job_writes(dropped) | blamed, end, report, end_at
-                )
+                tr = self.tracer
+                if tr is not None and getattr(tr, "enabled", False):
+                    t_sweep = time.perf_counter()
+                    n0 = len(report.records)
+                    self._taint_sweep(
+                        pending, job_writes(dropped) | blamed, end, report, end_at
+                    )
+                    rec.spans.append(Span(
+                        "ft.taint.sweep", "phase", wall,
+                        time.perf_counter() - t_sweep,
+                        {"tainted_jobs": len(report.records) - n0},
+                    ))
+                else:
+                    self._taint_sweep(
+                        pending, job_writes(dropped) | blamed, end, report, end_at
+                    )
                 maybe_shrink(recov0)
                 continue
             end = start + wall
@@ -969,10 +1067,10 @@ class Executor:
                     t2 = max(start + deadline, slot_free[s2])
                     if t2 < end:  # the clone could still win
                         try:
-                            outs2, stats2, attempts2, wall2 = self._attempt(
+                            outs2, stats2, attempts2, wall2, spans2 = self._attempt(
                                 node.job, on_job, state, max_restarts, wall_scale, 1
                             )
-                            clone = (outs2, stats2, attempts2, wall2, s2, t2)
+                            clone = (outs2, stats2, attempts2, wall2, spans2, s2, t2)
                             self.ft_counters["speculative"] += 1
                         except (TransientFault, CapacityFault, PermanentFault):
                             # speculation is an optimization: a clone that
@@ -984,28 +1082,35 @@ class Executor:
                 self._publish(outs)
                 ints, backend = int_stats(stats)
                 rec = JobRecord(node.job, node.round_idx, wall, ints, attempts,
-                                backend, start, end, s)
+                                backend, start, end, s, spans=spans)
                 recs = [rec]
                 win_end = end
             else:
-                outs2, stats2, attempts2, wall2, s2, t2 = clone
+                outs2, stats2, attempts2, wall2, spans2, s2, t2 = clone
                 end2 = t2 + wall2
                 win_end = min(end, end2)  # ties go to the original
                 clone_wins = end2 < end
                 self._publish(outs2 if clone_wins else outs)
                 ints, backend = int_stats(stats)
                 ints2, backend2 = int_stats(stats2)
+                # the loser's wall is truncated at the winner's end; its
+                # spans shrink by the same factor so they stay inside the
+                # cancelled slice (the winner's factor is exactly 1.0)
+                if spans and wall > 0.0:
+                    _scale_spans(spans, (win_end - start) / wall)
+                if spans2 and wall2 > 0.0:
+                    _scale_spans(spans2, (win_end - t2) / wall2)
                 rec = JobRecord(
                     node.job, node.round_idx, win_end - start, ints, attempts,
                     backend, start, win_end, s,
                     attempt=0, cancelled=clone_wins,
-                    outcome="cancelled" if clone_wins else "ok",
+                    outcome="cancelled" if clone_wins else "ok", spans=spans,
                 )
                 rec2 = JobRecord(
                     node.job, node.round_idx, win_end - t2, ints2, attempts2,
                     backend2, t2, win_end, s2,
                     attempt=1, speculative=True, cancelled=not clone_wins,
-                    outcome="ok" if clone_wins else "cancelled",
+                    outcome="ok" if clone_wins else "cancelled", spans=spans2,
                 )
                 slot_free[s2] = rec2.end
                 recs = [rec, rec2]

@@ -504,6 +504,7 @@ def run_msj(
     fingerprint: bool = True,
     count_sized: bool = True,
     cap_slack: float = 1.0,
+    tracer=None,
 ):
     """Evaluate MSJ(S). Returns ``(outputs, stats)``.
 
@@ -519,6 +520,12 @@ def run_msj(
     worst-case bound (``forward_cap`` overrides both).  ``cap_slack < 1``
     deliberately undersizes the chosen capacity (memory saving; exact
     overflow detection + supervisor retry recover correctness).
+
+    ``tracer`` (DESIGN.md §14) records the per-phase spans — ``msj.count``
+    (count exchange), ``msj.bloom``, ``msj.shuffle.fwd`` (map + forward
+    partition), ``msj.probe``, ``msj.scatter`` — each synced so device
+    time lands in the right phase; ``tracer=None`` (the default) runs the
+    exact untraced path.
     """
     spec = make_spec(sjs, fingerprint=fingerprint)
     P = comm.P
@@ -529,11 +536,19 @@ def run_msj(
         probe_fn = probe_sorted
     pass_fp = fingerprint and _probe_takes_fp(probe_fn)
 
+    traced = tracer is not None and getattr(tracer, "enabled", False)
     counted = False
     if forward_cap is not None:
         cap_s = forward_cap
     elif count_sized:
-        cap_s = count_forward_cap(spec, db, comm, packing=packing, slack=cap_slack)
+        if traced:
+            with tracer.span("msj.count") as _sp:
+                cap_s = count_forward_cap(
+                    spec, db, comm, packing=packing, slack=cap_slack
+                )
+                _sp.args["cap"] = cap_s
+        else:
+            cap_s = count_forward_cap(spec, db, comm, packing=packing, slack=cap_slack)
         counted = cap_s is not None
         if cap_s is None:
             cap_s = default_forward_cap(spec, db, P, cap_slack)
@@ -738,7 +753,12 @@ def run_msj(
 
     stacked = {name: db[name] for name in rel_names}
     stages = ([stage_bloom] if use_bloom else []) + [stage_map, stage_probe, stage_out]
-    outputs, stats = run_pipeline(comm, stages, stacked)
+    names = (["msj.bloom"] if use_bloom else []) + [
+        "msj.shuffle.fwd", "msj.probe", "msj.scatter",
+    ]
+    phase_spans = tracer.current() if traced else []
+    base = len(phase_spans)
+    outputs, stats = run_pipeline(comm, stages, stacked, tracer=tracer, names=names)
     # aggregate stats over shards (sim mode leaves a leading P axis)
     stats = {k: jnp.asarray(v).sum() for k, v in stats.items()}
     # the count phase ships one int32 per (src, dest) pair before the data
@@ -747,4 +767,15 @@ def run_msj(
     stats["bytes_fwd"] = stats["sent_fwd"] * W * 4 + bytes_count
     stats["bytes_bwd"] = stats["hits"] * 2 * 4
     stats["forward_cap"] = cap_s
+    if traced:
+        # annotate the just-recorded stage spans with the shuffled bytes
+        # (known only after the shard-summed stats materialize; syncing
+        # here is fine — tracing already syncs per stage)
+        by_name = {sp.name: sp for sp in phase_spans[base:]}
+        if "msj.shuffle.fwd" in by_name:
+            by_name["msj.shuffle.fwd"].args["bytes"] = int(stats["bytes_fwd"])
+        if "msj.scatter" in by_name:
+            by_name["msj.scatter"].args["bytes"] = int(stats["bytes_bwd"])
+        if "msj.probe" in by_name:
+            by_name["msj.probe"].args["hits"] = int(stats["hits"])
     return outputs, stats

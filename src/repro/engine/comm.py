@@ -103,6 +103,9 @@ def run_pipeline(
     comm: Comm,
     stages: Sequence[Callable],
     stacked_args,
+    *,
+    tracer=None,
+    names: Sequence[str] | None = None,
 ):
     """Run ``stages`` alternating per-shard compute with all_to_all.
 
@@ -114,14 +117,35 @@ def run_pipeline(
     For SimComm, ``stacked_args`` carries a leading P axis; for MeshComm the
     caller is expected to invoke this inside ``shard_map`` (see
     :func:`mesh_pipeline`).
+
+    ``tracer`` (a :class:`repro.obs.Tracer`, DESIGN.md §14) records one
+    phase span per stage (named by ``names``, falling back to the stage
+    function's name), blocking on the carry after each stage + exchange so
+    device time is attributed to the phase that spent it.  The sync only
+    happens when tracing is enabled — ``tracer=None`` executes the exact
+    untraced instruction stream — and only on the SimComm path (MeshComm
+    runs inside ``shard_map``, where blocking is impossible; spans there
+    would be trace-side noise, so the tracer is ignored).
     """
+    traced = tracer is not None and getattr(tracer, "enabled", False)
     if isinstance(comm, SimComm):
         carry = stacked_args
-        for stage in stages:
-            send, carry = jax.vmap(stage)(comm.shard_ids(), carry)
-            if send is not None:
-                recv = jax.tree.map(comm.all_to_all, send)
-                carry = (recv, carry)
+        for i, stage in enumerate(stages):
+            if traced:
+                label = names[i] if names and i < len(names) else getattr(
+                    stage, "__name__", f"stage{i}"
+                )
+                with tracer.span(label):
+                    send, carry = jax.vmap(stage)(comm.shard_ids(), carry)
+                    if send is not None:
+                        recv = jax.tree.map(comm.all_to_all, send)
+                        carry = (recv, carry)
+                    carry = jax.block_until_ready(carry)
+            else:
+                send, carry = jax.vmap(stage)(comm.shard_ids(), carry)
+                if send is not None:
+                    recv = jax.tree.map(comm.all_to_all, send)
+                    carry = (recv, carry)
         return carry
     else:
         sid = comm.shard_id()

@@ -38,6 +38,7 @@ from repro.core.executor import (  # noqa: F401  (fault taxonomy re-exported)
     ShardLoss,
     TransientFault,
 )
+from repro.obs.metrics import MetricRegistry, counter_attr
 
 
 class SimulatedFault(TransientFault):
@@ -59,14 +60,34 @@ class FTConfig:
     shard_loss_rate: float = 0.0
 
 
-@dataclass
 class FTStats:
-    faults_injected: int = 0
-    retries: int = 0
-    speculative_redispatches: int = 0
-    capacity_retries: int = 0
-    shard_losses: int = 0
-    shard_recoveries: int = 0
+    """Fault-tolerance counters, registry-backed (DESIGN.md §14).
+
+    The attribute API of the old dataclass is preserved as properties
+    over ``ft.*`` counters in a :class:`~repro.obs.MetricRegistry`, so a
+    supervisor can share one registry with the service/executor metrics
+    while every existing ``stats.retries`` read keeps working.
+    """
+
+    def __init__(self, metrics=None):
+        self.metrics = metrics if metrics is not None else MetricRegistry()
+
+    faults_injected = counter_attr("ft.fault.injected")
+    retries = counter_attr("ft.fault.reroutes")
+    speculative_redispatches = counter_attr("ft.speculative.redispatches")
+    capacity_retries = counter_attr("ft.capacity.retries")
+    shard_losses = counter_attr("ft.shard.losses")
+    shard_recoveries = counter_attr("ft.shard.recoveries")
+
+    _FIELDS = ("faults_injected", "retries", "speculative_redispatches",
+               "capacity_retries", "shard_losses", "shard_recoveries")
+
+    def as_dict(self) -> dict:
+        return {name: getattr(self, name) for name in self._FIELDS}
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{k}={v}" for k, v in self.as_dict().items())
+        return f"FTStats({body})"
 
 
 class Supervisor:
@@ -85,11 +106,14 @@ class Supervisor:
     unpriceable and re-dispatch stays off.
     """
 
-    def __init__(self, executor: Executor, config: FTConfig | None = None):
+    def __init__(self, executor: Executor, config: FTConfig | None = None,
+                 *, metrics=None):
         self.ex = executor
         self.cfg = config or FTConfig()
         self.rng = np.random.default_rng(self.cfg.seed)
-        self.stats = FTStats()
+        # share the executor's registry by default so ft.* counters land
+        # next to its msj.* metrics (DESIGN.md §14)
+        self.stats = FTStats(metrics if metrics is not None else executor.metrics)
 
     def _inject(self, job, attempt: int) -> None:
         """The executor's ``on_job`` hook: one biased coin per attempt."""

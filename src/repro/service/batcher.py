@@ -47,6 +47,7 @@ from repro.core.planner import (
 )
 from repro.core.relation import Relation
 from repro.engine.comm import Comm, SimComm
+from repro.obs.metrics import MetricRegistry, counter_attr
 from repro.service.catalog import Catalog, query_deps
 from repro.service.plan_cache import PlanCache, canonical_query_key, canonicalize
 from repro.service.result_cache import ResultCache, xmat_content_key
@@ -205,6 +206,16 @@ class SGFService:
     barrier executor exactly.
     """
 
+    #: service-level counters, registry-backed (DESIGN.md §14) — the
+    #: attribute API (``svc.quarantines``, ``svc.warm_served += n``) is
+    #: unchanged; the same numbers are also reachable as ``svc.tick.*`` /
+    #: ``svc.req.*`` / ``svc.tenant.*`` metrics in ``self.metrics``.
+    warm_served = counter_attr("svc.tick.warm_queries")
+    cold_executed = counter_attr("svc.tick.cold_queries")
+    failed_requests = counter_attr("svc.req.failed")
+    retries_scheduled = counter_attr("svc.req.retries")
+    quarantines = counter_attr("svc.tenant.quarantines")
+
     def __init__(
         self,
         catalog: Catalog,
@@ -218,6 +229,8 @@ class SGFService:
         cache_capacity: int = 128,
         result_cache_capacity: int = 256,
         retry_policy: RetryPolicy | None = None,
+        tracer=None,
+        metrics: MetricRegistry | None = None,
     ):
         self.catalog = catalog
         self.comm = comm or SimComm(catalog.P)
@@ -225,27 +238,31 @@ class SGFService:
         self.slots = slots
         self.consts = consts
         self.model = model
+        #: one registry for the whole service: plan/result cache, per-tick
+        #: service counters, and every per-tick Executor publish into it
+        #: (DESIGN.md §14); pass your own to aggregate across services.
+        self.metrics = metrics if metrics is not None else MetricRegistry()
+        #: phase-span tracer threaded into each tick's Executor; None (the
+        #: default) keeps execution byte-identical to the untraced service.
+        self.tracer = tracer
         self.batcher = AdmissionBatcher(max_admit=max_admit)
-        self.cache = PlanCache(capacity=cache_capacity)
+        self.cache = PlanCache(capacity=cache_capacity, metrics=self.metrics)
         #: cross-tick result/X_i materializations; capacity 0 disables
         #: (every tick then executes fully cold, the pre-cache behaviour)
-        self.results = ResultCache(capacity=result_cache_capacity)
+        self.results = ResultCache(
+            capacity=result_cache_capacity, metrics=self.metrics
+        )
         self.retry_policy = retry_policy or RetryPolicy()
         self.reports: list[Report] = []
         self.last_report: Report | None = None
         self.last_batch: FusedBatch | None = None
         self.last_tick: dict = {}
-        self.warm_served = 0
-        self.cold_executed = 0
         self._next_rid = 0
         #: failure-domain state (DESIGN.md §13)
         self.tick_no = 0
         self.delayed: list[QueryRequest] = []  # backing off, by retry_after
         self.quarantine_until: dict[int, int] = {}  # tenant -> tick
         self.strikes: dict[int, float] = {}  # tenant -> decayed strike count
-        self.failed_requests = 0  # per-tick request failures (transient)
-        self.retries_scheduled = 0
-        self.quarantines = 0
         #: fault-injection seam for chaos tests/benchmarks: forwarded to the
         #: executor's ready-queue walk each tick; injectors needing the live
         #: environment (ShardLoss) reach it via ``self._executor.env``.
@@ -495,6 +512,7 @@ class SGFService:
         ex = Executor(
             {**self.catalog.db(), **warm, **injected}, self.comm, self.config,
             stats=stats, lineage=self.catalog.db(),
+            tracer=self.tracer, metrics=self.metrics,
         )
         self._executor = ex  # chaos injectors reach the live env here
         sched = SlotScheduler(
@@ -599,6 +617,12 @@ class SGFService:
         self.last_tick["failed_requests"] = len(batch.requests) - len(completed)
         self.warm_served += self.last_tick.get("warm_queries", 0)
         self.cold_executed += self.last_tick.get("cold_queries", 0)
+        # per-request tick latency: every request admitted this tick waited
+        # out the tick's net (critical-path) time, warm hits included
+        lat = self._net_time(report)
+        hist = self.metrics.histogram("svc.tick.latency")
+        for _ in batch.requests:
+            hist.observe(lat)
         self.reports.append(report)
         self.last_report = report
         self.last_batch = batch
@@ -637,4 +661,8 @@ class SGFService:
         c["bytes_shuffled"] = sum(r.bytes_shuffled() for r in self.reports)
         c["net_time"] = sum(self._net_time(r) for r in self.reports)
         c["total_time"] = sum(r.total_time for r in self.reports)
+        lat = self.metrics.histogram("svc.tick.latency")
+        c["tick_latency_p50"] = lat.percentile(0.50)
+        c["tick_latency_p95"] = lat.percentile(0.95)
+        c["tick_latency_p99"] = lat.percentile(0.99)
         return c

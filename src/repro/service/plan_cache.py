@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.algebra import Atom, BSGF, Cond, Not, cond_atoms
 from repro.core.planner import Plan
 from repro.engine import hashing
+from repro.obs.metrics import MetricRegistry, counter_attr
 
 
 # --------------------------------------------------------------------------
@@ -145,15 +146,22 @@ class PlanCache:
     to plan, i.e. the per-relation epochs of the relations the batch
     actually reads, so an unrelated registration leaves entries valid
     (DESIGN.md §10).  A plain int (the old global epoch) still works.
+
+    Counters live in a :class:`~repro.obs.MetricRegistry` under
+    ``svc.plan_cache.*`` (DESIGN.md §14); the ``hits``/``misses``/
+    ``collisions`` attributes and :meth:`counters` keys are compatibility
+    properties over the registry, so existing call sites are unchanged.
     """
 
-    def __init__(self, capacity: int = 128):
+    def __init__(self, capacity: int = 128, *, metrics=None):
         self.capacity = capacity
+        self.metrics = metrics if metrics is not None else MetricRegistry()
         self._entries: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
         self._fp_blobs: dict[int, set[tuple]] = {}  # resident blobs per fp shard
-        self.hits = 0
-        self.misses = 0
-        self.collisions = 0
+
+    hits = counter_attr("svc.plan_cache.hit")
+    misses = counter_attr("svc.plan_cache.miss")
+    collisions = counter_attr("svc.plan_cache.collision")
 
     def get_or_plan(
         self,

@@ -33,6 +33,7 @@ from typing import Mapping
 
 from repro.core.algebra import SemiJoin
 from repro.core.relation import Relation
+from repro.obs.metrics import MetricRegistry, counter_attr
 
 #: entry kinds (kept explicit so counters can split hit rates per kind)
 KINDS = ("query", "xmat")
@@ -57,21 +58,29 @@ class ResultEntry:
 
 
 class ResultCache:
-    """LRU: ``(content key, dep epochs) -> Relation``; capacity 0 disables."""
+    """LRU: ``(content key, dep epochs) -> Relation``; capacity 0 disables.
 
-    def __init__(self, capacity: int = 256):
+    Counters live under ``svc.result_cache.*`` in a
+    :class:`~repro.obs.MetricRegistry` (DESIGN.md §14); the attribute API
+    (including the service's ``partial_skipped += 1``) is preserved via
+    registry-backed properties.
+    """
+
+    def __init__(self, capacity: int = 256, *, metrics=None):
         self.capacity = capacity
+        self.metrics = metrics if metrics is not None else MetricRegistry()
         self._entries: "OrderedDict[tuple, ResultEntry]" = OrderedDict()
-        self.query_hits = 0
-        self.query_misses = 0
-        self.x_hits = 0
-        self.x_misses = 0
-        self.stale_evicted = 0
-        #: insertions withheld by the service's partial commit: a
-        #: materialization whose producing job failed or was tainted
-        #: (DESIGN.md §13) must never enter the cache — a later warm hit
-        #: would serve a poisoned result as if it were clean.
-        self.partial_skipped = 0
+
+    query_hits = counter_attr("svc.result_cache.query.hit")
+    query_misses = counter_attr("svc.result_cache.query.miss")
+    x_hits = counter_attr("svc.result_cache.x.hit")
+    x_misses = counter_attr("svc.result_cache.x.miss")
+    stale_evicted = counter_attr("svc.result_cache.stale_evicted")
+    #: insertions withheld by the service's partial commit: a
+    #: materialization whose producing job failed or was tainted
+    #: (DESIGN.md §13) must never enter the cache — a later warm hit
+    #: would serve a poisoned result as if it were clean.
+    partial_skipped = counter_attr("svc.result_cache.partial_skipped")
 
     def __len__(self) -> int:
         return len(self._entries)

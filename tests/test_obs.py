@@ -1,0 +1,407 @@
+"""Tracing + metrics layer (DESIGN.md §14): tracer/span units, the metric
+registry (counters, histograms, counter_attr compatibility properties,
+JSONL sink), the traced-executor integration (spans on records, tracer=None
+bit-identity), the no-double-count replay regression on reports with
+cancelled/tainted records, and the bench regression gate."""
+from __future__ import annotations
+
+import copy
+import io
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from benchmarks import regression
+from repro.core import queries as Q
+from repro.core.algebra import Atom, BSGF, all_of
+from repro.core.costmodel import stats_of_db
+from repro.core.executor import Executor, ExecutorConfig, JobRecord, Report
+from repro.core.planner import plan_greedy
+from repro.core.relation import db_from_dict
+from repro.engine.comm import SimComm
+from repro.obs import MetricRegistry, Span, Tracer, trace_events
+from repro.obs.metrics import Counter, Histogram, JsonlSink, counter_attr
+from repro.obs.tracer import rebase, scale_spans
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# --------------------------------------------------------------------------
+# Tracer / spans
+# --------------------------------------------------------------------------
+
+
+class TestTracer:
+    def test_nested_spans(self):
+        tr = Tracer()
+        with tr.capture() as root:
+            with tr.span("outer", rows=3) as out:
+                with tr.span("inner"):
+                    pass
+            with tr.span("sibling"):
+                pass
+        assert [sp.name for sp in root] == ["outer", "sibling"]
+        assert [sp.name for sp in root[0].children] == ["inner"]
+        assert out.args == {"rows": 3}
+        assert all(sp.dur >= 0.0 for r in root for sp in r.walk())
+
+    def test_capture_isolates_attempts(self):
+        tr = Tracer()
+        with tr.capture() as a:
+            with tr.span("first"):
+                pass
+        with tr.capture() as b:
+            with tr.span("second"):
+                pass
+        assert [sp.name for sp in a] == ["first"]
+        assert [sp.name for sp in b] == ["second"]
+
+    def test_span_outside_capture_tolerated(self):
+        tr = Tracer()
+        with tr.span("orphan"):
+            pass  # must not raise
+
+    def test_post_hoc_arg_attachment(self):
+        tr = Tracer()
+        with tr.capture() as root:
+            with tr.span("io") as sp:
+                pass
+            sp.args["bytes"] = 4096
+        assert root[0].args["bytes"] == 4096
+
+    def test_rebase_and_scale(self):
+        spans = [Span("a", t0=10.0, dur=2.0,
+                      children=[Span("b", t0=10.5, dur=1.0)])]
+        rebase(spans, 10.0, 2.0)
+        assert spans[0].t0 == 0.0 and spans[0].dur == 4.0
+        # children share the parent's origin: offsets stay job-relative
+        assert spans[0].children[0].t0 == 1.0
+        assert spans[0].children[0].dur == 2.0
+        scale_spans(spans, 0.5)
+        assert spans[0].dur == 2.0 and spans[0].children[0].t0 == 0.5
+
+    def test_walk_covers_tree(self):
+        sp = Span("a", children=[Span("b", children=[Span("c")]), Span("d")])
+        assert [s.name for s in sp.walk()] == ["a", "b", "c", "d"]
+
+
+# --------------------------------------------------------------------------
+# Metric registry
+# --------------------------------------------------------------------------
+
+
+class TestMetrics:
+    def test_counter_and_gauge(self):
+        m = MetricRegistry()
+        m.counter("msj.jobs").inc()
+        m.counter("msj.jobs").add(4)
+        m.gauge("svc.queue.depth").set(7)
+        assert m.counter("msj.jobs").value == 5
+        assert m.gauge("svc.queue.depth").value == 7
+        assert "msj.jobs" in m and "nope" not in m
+
+    def test_type_conflict_raises(self):
+        m = MetricRegistry()
+        m.counter("x")
+        with pytest.raises(TypeError):
+            m.histogram("x")
+
+    def test_histogram_percentiles_bounded_error(self):
+        h = Histogram("lat")
+        vals = [0.001 * (i + 1) for i in range(1000)]
+        for v in vals:
+            h.observe(v)
+        assert h.count == 1000 and h.min == vals[0] and h.max == vals[-1]
+        for p in (0.5, 0.95, 0.99):
+            exact = vals[int(p * len(vals)) - 1]
+            got = h.percentile(p)
+            # HDR convention: upper bucket edge — never below the exact
+            # quantile's bucket, within one sub-bucket (~3%) above it
+            assert exact * (1 - 2**-h.sub_bits) <= got <= exact * (1 + 2**-4)
+        assert h.percentile(1.0) == vals[-1]
+
+    def test_histogram_zero_and_empty(self):
+        h = Histogram("z")
+        assert h.percentile(0.5) == 0.0
+        h.observe(0.0)
+        assert h.percentile(0.5) == 0.0 and h.count == 1
+        assert h.snapshot()["min"] == 0.0
+
+    def test_counter_attr_property(self):
+        class Thing:
+            hits = counter_attr("t.hit")
+
+            def __init__(self, metrics=None):
+                self.metrics = metrics or MetricRegistry()
+
+        t = Thing()
+        t.hits += 1
+        t.hits += 1
+        assert t.hits == 2
+        assert t.metrics.counter("t.hit").value == 2
+        t.hits = 0  # assignment translates to a delta
+        assert t.metrics.counter("t.hit").value == 0
+        # two objects sharing one registry share the counter
+        shared = MetricRegistry()
+        a, b = Thing(shared), Thing(shared)
+        a.hits += 3
+        assert b.hits == 3
+
+    def test_jsonl_sink_roundtrip(self):
+        buf = io.StringIO()
+        m = MetricRegistry()
+        m.counter("c").add(2)
+        m.histogram("h").observe(0.12345678901234567)
+        with JsonlSink(buf) as sink:
+            sink.write({"tick": 1}, extra="x")
+            sink.write_registry(m, tick=2)
+        lines = [json.loads(ln) for ln in buf.getvalue().splitlines()]
+        assert lines[0] == {"tick": 1, "extra": "x"}
+        assert lines[1]["metrics"]["c"] == 2
+        # shortest-roundtrip float reprs: values come back bit-exact
+        assert lines[1]["metrics"]["h"]["sum"] == 0.12345678901234567
+
+
+# --------------------------------------------------------------------------
+# Traced executor integration
+# --------------------------------------------------------------------------
+
+
+def _tiny_setup():
+    q = BSGF("Z", ("x", "y"), Atom("R", "x", "y"),
+             all_of(Atom("S", "x"), Atom("T", "y")))
+    db_np = Q.gen_db([q], n_guard=96, n_cond=64)
+    db = db_from_dict(db_np, P=2)
+    plan = plan_greedy([q], stats_of_db(db))
+    return db, plan
+
+
+class TestTracedExecutor:
+    def test_spans_recorded_and_untraced_identical(self):
+        db, plan = _tiny_setup()
+        env0, rep0 = Executor(dict(db), SimComm(2)).execute(plan)
+        tr = Tracer()
+        m = MetricRegistry()
+        env1, rep1 = Executor(dict(db), SimComm(2), tracer=tr,
+                              metrics=m).execute(plan)
+        assert env0["Z"].to_set() == env1["Z"].to_set()
+        assert all(r.spans == [] for r in rep0.records)
+        for r in rep1.records:
+            assert r.spans, "traced records must carry phase spans"
+            names = [sp.name for sp in r.spans[0].walk()]
+            assert names[0] == "ft.attempt"
+            assert "msj.probe" in names or "eval.reduce" in names
+            # spans nest inside the job slice after rebase/scale
+            for sp in r.spans[0].walk():
+                assert sp.t0 >= -1e-9
+        # executor published report-derived metrics into the registry
+        assert m.counter("msj.jobs").value == rep1.n_jobs
+        assert m.histogram("msj.job.wall").count == len(
+            [r for r in rep1.records if r.outcome == "ok"]
+        )
+
+    def test_disabled_tracer_records_nothing(self):
+        db, plan = _tiny_setup()
+        tr = Tracer(enabled=False)
+        _, rep = Executor(dict(db), SimComm(2), tracer=tr).execute(plan)
+        assert all(r.spans == [] for r in rep.records)
+
+
+# --------------------------------------------------------------------------
+# No-double-count replay regression (cancelled + tainted records)
+# --------------------------------------------------------------------------
+
+
+def _chaos_report() -> Report:
+    """Hand-built timeline with a speculation pair (winner + truncated
+    cancelled loser) and a zero-wall tainted record — the shapes that
+    historically double- or under-counted."""
+    recs = [
+        JobRecord(None, 0, 1.0, {}, start=0.0, end=1.0, slot=0),
+        JobRecord(None, 0, 5.0, {}, start=0.0, end=5.0, slot=1,
+                  outcome="failed"),
+        # clone dispatched at 1.0 on slot 0, wins at 3.5
+        JobRecord(None, 1, 2.5, {}, start=1.0, end=3.5, slot=0,
+                  attempt=1, speculative=True),
+        # original loser: wall truncated at the winner's end
+        JobRecord(None, 1, 1.5, {}, start=2.0, end=3.5, slot=1,
+                  attempt=0, cancelled=True, outcome="cancelled"),
+        JobRecord(None, 2, 0.0, {}, start=5.0, end=5.0, slot=-1,
+                  outcome="tainted"),
+    ]
+    return Report(recs)
+
+
+class TestReplayNoDoubleCount:
+    def test_slot_track_walls_sum_to_total_time(self):
+        rep = _chaos_report()
+        events = trace_events(rep)
+        job_evs = [e for e in events
+                   if e.get("ph") == "X" and e.get("cat") == "job"]
+        assert len(job_evs) == len(rep.records)
+        # exported walls, re-summed in the same round-major stable order
+        # Report.total_time uses, must thread identical float additions
+        walls = [e["args"]["wall"]
+                 for e in sorted(job_evs, key=lambda e: e["args"]["round"])]
+        assert sum(walls) == rep.total_time
+        assert rep.net_time_by_events(1) == rep.total_time
+        assert rep.net_time_by_events(None) == rep.net_time
+
+    def test_replay_from_export_bit_exact(self):
+        from repro.obs import report_from_trace
+
+        rep = _chaos_report()
+        doc = json.loads(json.dumps({"traceEvents": trace_events(rep)}))
+        rep2 = report_from_trace(doc)
+        assert rep2.total_time == rep.total_time
+        assert rep2.net_time == rep.net_time
+        for W in (None, 1, 2, 3):
+            assert rep2.net_time_by_events(W) == rep.net_time_by_events(W)
+
+
+# --------------------------------------------------------------------------
+# Bench regression gate
+# --------------------------------------------------------------------------
+
+_MSJ = {
+    "n_guard": 2048,
+    "msj_roofline": [
+        {"variant": "seed", "bytes_shuffled": 1000, "input_rows": 50,
+         "jobs": 5, "net_s": 0.5, "total_s": 1.0, "forward_cap": 256},
+    ],
+    "probe_kernel": [{"backend": "sorted", "n": 1024, "kw": 2, "ms": 10.0}],
+}
+
+_SERVE = {
+    "n_guard": 512,
+    "service_throughput": [
+        {"tenants": 2, "per_tenant": 1, "mode": "batched", "jobs": 4,
+         "msj_jobs": 2, "bytes_shuffled": 100, "warm_queries": 0,
+         "deduped": 0, "net_s": 1.0, "total_s": 1.0},
+    ],
+    "repeat_traffic": [
+        {"mode": "repeat_cached", "jobs": 8, "bytes_shuffled": 200,
+         "warm_queries": 5, "cold_queries": 3, "x_hits": 1, "plan_hits": 2,
+         "net_s": 2.0, "total_s": 2.0},
+    ],
+    "acceptance": {
+        "event_accounting_exact": True,
+        "straggler": {"bit_identical": True, "speedup": 1.4},
+    },
+}
+
+
+class TestRegressionGate:
+    def test_self_compare_passes(self):
+        assert regression.gate(copy.deepcopy(_MSJ), _MSJ) == []
+        assert regression.gate(copy.deepcopy(_SERVE), _SERVE) == []
+
+    def test_committed_baselines_self_compare(self):
+        for name in ("BENCH_msj.json", "BENCH_serve.json"):
+            base = regression.load(str(REPO / name))
+            assert regression.gate(copy.deepcopy(base), base) == [], name
+
+    def test_injected_timing_regression_fails(self):
+        bad = copy.deepcopy(_MSJ)
+        bad["msj_roofline"][0]["net_s"] *= 10
+        probs = regression.gate(bad, _MSJ)
+        assert len(probs) == 1 and "net_s regressed" in probs[0]
+        # within tolerance: no failure
+        ok = copy.deepcopy(_MSJ)
+        ok["msj_roofline"][0]["net_s"] *= 1 + regression.TIME_TOL / 2
+        assert regression.gate(ok, _MSJ) == []
+
+    def test_kernel_rows_get_wide_band(self):
+        # ms-scale micro-bench rows jitter 2x+; only order-of-magnitude
+        # drift fails them
+        noisy = copy.deepcopy(_MSJ)
+        noisy["probe_kernel"][0]["ms"] *= 2.5
+        assert regression.gate(noisy, _MSJ) == []
+        bad = copy.deepcopy(_MSJ)
+        bad["probe_kernel"][0]["ms"] *= 10
+        probs = regression.gate(bad, _MSJ)
+        assert len(probs) == 1 and "ms regressed" in probs[0]
+
+    def test_deterministic_drift_fails_exactly(self):
+        bad = copy.deepcopy(_SERVE)
+        bad["service_throughput"][0]["bytes_shuffled"] += 1
+        bad["repeat_traffic"][0]["warm_queries"] -= 1
+        probs = regression.gate(bad, _SERVE)
+        assert len(probs) == 2
+        assert all("exact match required" in p for p in probs)
+
+    def test_acceptance_flag_and_speedup_loss_fail(self):
+        bad = copy.deepcopy(_SERVE)
+        bad["acceptance"]["straggler"]["bit_identical"] = False
+        bad["acceptance"]["straggler"]["speedup"] = 0.8
+        probs = regression.gate(bad, _SERVE)
+        assert any("acceptance flag lost" in p for p in probs)
+        assert any("speedup lost" in p for p in probs)
+
+    def test_missing_row_and_incomparable_sizes(self):
+        cur = copy.deepcopy(_MSJ)
+        cur["msj_roofline"] = []
+        assert any("missing" in p for p in regression.gate(cur, _MSJ))
+        cur = copy.deepcopy(_MSJ)
+        cur["n_guard"] = 4096
+        assert "incomparable" in regression.gate(cur, _MSJ)[0]
+
+    def test_cli_exit_codes(self, tmp_path, capsys):
+        base = tmp_path / "base.json"
+        base.write_text(json.dumps(_MSJ))
+        cur = tmp_path / "cur.json"
+        bad = copy.deepcopy(_MSJ)
+        bad["msj_roofline"][0]["total_s"] *= 100
+        cur.write_text(json.dumps(bad))
+        with pytest.raises(SystemExit) as e:
+            regression.main(["--baseline", str(base), "--current", str(base)])
+        assert e.value.code == 0
+        with pytest.raises(SystemExit) as e:
+            regression.main(["--baseline", str(base), "--current", str(cur)])
+        assert e.value.code == 1
+
+
+# --------------------------------------------------------------------------
+# Service-layer metric plumbing (compat shim)
+# --------------------------------------------------------------------------
+
+
+class TestServiceMetricPlumbing:
+    def test_shared_registry_single_namespace(self):
+        from repro.service import SGFService, catalog_from_numpy
+
+        q = BSGF("Z", ("x", "y"), Atom("R", "x", "y"),
+                 all_of(Atom("S", "x"), Atom("T", "y")))
+        db_np = Q.gen_db([q], n_guard=96, n_cond=64)
+        svc = SGFService(catalog_from_numpy(db_np, P=2))
+        assert svc.cache.metrics is svc.metrics
+        assert svc.results.metrics is svc.metrics
+        svc.submit([q])
+        svc.tick()
+        svc.submit([q])
+        svc.tick()
+        c = svc.counters()
+        # legacy keys still served, now from the registry
+        assert c["warm_queries"] == 1 and c["cold_queries"] == 1
+        assert svc.metrics.counter("svc.tick.warm_queries").value == 1
+        assert svc.metrics.counter("svc.result_cache.query.hit").value == 1
+        assert c["query_hits"] == 1
+        # per-request tick latency histogram, surfaced as percentiles
+        assert svc.metrics.histogram("svc.tick.latency").count == 2
+        assert c["tick_latency_p99"] >= c["tick_latency_p50"] >= 0.0
+        # executor metrics landed in the same registry
+        assert svc.metrics.counter("msj.jobs").value > 0
+
+    def test_ftstats_compat(self):
+        from repro.ft.supervisor import FTStats
+
+        st = FTStats()
+        st.retries += 2
+        st.capacity_retries += 1
+        assert st.retries == 2
+        assert st.as_dict()["capacity_retries"] == 1
+        assert st.metrics.counter("ft.fault.reroutes").value == 2
+        assert "retries=2" in repr(st)
