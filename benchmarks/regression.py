@@ -84,13 +84,19 @@ def _check_rows(problems, label, base_rows, cur_rows, keyf, exact, timed,
 
 def _check_bools(problems, path, base, cur):
     """Every acceptance boolean the baseline achieved must hold; every
-    speedup ratio >= 1 in the baseline must stay >= 1."""
+    speedup ratio >= 1 in the baseline must stay >= 1; every key the
+    baseline recorded must exist in the fresh run — an absent key is a
+    hard failure, never a vacuous pass (a renamed or dropped acceptance
+    flag must not silently disable its gate)."""
     if isinstance(base, dict):
         if not isinstance(cur, dict):
             problems.append(f"{path}: missing from current run")
             return
         for k, v in base.items():
-            _check_bools(problems, f"{path}.{k}", v, cur.get(k))
+            if k not in cur:
+                problems.append(f"{path}.{k}: missing from current run")
+                continue
+            _check_bools(problems, f"{path}.{k}", v, cur[k])
         return
     if isinstance(base, bool) and base and cur is not True:
         problems.append(f"{path}: acceptance flag lost (True -> {cur!r})")

@@ -659,7 +659,7 @@ def chaos_soak(
 def observability_acceptance(
     *, P: int = DEFAULT_P, slots: int = 2, n_rows: int = 2048,
     n_cond: int = 512, inject: float = 5.0, seed: int = 0,
-    trace_path: str = "chaos_tick.trace.json",
+    trace_path: str = "benchmarks/artifacts/chaos_tick.trace.json",
 ) -> dict:
     """Part 6 (observability, DESIGN.md §14) — one chaos tick, traced and
     exported to Perfetto JSON.
@@ -684,9 +684,10 @@ def observability_acceptance(
     from repro.core.planner import (
         MSJJob as MSJ, Plan, Round, pooled_semijoins,
     )
+    from repro.analysis import errors as audit_errors
     from repro.obs import (
-        Tracer, phase_breakdown, report_from_trace, validate_trace,
-        write_trace,
+        Tracer, audit_trace, phase_breakdown, report_from_trace,
+        validate_trace, write_trace,
     )
     from repro.obs.metrics import MetricRegistry
     from repro.obs.perfetto import TAINT_TID
@@ -731,10 +732,10 @@ def observability_acceptance(
     stats = stats_of_db(db)
     clean = [q.name for q in shorts] + ["D0", "E0"]
 
-    def measure(tracer, metrics=None):
+    def measure(tracer, metrics=None, sanitize=False):
         cfg = ExecutorConfig(execution_mode="async", dag_edges="relations",
                              speculate=True, spec_factor=1.5,
-                             fail_policy="isolate")
+                             fail_policy="isolate", sanitize=sanitize)
         ex = Executor(dict(db), SimComm(P), cfg, tracer=tracer,
                       metrics=metrics)
         sched = SlotScheduler(ex, slots=slots, stats=stats)
@@ -762,11 +763,28 @@ def observability_acceptance(
     assert untraced_identical, \
         "tracing must not change outputs (tracer=None bit-identity)"
 
+    # DESIGN.md §15: the same chaos tick (speculation + isolate + taint)
+    # under the happens-before sanitizer — it raises SanitizerError on
+    # any unordered conflicting pair, so merely completing means clean;
+    # outputs must stay bit-identical (sanitizing is observation too)
+    env_s, _ = measure(None, sanitize=True)
+    sanitize_identical = all(
+        np.array_equal(np.asarray(env_s[n].data), np.asarray(env0[n].data))
+        and np.array_equal(np.asarray(env_s[n].valid),
+                           np.asarray(env0[n].valid))
+        for n in clean
+    )
+    assert sanitize_identical, \
+        "sanitize=True must not change outputs (bit-identity)"
+
     write_trace(trace_path, rep, title="chaos-tick", metrics=metrics)
     with open(trace_path) as f:
         doc = json.load(f)
     problems = validate_trace(doc)
     assert not problems, f"trace schema validation failed: {problems}"
+    audit = audit_trace(doc)
+    assert not audit_errors(audit), \
+        f"offline trace audit failed: {audit_errors(audit)[:3]}"
     events = doc["traceEvents"]
     job_tids = {e["tid"] for e in events
                 if e.get("ph") == "X" and e.get("cat") == "job"}
@@ -799,6 +817,9 @@ def observability_acceptance(
         "trace_schema_valid": True,
         "replay_bit_exact": True,
         "untraced_bit_identical": bool(untraced_identical),
+        "sanitize_clean": True,
+        "sanitize_bit_identical": bool(sanitize_identical),
+        "trace_audit_clean": True,
     }
 
 

@@ -84,7 +84,8 @@ for name, agg in sorted(phase_breakdown(report).items()):
 
 # the same timeline as a Chrome/Perfetto trace: per-slot tracks, nested
 # phase slices, flow arrows for DAG edges — load it at ui.perfetto.dev
-trace_path = write_trace("sgf_service.trace.json", report, title="tick-1",
+trace_path = write_trace("benchmarks/artifacts/sgf_service.trace.json",
+                         report, title="tick-1",
                          metrics=svc.metrics)
 print(f"exported trace: {trace_path}")
 

@@ -1,0 +1,36 @@
+"""Static plan verification + dynamic schedule sanitizing (DESIGN.md §15).
+
+``repro.analysis`` independently re-checks the obligations the planner
+and executor rely on: :mod:`~repro.analysis.verifier` re-derives job
+conflicts from first principles and demands a covering DAG path for
+every pair touching a common relation with a write;
+:mod:`~repro.analysis.sanitizer` clocks the schedules that actually ran
+(online behind ``ExecutorConfig.sanitize=True``, offline over a Report
+or an exported Perfetto trace).  ``python -m repro.analysis --corpus``
+runs the verifier over the bench/service plan corpus as a CI gate.
+"""
+from repro.analysis.sanitizer import (
+    SanitizerError,
+    ScheduleSanitizer,
+    sanitize_report,
+    sanitize_timeline,
+)
+from repro.analysis.verifier import (
+    Finding,
+    derive_accesses,
+    errors,
+    verify_nodes,
+    verify_plan,
+)
+
+__all__ = [
+    "Finding",
+    "SanitizerError",
+    "ScheduleSanitizer",
+    "derive_accesses",
+    "errors",
+    "sanitize_report",
+    "sanitize_timeline",
+    "verify_nodes",
+    "verify_plan",
+]

@@ -460,6 +460,15 @@ class ExecutorConfig:
     #: later jobs launch); the overflow check still syncs the stats scalar,
     #: so exact fault detection is unaffected.
     sync_per_job: bool = True
+    #: happens-before schedule sanitizer (repro.analysis.sanitizer,
+    #: DESIGN.md §15): clock every JobRecord the async walk emits —
+    #: speculative attempts, failed/tainted records, narrow_job
+    #: remainders included — and raise SanitizerError on any conflicting
+    #: pair the DAG left unordered or any timeline-shape violation.
+    #: Outputs are untouched (the sanitizer only observes); zero overhead
+    #: when False.  Async mode only — only the ready-queue walk has the
+    #: per-record event timeline the clocks are built from.
+    sanitize: bool = False
 
     def __post_init__(self):
         if self.probe_backend not in PROBE_BACKENDS:
@@ -481,6 +490,51 @@ class ExecutorConfig:
             raise ValueError(
                 f"unknown fail policy {self.fail_policy!r}; "
                 f"valid names: {', '.join(FAIL_POLICIES)}"
+            )
+        # incoherent combinations are rejected here, at construction —
+        # a flag that would be silently ignored mid-run is a config bug
+        # the user should see at setup time, not a no-op
+        if self.execution_mode == "waves":
+            if self.speculate:
+                raise ValueError(
+                    "speculate=True requires execution_mode='async': the "
+                    "barrier-wave walk admits whole waves and has no "
+                    "mid-wave slot to clone a straggler onto"
+                )
+            if self.fail_policy == "isolate":
+                raise ValueError(
+                    "fail_policy='isolate' requires execution_mode='async': "
+                    "the barrier-wave walk has no per-job taint sweep"
+                )
+            if self.shrink_on_shard_loss:
+                raise ValueError(
+                    "shrink_on_shard_loss=True requires "
+                    "execution_mode='async': waves re-admit W jobs per "
+                    "barrier and never consult the shrunken slot list"
+                )
+            if self.sanitize:
+                raise ValueError(
+                    "sanitize=True requires execution_mode='async': only "
+                    "the ready-queue walk emits the per-record event "
+                    "timelines the happens-before clocks are built from"
+                )
+        if self.spec_factor <= 0.0:
+            raise ValueError(
+                f"spec_factor must be > 0 (got {self.spec_factor}): the "
+                "speculation deadline is spec_factor x the modeled wall"
+            )
+        if self.cap_slack <= 0.0:
+            raise ValueError(
+                f"cap_slack must be > 0 (got {self.cap_slack}): it scales "
+                "the forward-shuffle capacity bound"
+            )
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0 (got {self.max_retries})"
+            )
+        if self.bloom_bits < 0:
+            raise ValueError(
+                f"bloom_bits must be >= 0 (got {self.bloom_bits})"
             )
 
 
@@ -553,6 +607,9 @@ class Executor:
         self.lineage: dict[str, Relation] = dict(db) if lineage is None else dict(lineage)
         #: dispatch log of the last :meth:`execute` call.
         self.schedule: list[ScheduledJob] = []
+        #: findings of the last sanitized async walk (config.sanitize);
+        #: populated just before SanitizerError is raised, [] on a clean run
+        self.last_sanitize: list = []
         #: fault-tolerance counters of the last :meth:`execute` call
         #: (overflow retries, injected-failure reroutes, speculative
         #: clone dispatches, shard-loss recoveries) — what the
@@ -735,6 +792,7 @@ class Executor:
         end: float,
         report: "Report",
         end_at: dict[int, float],
+        san=None,
     ) -> None:
         """Propagate a failure's taint through the not-yet-dispatched jobs
         (DESIGN.md §13): any pending job reading a tainted relation is
@@ -756,13 +814,16 @@ class Executor:
                     continue  # reads overlap but no unit touches the taint
                 changed = True
                 rels |= job_writes(dropped)
-                report.records.append(
-                    JobRecord(dropped, tn.round_idx, 0.0, {}, 0, "none",
-                              end, end, -1, outcome="tainted")
-                )
+                taint_rec = JobRecord(dropped, tn.round_idx, 0.0, {}, 0,
+                                      "none", end, end, -1, outcome="tainted")
+                report.records.append(taint_rec)
+                if san is not None:
+                    san.observe(taint_rec, ti, tn.deps)
                 if kept is None:
                     end_at[ti] = end
                     del pending[ti]
+                    if san is not None:
+                        san.complete(ti, end)
                 else:
                     pending[ti] = replace(
                         tn, job=kept, reads=job_reads(kept),
@@ -852,6 +913,7 @@ class Executor:
         on_job: Callable | None = None,
         max_restarts: int = 0,
         wall_scale: Callable | None = None,
+        nodes: tuple | None = None,
     ) -> tuple[dict, Report]:
         """Run a whole plan under ``config.execution_mode``.
 
@@ -881,10 +943,19 @@ class Executor:
         ``JobRecord.start/end/slot`` timeline is the virtual W-slot
         schedule assembled from the measured walls, which
         ``Report.event_makespan()`` / ``net_time_by_events`` price.
+
+        ``nodes`` overrides the job DAG the walk runs (default:
+        ``job_dag(plan, config.dag_edges)``) — the seam the mutation
+        differential tests use to execute a deliberately corrupted DAG
+        and show that what the verifier flags really does race
+        (DESIGN.md §15).
         """
         if slots is not None and slots < 1:
             raise ValueError(f"slots must be >= 1 or None (unbounded), got {slots}")
-        nodes = job_dag(plan, edges=self.config.dag_edges)
+        if nodes is None:
+            nodes = job_dag(plan, edges=self.config.dag_edges)
+        else:
+            nodes = tuple(nodes)
         if est is None:
             est = {n.idx: 0.0 for n in nodes}
         self.schedule = []
@@ -947,6 +1018,14 @@ class Executor:
         identities are unaffected by duplicate attempts).
         """
         report = Report()
+        san = None
+        self.last_sanitize = []
+        if self.config.sanitize:
+            # lazy import: the analysis layer sits above core and is only
+            # paid for when the sanitizer is actually on
+            from repro.analysis.sanitizer import ScheduleSanitizer
+
+            san = ScheduleSanitizer(nodes)
         n_slots = len(nodes) if slots is None else max(1, min(slots, len(nodes)))
         slot_free = [0.0] * max(n_slots, 1)
         end_at: dict[int, float] = {}
@@ -1017,6 +1096,8 @@ class Executor:
                 rec = JobRecord(dropped, node.round_idx, wall, {}, attempts,
                                 "none", start, end, s, outcome="failed")
                 report.records.append(rec)
+                if san is not None:
+                    san.observe(rec, node.idx, node.deps)
                 self.schedule.append(
                     ScheduledJob(node.idx, node.round_idx, s, start, end,
                                  est[node.idx], 0)
@@ -1025,6 +1106,8 @@ class Executor:
                 if kept is None:
                     end_at[node.idx] = end
                     del pending[node.idx]
+                    if san is not None:
+                        san.complete(node.idx, end)
                 else:
                     pending[node.idx] = replace(
                         node, job=kept, reads=job_reads(kept),
@@ -1039,7 +1122,8 @@ class Executor:
                     t_sweep = time.perf_counter()
                     n0 = len(report.records)
                     self._taint_sweep(
-                        pending, job_writes(dropped) | blamed, end, report, end_at
+                        pending, job_writes(dropped) | blamed, end, report,
+                        end_at, san,
                     )
                     rec.spans.append(Span(
                         "ft.taint.sweep", "phase", wall,
@@ -1048,7 +1132,8 @@ class Executor:
                     ))
                 else:
                     self._taint_sweep(
-                        pending, job_writes(dropped) | blamed, end, report, end_at
+                        pending, job_writes(dropped) | blamed, end, report,
+                        end_at, san,
                     )
                 maybe_shrink(recov0)
                 continue
@@ -1121,6 +1206,8 @@ class Executor:
                 ratios.append(win_wall / est[node.idx])
             for r in recs:
                 report.records.append(r)
+                if san is not None:
+                    san.observe(r, node.idx, node.deps)
                 self.schedule.append(
                     ScheduledJob(node.idx, node.round_idx, r.slot, r.start,
                                  r.end, est[node.idx], r.attempt)
@@ -1128,7 +1215,15 @@ class Executor:
             slot_free[s] = rec.end
             end_at[node.idx] = win_end
             del pending[node.idx]
+            if san is not None:
+                san.complete(node.idx, win_end)
             maybe_shrink(recov0)
+        if san is not None:
+            from repro.analysis.sanitizer import SanitizerError
+
+            self.last_sanitize = san.finish()
+            if self.last_sanitize:
+                raise SanitizerError(self.last_sanitize)
         return self.env, report
 
     def _execute_waves(

@@ -232,6 +232,71 @@ def job_dag(plan: Plan, edges: str = "relations") -> tuple[JobNode, ...]:
     return tuple(nodes)
 
 
+def conflict_rels(
+    reads_a: frozenset[str],
+    writes_a: frozenset[str],
+    reads_b: frozenset[str],
+    writes_b: frozenset[str],
+) -> frozenset[str]:
+    """Relations on which two jobs conflict: a common relation that at
+    least one side writes (RAW, WAR or WAW).  Read-read sharing is not a
+    conflict.  This is the reference relation the verifier and the
+    schedule sanitizer both check edge coverage against (DESIGN.md §15)."""
+    return (writes_a & (reads_b | writes_b)) | (reads_a & writes_b)
+
+
+def conflicting_pairs(
+    nodes: Sequence[JobNode],
+) -> list[tuple[int, int, frozenset[str]]]:
+    """All job pairs ``(i, j)`` with ``i < j`` that conflict, with the
+    conflicting relations.  O(n^2) by construction — this is the *spec*,
+    independent of the one-pass last-writer bookkeeping in
+    :func:`job_dag`, so a bug there cannot hide here."""
+    out: list[tuple[int, int, frozenset[str]]] = []
+    for a in nodes:
+        for b in nodes:
+            if a.idx >= b.idx:
+                continue
+            rels = conflict_rels(a.reads, a.writes, b.reads, b.writes)
+            if rels:
+                out.append((a.idx, b.idx, rels))
+    return out
+
+
+def dag_closure(nodes: Sequence[JobNode]) -> dict[int, frozenset[int]]:
+    """Transitive predecessor sets of a job DAG: ``closure[j]`` is every
+    node index reachable from ``j`` by following ``deps`` edges.  Nodes
+    are processed in index order, so forward (contract-violating) deps
+    simply don't close — the verifier reports them separately."""
+    closure: dict[int, frozenset[int]] = {}
+    for n in sorted(nodes, key=lambda n: n.idx):
+        anc: set[int] = set()
+        for d in n.deps:
+            anc.add(d)
+            anc |= closure.get(d, frozenset())
+        closure[n.idx] = frozenset(anc)
+    return closure
+
+
+def uncovered_conflicts(
+    nodes: Sequence[JobNode],
+    closure: dict[int, frozenset[int]] | None = None,
+) -> list[tuple[int, int, frozenset[str]]]:
+    """Edge-cover query: conflicting pairs with **no** covering dependency
+    path in the DAG.  Any entry is a latent data race — the async ready
+    queue is free to run the pair in either order or concurrently.  Pairs
+    inside one round are *always* uncovered (every DAG edge crosses a
+    round boundary); they are returned too and the verifier classifies
+    them as IR-contract violations."""
+    if closure is None:
+        closure = dag_closure(nodes)
+    return [
+        (i, j, rels)
+        for i, j, rels in conflicting_pairs(nodes)
+        if i not in closure.get(j, frozenset())
+    ]
+
+
 def taint_closure(
     nodes: Iterable[JobNode], tainted_rels: Iterable[str]
 ) -> tuple[frozenset[int], frozenset[str]]:

@@ -24,6 +24,7 @@ from repro.obs.metrics import (  # noqa: F401
     counter_attr,
 )
 from repro.obs.perfetto import (  # noqa: F401
+    audit_trace,
     phase_breakdown,
     report_from_trace,
     trace_events,

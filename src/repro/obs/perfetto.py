@@ -19,6 +19,7 @@ display values and are *not* used for reconstruction.
 from __future__ import annotations
 
 import json
+import os
 from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:  # imported lazily at runtime: executor traces via
@@ -47,7 +48,7 @@ def _tid(rec: JobRecord) -> int:
 
 
 def _job_args(rec: JobRecord) -> dict:
-    return {
+    args = {
         "round": rec.round_idx,
         "wall": rec.wall,
         "start": rec.start,
@@ -61,6 +62,15 @@ def _job_args(rec: JobRecord) -> dict:
         "bytes_fwd": int(rec.stats.get("bytes_fwd", 0)),
         "bytes_bwd": int(rec.stats.get("bytes_bwd", 0)),
     }
+    if rec.job is not None:
+        # relation access sets make the trace a self-contained audit
+        # subject: the offline sanitizer (audit_trace) recovers conflicts
+        # from these after the job objects are gone
+        from repro.core.planner import job_reads, job_writes
+
+        args["reads"] = sorted(job_reads(rec.job))
+        args["writes"] = sorted(job_writes(rec.job))
+    return args
 
 
 def trace_events(report: Report, *, title: str = "msj") -> list[dict]:
@@ -186,6 +196,9 @@ def write_trace(path: str, report: Report, *, title: str = "msj",
                  "displayTimeUnit": "ms"}
     if metrics is not None:
         doc["otherData"] = {"metrics": metrics.snapshot()}
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
     with open(path, "w") as f:
         json.dump(doc, f)
     return path
@@ -341,6 +354,46 @@ def report_from_trace(trace) -> Report:
             )
         )
     return Report(recs)
+
+
+def audit_trace(trace) -> list:
+    """Offline-sanitize an exported trace (DESIGN.md §15); returns
+    :class:`~repro.analysis.verifier.Finding`s (empty == clean).
+
+    The trace is first schema-validated (:func:`validate_trace`; problems
+    become ``trace-schema`` findings), then its timeline is rebuilt via
+    :func:`report_from_trace` and handed to the happens-before
+    sanitizer's offline mode: conflicting records — relation access sets
+    recovered from the ``reads``/``writes`` the exporter embeds in each
+    job slice's ``args`` — must occupy disjoint intervals of the virtual
+    timeline, slots must be exclusive, and every record must satisfy
+    ``end == start + wall``.  Traces exported before the access sets
+    existed still get the timeline-shape checks (conflicts are just
+    undetectable without ``reads``/``writes``).  Speculative attempt
+    pairs are identified by (name, round, accesses) — first-completion
+    -wins pairs are exempt from the race check, as in the online mode.
+    """
+    from repro.analysis.sanitizer import sanitize_timeline
+    from repro.analysis.verifier import Finding
+
+    findings = [
+        Finding("error", "trace-schema", -1, (), p)
+        for p in validate_trace(trace)
+    ]
+    report = report_from_trace(trace)
+    events = trace["traceEvents"] if isinstance(trace, dict) else trace
+    accesses: list[tuple[frozenset, frozenset]] = []
+    keys: list = []
+    for ev in events:
+        if ev.get("ph") != "X" or ev.get("cat") != "job":
+            continue
+        a = ev["args"]
+        reads = frozenset(a.get("reads", ()))
+        writes = frozenset(a.get("writes", ()))
+        accesses.append((reads, writes))
+        keys.append((ev.get("name"), a.get("round"), reads, writes))
+    findings.extend(sanitize_timeline(report.records, accesses, keys))
+    return findings
 
 
 def phase_breakdown(report: Report) -> dict[str, dict]:

@@ -131,6 +131,20 @@ class QuarantinedError(RuntimeError):
         self.until = until
 
 
+class PlanVerificationError(RuntimeError):
+    """A fused plan failed the pre-execution static verifier (DESIGN.md
+    §15): it types wrong, reads something nothing produces, or leaves a
+    conflicting job pair uncovered by the DAG.  Raised before the plan
+    reaches the scheduler; ``findings`` carries the diagnostics."""
+
+    def __init__(self, findings):
+        self.findings = list(findings)
+        lines = "\n".join(f"  {f}" for f in self.findings)
+        super().__init__(
+            f"plan verifier: {len(self.findings)} error finding(s)\n{lines}"
+        )
+
+
 @dataclass(frozen=True)
 class RetryPolicy:
     """Per-request retry budget + tenant quarantine policy (DESIGN.md §13).
@@ -215,6 +229,10 @@ class SGFService:
     failed_requests = counter_attr("svc.req.failed")
     retries_scheduled = counter_attr("svc.req.retries")
     quarantines = counter_attr("svc.tenant.quarantines")
+    #: pre-execution plan-verifier findings (repro.analysis, DESIGN.md
+    #: §15): every finding on a fused plan about to execute counts here;
+    #: error-severity findings additionally abort the tick.
+    verify_findings = counter_attr("svc.verify.findings")
 
     def __init__(
         self,
@@ -499,6 +517,7 @@ class SGFService:
         local_names = set(warm) | {q.name for q in cold}
         plan, injected = self._trim_plan(plan, local_names)
         info["x_injected"] = len(injected)
+        self._verify_plan(plan, warm, injected)
         # injected X relations must be visible to the scheduler's LPT cost
         # estimates; ``stats`` is tick-private (the planner lambda took its
         # own copy) and the scheduler copies again before mutating
@@ -531,6 +550,28 @@ class SGFService:
         tainted = report.tainted_relations()
         self._insert_results(plan, cold, meta, local_names, env, tainted)
         return env, report
+
+    def _verify_plan(self, plan: Plan, warm: dict, injected: dict) -> None:
+        """Statically verify a fused plan immediately before execution
+        (repro.analysis, DESIGN.md §15): the schema is the catalog plus
+        this tick's warm/injected materializations, so dangling reads and
+        arity drift are errors, and every conflicting job pair must be
+        covered by a DAG edge under the executor's edge mode.  All
+        findings count into ``svc.verify.findings``; error-severity
+        findings abort the tick (a racy or ill-typed plan must not reach
+        the scheduler — the tick's requests then retry with backoff)."""
+        from repro.analysis import errors as _errors, verify_plan
+
+        schema = {n: r.arity for n, r in self.catalog.db().items()}
+        schema.update({n: r.arity for n, r in warm.items()})
+        schema.update({n: r.arity for n, r in injected.items()})
+        findings = verify_plan(
+            plan, schema=schema, edges=self.config.dag_edges, canonical=True
+        )
+        self.verify_findings += len(findings)
+        errs = _errors(findings)
+        if errs:
+            raise PlanVerificationError(errs)
 
     def _readmit_delayed(self) -> None:
         """Move backing-off requests whose ``retry_after`` has arrived back

@@ -1,7 +1,67 @@
+"""Shared fixtures + plan-generation strategies.
+
+The hypothesis strategies here are shared by the job-DAG property suite
+(``test_job_dag.py``) and the verifier/sanitizer mutation suite
+(``test_analysis.py``); hypothesis itself is an optional test dep, so
+everything is guarded behind ``HAVE_HYPOTHESIS``.
+"""
 import numpy as np
 import pytest
+
+from repro.core.algebra import SGF, Atom, BSGF, all_of
+
+try:
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def dag_ancestors(nodes) -> dict[int, frozenset]:
+    """Transitive predecessor sets of a job DAG (deps point backwards) —
+    the test-side reference, independent of ``planner.dag_closure``."""
+    anc: dict[int, frozenset] = {}
+    for n in nodes:  # deps have smaller idx, so one forward pass suffices
+        anc[n.idx] = frozenset().union(
+            *({d} | anc[d] for d in n.deps), frozenset()
+        )
+    return anc
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def sgfs(draw):
+        """Random SGF batches: guards from base relations or earlier
+        outputs, conditions over base unary atoms or earlier outputs."""
+        n = draw(st.integers(1, 5))
+        queries: list[BSGF] = []
+        for i in range(n):
+            gpick = draw(st.integers(0, 2 + i))
+            guard = (
+                Atom(f"G{gpick}", "x", "y")
+                if gpick < 3
+                else Atom(queries[gpick - 3].name, "x", "y")
+            )
+            n_atoms = draw(st.integers(1, 3))
+            atoms = []
+            for _ in range(n_atoms):
+                apick = draw(st.integers(0, 3 + i))
+                atoms.append(
+                    Atom(f"S{apick}", "x")
+                    if apick < 4
+                    else Atom(queries[apick - 4].name, "x", "y")
+                )
+            out_vars = ("x", "y") if draw(st.booleans()) else ("x",)
+            # outputs used as guards/atoms above assume arity 2; force it
+            # for all but the last query so references stay well-typed
+            if i < n - 1:
+                out_vars = ("x", "y")
+            queries.append(BSGF(f"Q{i}", out_vars, guard, all_of(*atoms)))
+        return SGF(queries)

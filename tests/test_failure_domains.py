@@ -94,11 +94,10 @@ def test_taint_closure_empty_seed_taints_nothing():
 def test_fail_policy_validated_and_waves_incompatible():
     with pytest.raises(ValueError, match="abort, isolate"):
         ExecutorConfig(fail_policy="bogus")
-    qs = Q.make_queries("A3")
-    db = db_from_dict(Q.gen_db(qs, n_guard=32, n_cond=32), P=2)
-    cfg = ExecutorConfig(fail_policy="isolate", execution_mode="waves")
+    # incoherent combos now fail eagerly at construction (DESIGN.md §15),
+    # not silently mid-run — the executor never sees the config
     with pytest.raises(ValueError, match="isolate"):
-        Executor(db, SimComm(2), cfg).execute(plan_par(qs))
+        ExecutorConfig(fail_policy="isolate", execution_mode="waves")
 
 
 def test_isolate_permanent_fault_spares_independent_query():

@@ -36,9 +36,13 @@ from repro.service import SGFService, catalog_from_numpy
 try:
     from hypothesis import given, settings, strategies as st
 
+    from conftest import sgfs
+
     HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
+
+from conftest import dag_ancestors
 
 P = 2
 
@@ -154,36 +158,6 @@ def _check_dag_contracts(plan: Plan) -> None:
 
 if HAVE_HYPOTHESIS:
 
-    @st.composite
-    def sgfs(draw):
-        """Random SGF batches: guards from base relations or earlier
-        outputs, conditions over base unary atoms or earlier outputs."""
-        n = draw(st.integers(1, 5))
-        queries: list[BSGF] = []
-        for i in range(n):
-            gpick = draw(st.integers(0, 2 + i))
-            guard = (
-                Atom(f"G{gpick}", "x", "y")
-                if gpick < 3
-                else Atom(queries[gpick - 3].name, "x", "y")
-            )
-            n_atoms = draw(st.integers(1, 3))
-            atoms = []
-            for _ in range(n_atoms):
-                apick = draw(st.integers(0, 3 + i))
-                atoms.append(
-                    Atom(f"S{apick}", "x")
-                    if apick < 4
-                    else Atom(queries[apick - 4].name, "x", "y")
-                )
-            out_vars = ("x", "y") if draw(st.booleans()) else ("x",)
-            # outputs used as guards/atoms above assume arity 2; force it
-            # for all but the last query so references stay well-typed
-            if i < n - 1:
-                out_vars = ("x", "y")
-            queries.append(BSGF(f"Q{i}", out_vars, guard, all_of(*atoms)))
-        return SGF(queries)
-
     @given(
         sgf=sgfs(),
         strategy=st.sampled_from(["parunit", "sequnit", "one_round"]),
@@ -211,16 +185,6 @@ def test_paper_families_dag_contracts():
         _check_dag_contracts(plan_sgf(SGF(Q.make_queries(qid)), "parunit"))
 
 
-def _closure(nodes) -> dict[int, frozenset]:
-    """Transitive predecessor sets of a job DAG (deps point backwards)."""
-    anc: dict[int, frozenset] = {}
-    for n in nodes:  # deps have smaller idx, so one forward pass suffices
-        anc[n.idx] = frozenset().union(
-            *({d} | anc[d] for d in n.deps), frozenset()
-        )
-    return anc
-
-
 def test_relation_edges_are_strictly_finer_for_independent_chains():
     """C3 sequnit: Z4's side branch shares no relations with the Z1-Z3
     chain, so relation edges free it from the chain's rounds entirely.
@@ -230,7 +194,7 @@ def test_relation_edges_are_strictly_finer_for_independent_chains():
     plan = plan_sgf(Q.make_sgf("C3"), "sequnit")
     rel = job_dag(plan, "relations")
     strata = job_dag(plan, "strata")
-    c_rel, c_strata = _closure(rel), _closure(strata)
+    c_rel, c_strata = dag_ancestors(rel), dag_ancestors(strata)
     for i in c_rel:
         assert c_rel[i] <= c_strata[i]
     assert sum(map(len, c_rel.values())) < sum(map(len, c_strata.values()))

@@ -341,6 +341,22 @@ class TestRegressionGate:
         assert any("acceptance flag lost" in p for p in probs)
         assert any("speedup lost" in p for p in probs)
 
+    def test_absent_acceptance_key_is_hard_failure(self):
+        # a dropped/renamed key must fail the gate, not vacuously pass —
+        # regardless of the baseline value's type (bool, number, dict)
+        for key in ("event_accounting_exact", "straggler"):
+            bad = copy.deepcopy(_SERVE)
+            del bad["acceptance"][key]
+            probs = regression.gate(bad, _SERVE)
+            assert any(
+                f"acceptance.{key}: missing from current run" in p
+                for p in probs
+            ), (key, probs)
+        bad = copy.deepcopy(_SERVE)
+        del bad["acceptance"]["straggler"]["speedup"]  # non-bool leaf
+        probs = regression.gate(bad, _SERVE)
+        assert any("speedup: missing from current run" in p for p in probs)
+
     def test_missing_row_and_incomparable_sizes(self):
         cur = copy.deepcopy(_MSJ)
         cur["msj_roofline"] = []
