@@ -29,6 +29,14 @@ next to many short ones.  Barrier waves stall both slots on the
 straggler; the ready-queue executor backfills the freed slot, so its net
 time must come out strictly below (DESIGN.md §11).
 
+Part 6 (overlap ladder) — the same W=2 discipline for the forward
+exchange (DESIGN.md §16): probe-heavy fused jobs run inline vs under
+``ExecutorConfig.overlap``, where each job's count exchange + forward
+``all_to_all`` is a transfer sub-node on the dedicated comm track,
+double-buffered under the previous job's probe.  Overlapped net time
+must come out strictly below inline with outputs bit-identical and
+every forward exchange after the first fully hidden behind compute.
+
 Part 5 (chaos soak) — a fault_rate × shard-loss × quarantine ladder over
 a multi-tenant service under ``fail_policy="isolate"``: one poison tenant
 whose jobs raise blamed PermanentFaults, transient faults, and
@@ -359,6 +367,134 @@ def straggler(
         "async_net_time": round(nets["async"], 4),
         "wave_net_time": round(nets["waves"], 4),
         "speedup": round(nets["waves"] / max(nets["async"], 1e-9), 3),
+        "bit_identical": True,
+    }
+
+
+def overlap_straggler(
+    *, P: int = 2, slots: int = 2, n_jobs: int = 8,
+    n_guard: int = 6144, n_cond: int = 2048, domain: int = 1 << 16,
+    seed: int = 0,
+) -> dict:
+    """W≥2 ladder for the shuffle/compute overlap (DESIGN.md §16).
+
+    ``n_jobs`` fused probe-heavy MSJ jobs (``n_guard``-row guards, four
+    equations each over shared ``n_cond``-row conditionals) share one
+    round.  Inline execution pays every forward exchange on the cluster
+    slots; under ``ExecutorConfig.overlap`` each job's exchange runs as a
+    transfer sub-node on the dedicated comm track, double-buffered so
+    shard k+1's shuffle rides under shard k's probe.  Asserted: outputs
+    bit-identical, overlapped net time strictly below inline, and every
+    forward exchange after the pipeline-filling first one *fully* hidden
+    behind concurrent compute (its comm-track slice is covered by the
+    work slots' busy intervals — the hidden-bytes accounting below).
+
+    The dense probe backend over a wide value domain (and few shards, so
+    per-shard probe volume stays high) keeps the probe genuinely
+    compute-bound on this host — compute ≈ 2.4x the exchange wall, the
+    regime the overlap exists for.  At compute < W x transfer the single
+    comm track starves the work slots and overlap rightly loses; that is
+    a property of the workload, not a scheduling bug.
+    """
+    from repro.core.executor import COMM_SLOT
+    from repro.core.planner import MSJJob as MSJ, Plan, Round, pooled_semijoins
+
+    rng = np.random.default_rng(seed)
+    qs, db_np, fused_jobs = [], {}, []
+    for r in "STUV":
+        db_np[r] = rng.integers(0, domain, (n_cond, 1)).astype(np.int32)
+    for i in range(n_jobs):
+        q = BSGF(f"Z{i}", XYZW, Atom(f"G{i}", *XYZW),
+                 all_of(*[Atom(r, "x") for r in "STUV"]))
+        qs.append(q)
+        db_np[f"G{i}"] = rng.integers(0, domain, (n_guard, 4)).astype(np.int32)
+        sjs, _ = pooled_semijoins([q])
+        fused_jobs.append(MSJ(tuple(sjs), fused=(q,)))
+    plan = Plan((Round(tuple(fused_jobs)),))
+    db = db_from_dict(db_np, P=P)
+    stats = stats_of_db(db)
+
+    def measure(ov):
+        # xfer_buffers = W + 1: one buffer per running compute plus one
+        # in flight on the comm track — the default double buffer is the
+        # W=1 shape and would leave no slack to prefetch under W computes
+        sched = SlotScheduler(
+            Executor(dict(db), SimComm(P),
+                     ExecutorConfig(overlap=ov, probe_backend="dense",
+                                    xfer_buffers=slots + 1)),
+            slots=slots, stats=stats,
+        )
+        env, rep = sched.execute(plan)
+        _check_events(rep)
+        return {q.name: env[q.name].to_set() for q in qs}, rep
+
+    def hidden_accounting(rep):
+        """(total fwd bytes, fwd bytes hidden under compute, tail fully
+        hidden?) over the overlapped virtual timeline."""
+        xfers = sorted(
+            (r for r in rep.records if r.slot == COMM_SLOT),
+            key=lambda r: r.start,
+        )
+        busy: list[list[float]] = []
+        for s, e in sorted(
+            (r.start, r.end) for r in rep.records if r.slot != COMM_SLOT
+        ):
+            if busy and s <= busy[-1][1]:
+                busy[-1][1] = max(busy[-1][1], e)
+            else:
+                busy.append([s, e])
+
+        def covered(s, e):
+            return sum(max(0.0, min(e, be) - max(s, bs)) for bs, be in busy)
+
+        total = hidden = 0.0
+        tail_hidden = True
+        for k, r in enumerate(xfers):
+            b = float(r.stats.get("bytes_fwd", 0))
+            dur = r.end - r.start
+            cov = covered(r.start, r.end)
+            total += b
+            if k == 0:
+                continue  # nothing to hide the pipeline-filling shuffle under
+            hidden += b * (cov / dur if dur > 0.0 else 1.0)
+            if cov < dur - 1e-9:
+                tail_hidden = False
+        tail_bytes = total - float(xfers[0].stats.get("bytes_fwd", 0))
+        return total, hidden, tail_bytes, tail_hidden
+
+    for ov in (False, True):  # warm jit caches before timing
+        measure(ov)
+    # one-off wall-clock hiccups can erase the scheduling margin or poke a
+    # transfer slice out from under compute; re-measure before failing
+    for attempt in range(3):
+        outs, nets, reps = {}, {}, {}
+        for ov in (False, True):
+            outs[ov], reps[ov] = measure(ov)
+            nets[ov] = reps[ov].event_makespan()
+        assert outs[True] == outs[False], (
+            "overlap ladder: overlapped and inline outputs must be bit-identical"
+        )
+        total, hidden, tail_bytes, tail_hidden = hidden_accounting(reps[True])
+        if nets[True] < nets[False] and tail_hidden:
+            break
+    assert nets[True] < nets[False], (
+        f"overlapped net {nets[True]:.4f}s must be strictly below inline "
+        f"net {nets[False]:.4f}s on the W={slots} overlap ladder"
+    )
+    assert tail_hidden, (
+        "every forward exchange after the first must be fully hidden "
+        "behind concurrent compute"
+    )
+    return {
+        "slots": slots, "jobs": plan.n_jobs, "n_jobs": n_jobs,
+        "n_guard": n_guard, "n_cond": n_cond,
+        "inline_net_time": round(nets[False], 4),
+        "overlap_net_time": round(nets[True], 4),
+        "speedup": round(nets[False] / max(nets[True], 1e-9), 3),
+        "fwd_bytes": int(total),
+        "fwd_bytes_hidden": int(round(hidden)),
+        "hidden_fraction": round(hidden / tail_bytes, 4) if tail_bytes else 1.0,
+        "tail_fully_hidden": bool(tail_hidden),
         "bit_identical": True,
     }
 
@@ -876,6 +1012,9 @@ def acceptance_checks(
     # max(straggler, balanced shorts) — the 4-equation big job keeps the
     # gap well above timing noise at both data sizes
     strag = straggler(P=P, slots=2, n_big=8192 if quick else 16384)
+    # DESIGN.md §16: the shuffle/compute overlap ladder — overlapped net
+    # strictly below inline with the forward exchanges hidden under compute
+    ovl = overlap_straggler(slots=2, n_jobs=6 if quick else 8)
     # ISSUE-5: the dag_edges × speculation grid on the two-level straggler
     # ladder (bit-identical outputs; relations ≤ strata; speculative
     # strictly below non-speculative with one injected 5x-slow attempt)
@@ -893,6 +1032,7 @@ def acceptance_checks(
         "unrelated_register_keeps_cache": bool(unrelated_ok),
         "event_accounting_exact": True,  # _check_events would have raised
         "straggler": strag,
+        "overlap": ovl,
         "dag_speculation": dag_spec,
         "chaos_soak": {
             "survivors_bit_identical": all(r["bit_identical"] for r in soak),
@@ -969,6 +1109,11 @@ def main(argv=None) -> None:
     print(f"# straggler (W=2): async={acceptance['straggler']['async_net_time']}s "
           f"waves={acceptance['straggler']['wave_net_time']}s "
           f"speedup={acceptance['straggler']['speedup']}x", file=sys.stderr)
+    ov = acceptance["overlap"]
+    print(f"# overlap (W=2): inline={ov['inline_net_time']}s "
+          f"overlapped={ov['overlap_net_time']}s speedup={ov['speedup']}x "
+          f"hidden={ov['fwd_bytes_hidden']}/{ov['fwd_bytes']}B",
+          file=sys.stderr)
     ds = acceptance["dag_speculation"]
     print(f"# dag×spec (W=2, 5x straggler): strata={ds['strata_net_time']}s "
           f"relations={ds['relations_net_time']}s "

@@ -111,7 +111,15 @@ def run_corpus() -> int:
     for label, plan, schema, canonical in corpus():
         findings = verify_plan(plan, schema=schema, canonical=canonical)
         n_err += _print(findings, label)
-        n_plans += 1
+        # the same plan under shuffle/compute overlap (DESIGN.md §16):
+        # every obligation must also hold on the transfer/compute
+        # sub-node DAG the overlapped executor actually walks
+        ov_nodes = job_dag(plan, edges="relations", overlap=True)
+        findings = verify_plan(
+            plan, schema=schema, canonical=canonical, nodes=ov_nodes
+        )
+        n_err += _print(findings, f"{label}+overlap")
+        n_plans += 2
     print(f"corpus: {n_plans} plans verified, {n_err} error findings")
     return 1 if n_err else 0
 
@@ -194,11 +202,17 @@ def run_mutate(n: int, seed: int) -> int:
     plans = [(label, plan) for label, plan, _, _ in corpus()]
 
     # -- edge deletions ----------------------------------------------------
+    # both DAG flavors: the overlap variant adds the transfer→compute
+    # buffer edges, whose deletion MUST be killed (an uncovered same-round
+    # RAW on the exchange buffer is exactly the race the overlapped ready
+    # queue would expose)
     edge_pool = []
     for label, plan in plans:
-        nodes = job_dag(plan, edges="relations")
-        for idx, dep in _edge_mutations(nodes):
-            edge_pool.append((label, nodes, idx, dep))
+        for ov in (False, True):
+            nodes = job_dag(plan, edges="relations", overlap=ov)
+            tag = f"{label}+overlap" if ov else label
+            for idx, dep in _edge_mutations(nodes):
+                edge_pool.append((tag, nodes, idx, dep))
     rng.shuffle(edge_pool)
     killed = load_bearing = false_pos = 0
     for label, nodes, idx, dep in edge_pool[:n]:
@@ -222,7 +236,7 @@ def run_mutate(n: int, seed: int) -> int:
     c_killed = c_total = 0
     for _ in range(n):
         label, plan = rng.choice(plans)
-        nodes = job_dag(plan, edges="relations")
+        nodes = job_dag(plan, edges="relations", overlap=rng.random() < 0.5)
         mutated, kind, idx = _corrupt_node(nodes, rng)
         c_total += 1
         if errors(verify_plan(plan, nodes=mutated)):

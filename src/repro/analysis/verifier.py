@@ -48,15 +48,18 @@ from typing import Mapping, Sequence
 
 from repro.core.algebra import Atom, BSGF
 from repro.core.planner import (
+    ComputeJob,
     EvalJob,
     Job,
     JobNode,
     MSJJob,
     Plan,
+    TransferJob,
     conflict_rels,
     conflicting_pairs,
     dag_closure,
     full_guard_vars,
+    is_xfer_rel,
     job_dag,
 )
 
@@ -120,13 +123,45 @@ def derive_accesses(job: Job) -> tuple[frozenset[str], frozenset[str]]:
             reads.add(q.guard.rel)
             reads.update(xins)
             writes.add(q.name)
+    elif isinstance(job, TransferJob):
+        # transfer sub-node (DESIGN.md §16): reads everything the base MSJ
+        # job reads (the map stage stacks every input relation), writes
+        # only the in-flight exchange buffer — never the base outputs
+        base_reads, _ = derive_accesses(job.base)
+        reads.update(base_reads)
+        if job.buffer:
+            writes.add(job.buffer)
+    elif isinstance(job, ComputeJob):
+        # compute sub-node: the base accesses plus a RAW read of the
+        # exchange buffer its transfer twin produced in the *same* round
+        base_reads, base_writes = derive_accesses(job.base)
+        reads.update(base_reads)
+        reads.add(job.buffer)
+        writes.update(base_writes)
     else:  # pragma: no cover - future job kinds must be taught here
         raise TypeError(f"unknown job kind {type(job).__name__}")
     return frozenset(reads), frozenset(writes)
 
 
 def _atom_uses(job: Job) -> list[tuple[str, int, str]]:
-    """Every ``(relation, arity, role)`` use a job makes, atom by atom."""
+    """Every ``(relation, arity, role)`` use a job makes, atom by atom.
+
+    Transfer sub-nodes use the base job's guard/cond atoms (the map stage
+    reads them) but produce no relation-shaped output — the exchange
+    buffer has no arity; compute sub-nodes replay every base use (the
+    probe/scatter side materializes the ``X_i``/fused outputs)."""
+    if isinstance(job, ComputeJob):
+        return _atom_uses(job.base)
+    if isinstance(job, TransferJob):
+        uses = []
+        for sj in job.base.sjs:
+            uses.append((sj.guard.rel, sj.guard.arity, "guard"))
+            uses.append((sj.cond_atom.rel, sj.cond_atom.arity, "cond"))
+        for q in job.base.fused:
+            uses.append((q.guard.rel, q.guard.arity, "guard"))
+            for a in q.atoms:
+                uses.append((a.rel, a.arity, "cond"))
+        return uses
     uses: list[tuple[str, int, str]] = []
     if isinstance(job, MSJJob):
         for sj in job.sjs:
@@ -146,6 +181,23 @@ def _atom_uses(job: Job) -> list[tuple[str, int, str]]:
                 uses.append((x, want, "x-in"))
             uses.append((q.name, len(q.out_vars), "q-out"))
     return uses
+
+
+def _sub_edge(a: JobNode, b: JobNode) -> bool:
+    """True when ``a -> b`` is the intentional same-round transfer→compute
+    sub-edge of one split MSJ job (DESIGN.md §16): the buffer RAW pair is
+    ordered by an explicit DAG edge even though both halves share the base
+    job's round."""
+    return (
+        isinstance(a.job, TransferJob)
+        and isinstance(b.job, ComputeJob)
+        and bool(a.job.buffer)
+        and a.job.buffer == b.job.buffer
+        and a.round_idx == b.round_idx
+    )
+
+
+_XFER_NAME = re.compile(r"^%xfer\d+$")
 
 
 # --------------------------------------------------------------------------
@@ -222,6 +274,14 @@ def verify_plan(
             producers = [
                 i for i in written_by.get(r, ())
                 if by_idx[i].round_idx < n.round_idx
+                # an exchange buffer is produced by the transfer twin in
+                # the SAME round; that is sound only because an explicit
+                # dep edge orders the pair, so demand the edge here
+                or (
+                    is_xfer_rel(r)
+                    and i in n.deps
+                    and by_idx[i].round_idx == n.round_idx
+                )
             ]
             if producers or (schema is not None and r in schema):
                 continue
@@ -235,6 +295,8 @@ def verify_plan(
             ))
     for n in nodes:
         job = n.job
+        if isinstance(job, ComputeJob):
+            job = job.base  # the compute half materializes the X_i outputs
         if not isinstance(job, MSJJob):
             continue
         for sj in job.sjs:
@@ -256,6 +318,20 @@ def verify_plan(
     # -- namespace discipline -----------------------------------------------
     for n in nodes:
         job = n.job
+        if isinstance(job, TransferJob):
+            # the transfer half carries no equations of its own; its one
+            # name is the exchange buffer, which must live in the %xfer
+            # namespace (the % sigil can never collide with schema names
+            # or X<i>@guard|atom-pooled intermediates)
+            if job.buffer and not _XFER_NAME.match(job.buffer):
+                add(Finding(
+                    "error", "namespace", n.idx, (job.buffer,),
+                    f"exchange buffer {job.buffer!r} is not "
+                    "%xfer<i>-shaped",
+                ))
+            continue
+        if isinstance(job, ComputeJob):
+            job = job.base  # equations/names live on the base MSJ job
         sjs = job.sjs if isinstance(job, MSJJob) else ()
         for sj in sjs:
             m = _X_NAME.match(sj.out)
@@ -303,7 +379,9 @@ def verify_plan(
                     f"dep {d} does not reference an earlier node "
                     "(deps must be acyclic and index-ordered)",
                 ))
-            elif by_idx[d].round_idx >= n.round_idx:
+            elif by_idx[d].round_idx >= n.round_idx and not _sub_edge(
+                by_idx[d], n
+            ):
                 add(Finding(
                     "error", "stratum-monotone", n.idx, (),
                     f"dep edge {d} -> {n.idx} does not cross a round "
@@ -316,6 +394,16 @@ def verify_plan(
     for i, j, rels in conflicting_pairs(nodes):
         a, b = by_idx[i], by_idx[j]
         if a.round_idx == b.round_idx:
+            # one sanctioned same-round conflict exists: the buffer RAW
+            # pair of a split MSJ job — and only when the explicit
+            # transfer→compute edge actually covers it (a mutated DAG
+            # with that edge deleted must fail here)
+            if (
+                _sub_edge(a, b)
+                and rels <= {a.job.buffer}
+                and i in closure.get(j, frozenset())
+            ):
+                continue
             add(Finding(
                 "error", "same-round-conflict", j, tuple(sorted(rels)),
                 f"jobs {i} and {j} of round {a.round_idx} conflict on "

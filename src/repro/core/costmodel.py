@@ -368,28 +368,15 @@ def sample_stats(db, sjs: Sequence[SemiJoin], *, sample: int = 1024) -> Stats:
 # --------------------------------------------------------------------------
 
 
-def msj_job_cost(
+def _msj_parts(
     sjs: Sequence[SemiJoin],
     stats: Stats,
-    c: CostConstants = HADOOP,
     *,
-    model: str = "gumbo",
     packing: bool = True,
     fingerprint: bool = True,
-) -> float:
-    """Cost of evaluating the set S in ONE MSJ job (Eq. 5, generalized).
-
-    Guard relations are scanned once each and emit one Req per semi-join
-    they guard; distinct Assert *signatures* are emitted once (conditional
-    name sharing).  With ``packing``, messages carry (key, tuple-id) rather
-    than the tuple (Gumbo optimizations (1)+(2)); the modeled Req/Assert
-    record width follows the engine's message layout: the fingerprint
-    layout (DESIGN.md §5 — kindtag + fp + wide keys + packed srcrow) by
-    default, or the seed ``key_width + 4`` layout with
-    ``fingerprint=False``.  The count phase of the two-phase shuffle ships
-    one int32 per shard pair and is priced into the per-job overhead
-    ``cost_h`` (it is orders of magnitude below the data exchange).
-    """
+) -> tuple[list[tuple[float, float, float]], float, float]:
+    """Shared sizing of one MSJ job: map input partitions ``(N, M, records)``,
+    total intermediate MB, and output MB (the inputs to Eqs. 5–7)."""
     from repro.core.msj import make_spec
 
     spec = make_spec(list(sjs), fingerprint=fingerprint)
@@ -416,7 +403,74 @@ def msj_job_cost(
     k_mb = sum(
         stats.out_rows(sj) * len(sj.out_vars) * BYTES_PER_CELL / MB for sj in sjs
     )
+    return parts, m_total, k_mb
+
+
+def msj_job_cost(
+    sjs: Sequence[SemiJoin],
+    stats: Stats,
+    c: CostConstants = HADOOP,
+    *,
+    model: str = "gumbo",
+    packing: bool = True,
+    fingerprint: bool = True,
+) -> float:
+    """Cost of evaluating the set S in ONE MSJ job (Eq. 5, generalized).
+
+    Guard relations are scanned once each and emit one Req per semi-join
+    they guard; distinct Assert *signatures* are emitted once (conditional
+    name sharing).  With ``packing``, messages carry (key, tuple-id) rather
+    than the tuple (Gumbo optimizations (1)+(2)); the modeled Req/Assert
+    record width follows the engine's message layout: the fingerprint
+    layout (DESIGN.md §5 — kindtag + fp + wide keys + packed srcrow) by
+    default, or the seed ``key_width + 4`` layout with
+    ``fingerprint=False``.  The count phase of the two-phase shuffle ships
+    one int32 per shard pair and is priced into the per-job overhead
+    ``cost_h`` (it is orders of magnitude below the data exchange).
+    """
+    parts, m_total, k_mb = _msj_parts(
+        sjs, stats, packing=packing, fingerprint=fingerprint
+    )
     return c.cost_h + map_phase_cost(parts, c, model=model) + cost_red(m_total, k_mb, c)
+
+
+def msj_transfer_cost(
+    sjs: Sequence[SemiJoin],
+    stats: Stats,
+    c: CostConstants = HADOOP,
+    *,
+    model: str = "gumbo",
+    packing: bool = True,
+    fingerprint: bool = True,
+) -> float:
+    """Cost of an overlap-mode **transfer** sub-node (DESIGN.md §16): the
+    map scan/emit/merge plus the network term ``t·M`` of ``cost_red`` —
+    everything up to and including the forward ``all_to_all``.  The split
+    keys the same Eq. 5 sizing as :func:`msj_job_cost`, so
+    ``transfer + compute == msj_job_cost + cost_h`` (each sub-node is its
+    own dispatch and pays its own startup overhead)."""
+    parts, m_total, _ = _msj_parts(
+        sjs, stats, packing=packing, fingerprint=fingerprint
+    )
+    return c.cost_h + map_phase_cost(parts, c, model=model) + c.t * m_total
+
+
+def msj_compute_cost(
+    sjs: Sequence[SemiJoin],
+    stats: Stats,
+    c: CostConstants = HADOOP,
+    *,
+    model: str = "gumbo",
+    packing: bool = True,
+    fingerprint: bool = True,
+) -> float:
+    """Cost of an overlap-mode **compute** sub-node: the reduce-side merge,
+    probe and output write of ``cost_red`` — everything after the forward
+    exchange landed (the ``t·M`` term belongs to the transfer)."""
+    _, m_total, k_mb = _msj_parts(
+        sjs, stats, packing=packing, fingerprint=fingerprint
+    )
+    return c.cost_h + cost_red(m_total, k_mb, c) - c.t * m_total
 
 
 def eval_job_cost(

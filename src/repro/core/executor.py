@@ -56,13 +56,23 @@ import jax.numpy as jnp
 from repro.core.algebra import BSGF
 from repro.core.costmodel import Stats, choose_backend, speculation_deadline
 from repro.core.eval_op import EvalUnit, query_salt, run_eval
-from repro.core.msj import FusedQuery, conform_mask, make_spec, run_msj
+from repro.core.msj import (
+    FusedQuery,
+    XferBuffer,
+    conform_mask,
+    make_spec,
+    run_msj,
+    run_msj_compute,
+    run_msj_transfer,
+)
 from repro.core.planner import (
     DAG_EDGE_MODES,
+    ComputeJob,
     EvalJob,
     Job,
     MSJJob,
     Plan,
+    TransferJob,
     job_dag,
     job_reads,
     job_writes,
@@ -371,14 +381,23 @@ def guard_projection(rel: Relation, q: BSGF, name: str) -> Relation:
 
 
 def _fused_query_of(q: BSGF, job: MSJJob) -> FusedQuery:
+    return _fused_query_for_sjs(q, job.sjs, ctx=repr(job))
+
+
+def _fused_query_for_sjs(q: BSGF, sjs, *, ctx: str = "") -> FusedQuery:
+    """Map a fused query's atoms onto indices into ``sjs`` — the job's own
+    semi-joins for the inline path, the *buffer's* semi-joins for a compute
+    sub-node (a taint-narrowed compute may carry fewer sjs than the buffer
+    its transfer shuffled, and decode indices must match the shuffled
+    tags)."""
     atom_to_sj = {}
     for a in q.atoms:
-        for i, sj in enumerate(job.sjs):
+        for i, sj in enumerate(sjs):
             if sj.guard == q.guard and sj.cond_atom == a:
                 atom_to_sj[a] = i
                 break
         else:
-            raise ValueError(f"fused query {q.name}: atom {a} not in job {job}")
+            raise ValueError(f"fused query {q.name}: atom {a} not in {ctx or sjs}")
     return FusedQuery(
         name=q.name,
         cond=q.cond,
@@ -388,6 +407,13 @@ def _fused_query_of(q: BSGF, job: MSJJob) -> FusedQuery:
         out_pos=tuple(q.guard.positions_of(v)[0] for v in q.out_vars),
     )
 
+
+#: virtual slot id of the dedicated comm track (DESIGN.md §16): transfer
+#: sub-nodes dispatch here instead of occupying a compute slot, so their
+#: exchanges ride under probe work.  Chosen high enough to never collide
+#: with real slot indices 0..W-1 and distinct from the exporter's taint
+#: pseudo-track (obs.perfetto.TAINT_TID == 999).
+COMM_SLOT = 998
 
 #: valid ExecutorConfig.probe_backend names (validated eagerly at config
 #: construction so a typo fails at service/executor setup, not at job time).
@@ -455,11 +481,28 @@ class ExecutorConfig:
     #: worker's slot is gone until the resize, so pricing W-1 slots is the
     #: honest schedule (ft/elastic.py).
     shrink_on_shard_loss: bool = False
-    #: block on each job's output arrays before timing it.  False keeps
-    #: jax async dispatch in flight across jobs (outputs materialize while
-    #: later jobs launch); the overflow check still syncs the stats scalar,
-    #: so exact fault detection is unaffected.
-    sync_per_job: bool = True
+    #: block on each job's output arrays before timing it.  Default False:
+    #: the only hard sync per job is the overflow *scalar* the retry check
+    #: already reads (``run_job_ft``'s ``int(stats["overflow"])``), so
+    #: exact fault detection is unaffected while jax async dispatch stays
+    #: in flight across jobs — a blanket ``block_until_ready`` on every
+    #: output would serialize exactly the shuffle/compute overlap the
+    #: transfer/compute sub-nodes exist to create (DESIGN.md §16).  True
+    #: restores the blanket barrier as a timing-honesty measurement mode
+    #: (per-job walls then carry full device time, at the cost of the
+    #: schedule being perturbed by its own observation).
+    sync_per_job: bool = False
+    #: split each MSJ job into a *transfer* sub-node (count exchange +
+    #: forward all_to_all, dispatched on the dedicated comm track) and a
+    #: *compute* sub-node (probe + scatter, on the W cluster slots), so
+    #: shard k+1's exchange rides under shard k's probe (DESIGN.md §16).
+    #: Outputs are bit-identical to the inline path; async mode only.
+    overlap: bool = False
+    #: bound on concurrently live forward-exchange buffers under
+    #: ``overlap`` (double buffering by default): transfer k may only
+    #: start once buffer k - xfer_buffers has been released by its
+    #: compute sub-node.
+    xfer_buffers: int = 2
     #: happens-before schedule sanitizer (repro.analysis.sanitizer,
     #: DESIGN.md §15): clock every JobRecord the async walk emits —
     #: speculative attempts, failed/tainted records, narrow_job
@@ -518,6 +561,17 @@ class ExecutorConfig:
                     "the ready-queue walk emits the per-record event "
                     "timelines the happens-before clocks are built from"
                 )
+            if self.overlap:
+                raise ValueError(
+                    "overlap=True requires execution_mode='async': the "
+                    "barrier-wave walk joins every wave, so a transfer "
+                    "sub-node could never ride under another job's probe"
+                )
+        if self.xfer_buffers < 1:
+            raise ValueError(
+                f"xfer_buffers must be >= 1 (got {self.xfer_buffers}): the "
+                "overlap walk needs at least one live exchange buffer"
+            )
         if self.spec_factor <= 0.0:
             raise ValueError(
                 f"spec_factor must be > 0 (got {self.spec_factor}): the "
@@ -674,6 +728,60 @@ class Executor:
             stats["input_rows"] = sum(
                 int(self.env[r].count()) for r in _msj_input_rels(job, self.env)
             )
+            stats["backend"] = backend
+            return outs, stats
+        if isinstance(job, TransferJob):
+            # transfer sub-node (DESIGN.md §16): count exchange + forward
+            # all_to_all of the base MSJ job; publishes the in-flight
+            # exchange as an XferBuffer under the %xfer name instead of
+            # probing it.  The capacity ladder applies here — overflow is a
+            # property of the forward shuffle, so the retry state's learned
+            # cap/slack land on this sub-node (satellite: a prefetched
+            # transfer's CapacityFault blames *its own* RetryState).
+            buf, stats = run_msj_transfer(
+                job.buffer,
+                self.env,
+                list(job.base.sjs),
+                self.comm,
+                packing=self.config.packing,
+                bloom_bits=self.config.bloom_bits,
+                forward_cap=cap_override,
+                fingerprint=self.config.fingerprint,
+                count_sized=self.config.count_sized,
+                cap_slack=self.config.cap_slack if cap_slack is None else cap_slack,
+                tracer=self.tracer,
+            )
+            stats["input_rows"] = sum(
+                int(self.env[r].count()) for r in _msj_input_rels(job.base, self.env)
+            )
+            return ({job.buffer: buf} if job.buffer else {}), stats
+        if isinstance(job, ComputeJob):
+            # compute sub-node: probe + scatter against the buffered
+            # exchange.  Spec/layout rebuild from the BUFFER's sjs (never
+            # the possibly-narrowed compute base) so decode matches the
+            # shuffled tags; outputs are filtered to this node's writes so
+            # a narrowed compute can't resurrect dropped units' outputs.
+            buf = self.env[job.buffer]
+            if not isinstance(buf, XferBuffer):
+                raise RuntimeError(
+                    f"{job}: environment entry {job.buffer!r} is not a "
+                    "transfer buffer (was the transfer sub-node skipped?)"
+                )
+            fused = tuple(
+                _fused_query_for_sjs(q, buf.sjs, ctx=f"buffer {buf.name!r}")
+                for q in job.base.fused
+            )
+            backend = self._probe_backend_for(job.base)
+            outs, stats = run_msj_compute(
+                self.env,
+                buf,
+                self.comm,
+                fused=fused,
+                probe_fn=resolve_probe_backend(backend),
+                tracer=self.tracer,
+            )
+            writes = job_writes(job)
+            outs = {k: v for k, v in outs.items() if k in writes}
             stats["backend"] = backend
             return outs, stats
         # EVAL job
@@ -878,7 +986,10 @@ class Executor:
 
     def _publish(self, outs: dict) -> None:
         for name, rel in outs.items():
-            if self.config.compact:
+            # XferBuffers are in-flight exchange state, not relations:
+            # never compacted, never committed, dropped from the env once
+            # their compute sub-node consumes them
+            if self.config.compact and isinstance(rel, Relation):
                 rel = rel.compacted()
             self.env[name] = rel
 
@@ -953,7 +1064,9 @@ class Executor:
         if slots is not None and slots < 1:
             raise ValueError(f"slots must be >= 1 or None (unbounded), got {slots}")
         if nodes is None:
-            nodes = job_dag(plan, edges=self.config.dag_edges)
+            nodes = job_dag(
+                plan, edges=self.config.dag_edges, overlap=self.config.overlap
+            )
         else:
             nodes = tuple(nodes)
         if est is None:
@@ -1053,18 +1166,74 @@ class Executor:
 
         isolate = self.config.fail_policy == "isolate"
 
+        # -- shuffle/compute overlap (DESIGN.md §16) -----------------------
+        # Transfer sub-nodes dispatch on a dedicated single-slot comm track
+        # (virtual slot COMM_SLOT), so a forward exchange rides under probe
+        # work on the W compute slots; the buffer pool bounds how many
+        # shuffled-but-unprobed exchanges are alive at once (double
+        # buffering by default): transfer k may only start once buffer
+        # k - xfer_buffers was released by its compute sub-node.
+        overlapped = any(isinstance(n.job, TransferJob) for n in nodes)
+        comm_free = 0.0
+        max_bufs = max(1, self.config.xfer_buffers)
+        compute_of = {
+            n.job.buffer: n.idx for n in nodes if isinstance(n.job, ComputeJob)
+        }
+        buf_computes: list[int] = []  # consumer idx per created buffer, in order
+
+        def buffer_gate() -> float | None:
+            """Earliest virtual time the next transfer may start under the
+            buffer bound, or None while the pool is exhausted (a compute
+            holding one of the last ``max_bufs`` buffers hasn't ended)."""
+            need = len(buf_computes) + 1 - max_bufs
+            if need <= 0:
+                return 0.0
+            freed = sorted(end_at[ci] for ci in buf_computes if ci in end_at)
+            if len(freed) < need:
+                return None
+            return freed[need - 1]
+
         while pending:
             ready = [n for n in pending.values() if all(d in end_at for d in n.deps)]
             if not ready:
                 raise RuntimeError("job DAG has a cycle (malformed plan)")
-            s = min(range(len(slot_free)), key=slot_free.__getitem__)
-            startable = [n for n in ready if ready_at(n) <= slot_free[s]]
-            if startable:
-                node = min(startable, key=lambda n: (-est[n.idx], n.idx))
-                start = slot_free[s]
+            if overlapped:
+                xfers = [n for n in ready if isinstance(n.job, TransferJob)]
+                work = [n for n in ready if not isinstance(n.job, TransferJob)]
             else:
-                node = min(ready, key=lambda n: (ready_at(n), -est[n.idx], n.idx))
-                start = ready_at(node)
+                xfers, work = [], ready
+            pick = None  # (start, node, slot, on_comm)
+            if work:
+                s = min(range(len(slot_free)), key=slot_free.__getitem__)
+                startable = [n for n in work if ready_at(n) <= slot_free[s]]
+                if startable:
+                    cand = min(startable, key=lambda n: (-est[n.idx], n.idx))
+                    pick = (slot_free[s], cand, s, False)
+                else:
+                    cand = min(work, key=lambda n: (ready_at(n), -est[n.idx], n.idx))
+                    pick = (ready_at(cand), cand, s, False)
+            if xfers:
+                gate = buffer_gate()
+                if gate is not None:
+                    cand = min(
+                        xfers,
+                        key=lambda n: (
+                            max(ready_at(n), comm_free, gate), -est[n.idx], n.idx
+                        ),
+                    )
+                    t_x = max(ready_at(cand), comm_free, gate)
+                    # ties go to the comm track: starting the exchange
+                    # early is what hides it under compute
+                    if pick is None or t_x <= pick[0]:
+                        pick = (t_x, cand, COMM_SLOT, True)
+            if pick is None:
+                # unreachable on a well-formed overlap DAG: a gated pool
+                # implies max_bufs live buffers whose paired computes are
+                # ready (their only extra dep is the completed transfer)
+                raise RuntimeError(
+                    "overlap dispatch deadlocked on the exchange buffer pool"
+                )
+            start, node, s, on_comm = pick
             state = RetryState()
             recov0 = self.ft_counters["shard_recoveries"]
             t0 = time.perf_counter()
@@ -1102,12 +1271,19 @@ class Executor:
                     ScheduledJob(node.idx, node.round_idx, s, start, end,
                                  est[node.idx], 0)
                 )
-                slot_free[s] = end
+                if on_comm:
+                    comm_free = end
+                else:
+                    slot_free[s] = end
                 if kept is None:
                     end_at[node.idx] = end
                     del pending[node.idx]
                     if san is not None:
                         san.complete(node.idx, end)
+                    if isinstance(node.job, ComputeJob):
+                        # the buffer is dead either way: release its pool
+                        # slot (end_at above) and drop the exchange state
+                        self.env.pop(node.job.buffer, None)
                 else:
                     pending[node.idx] = replace(
                         node, job=kept, reads=job_reads(kept),
@@ -1145,7 +1321,9 @@ class Executor:
                 slots=n_slots,
             )
             clone = None
-            if self.config.speculate and wall > deadline:
+            # the comm track is a single slot — there is no second comm
+            # slot to clone a straggling transfer onto
+            if self.config.speculate and wall > deadline and not on_comm:
                 others = [i for i in range(len(slot_free)) if i != s]
                 if others:
                     s2 = min(others, key=slot_free.__getitem__)
@@ -1212,11 +1390,21 @@ class Executor:
                     ScheduledJob(node.idx, node.round_idx, r.slot, r.start,
                                  r.end, est[node.idx], r.attempt)
                 )
-            slot_free[s] = rec.end
+            if on_comm:
+                comm_free = rec.end
+            else:
+                slot_free[s] = rec.end
             end_at[node.idx] = win_end
             del pending[node.idx]
             if san is not None:
                 san.complete(node.idx, win_end)
+            if overlapped:
+                if isinstance(node.job, TransferJob) and node.job.buffer:
+                    buf_computes.append(
+                        compute_of.get(node.job.buffer, node.idx)
+                    )
+                elif isinstance(node.job, ComputeJob):
+                    self.env.pop(node.job.buffer, None)
             maybe_shrink(recov0)
         if san is not None:
             from repro.analysis.sanitizer import SanitizerError

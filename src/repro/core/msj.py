@@ -491,6 +491,305 @@ def count_forward_cap(
     return max(1, cap)
 
 
+def _sized_cap(
+    spec: MSJSpec,
+    db: dict[str, Relation],
+    comm: Comm,
+    *,
+    packing: bool,
+    forward_cap: int | None,
+    count_sized: bool,
+    cap_slack: float,
+    tracer=None,
+) -> tuple[int, bool]:
+    """Resolve the forward-shuffle bucket capacity: explicit override,
+    count-sized (two-phase, DESIGN.md §6), or worst-case bound.  Returns
+    ``(cap, counted)`` where ``counted`` marks a successful count phase
+    (its ``P·P`` int32 exchange is then charged to ``bytes_fwd``)."""
+    traced = tracer is not None and getattr(tracer, "enabled", False)
+    counted = False
+    if forward_cap is not None:
+        cap_s = forward_cap
+    elif count_sized:
+        if traced:
+            with tracer.span("msj.count") as _sp:
+                cap_s = count_forward_cap(
+                    spec, db, comm, packing=packing, slack=cap_slack
+                )
+                _sp.args["cap"] = cap_s
+        else:
+            cap_s = count_forward_cap(spec, db, comm, packing=packing, slack=cap_slack)
+        counted = cap_s is not None
+        if cap_s is None:
+            cap_s = default_forward_cap(spec, db, comm.P, cap_slack)
+    else:
+        cap_s = default_forward_cap(spec, db, comm.P, cap_slack)
+    return cap_s, counted
+
+
+@dataclass
+class XferBuffer:
+    """The value a transfer sub-node publishes under its ``%xfer<i>`` name
+    (DESIGN.md §16): the forward-exchanged message buffers plus the
+    map-side carry, with enough metadata for the paired compute node to
+    rebuild the message spec/layout and finish the probe.  Not a
+    :class:`Relation` — the executor neither compacts nor commits it, and
+    it is dropped from the environment once its compute completes."""
+
+    name: str
+    sjs: tuple  # SemiJoins the spec was built with (probe decode key)
+    data: object  # ((recv, recv_valid), map_carry) pipeline carry
+    cap: int
+    counted: bool
+    packing: bool = True
+    fingerprint: bool = True
+    bloom_bits: int = 0
+
+    def __repr__(self):
+        return f"XferBuffer({self.name}, cap={self.cap}, n_sj={len(self.sjs)})"
+
+
+class _MSJKit:
+    """The MSJ operator's stage closures over one (spec, db, cap) triple.
+
+    :func:`run_msj` composes all stages into one pipeline; the overlap
+    path runs ``[bloom?, map]`` in :func:`run_msj_transfer` and
+    ``[probe, out]`` in :func:`run_msj_compute` against the *same* kit
+    parameters, so split and unsplit execution are stage-for-stage
+    identical and therefore bit-identical.
+    """
+
+    def __init__(
+        self,
+        db: dict[str, Relation],
+        spec: MSJSpec,
+        comm: Comm,
+        cap_s: int,
+        *,
+        packing: bool = True,
+        fused: Sequence[FusedQuery] = (),
+        probe_fn: Callable | None = None,
+        bloom_bits: int = 0,
+        fingerprint: bool = True,
+    ):
+        if probe_fn is None:
+            probe_fn = probe_sorted
+        self.spec = spec
+        self.cap_s = cap_s
+        self.use_bloom = use_bloom = bloom_bits > 0
+        P = comm.P
+        KW = spec.key_width
+        layout = make_layout(spec, db, P)
+        self.layout = layout
+        self.W = W = layout.width
+        pass_fp = fingerprint and _probe_takes_fp(probe_fn)
+
+        rel_names = sorted(
+            {i.guard_rel for i in spec.sj_info} | {s.rel for s in spec.sigs}
+        )
+        self.rel_names = rel_names
+        self.stacked = {name: db[name] for name in rel_names}
+        sig_of_sj = jnp.asarray([i.sig_id for i in spec.sj_info], jnp.int32)
+
+        def _msg_stack(kind, tag, fp, keys, src_col, rows):
+            n = rows.shape[0]
+            if not fingerprint:
+                return jnp.stack(
+                    [
+                        jnp.full((n,), kind, jnp.int32),
+                        jnp.full((n,), tag, jnp.int32),
+                    ]
+                    + [keys[:, k] for k in range(KW)]
+                    + [src_col, rows],
+                    axis=1,
+                )
+            cols = [jnp.full((n,), tag * 2 + kind, jnp.int32), fp]
+            if not spec.fp_exact:
+                cols += [keys[:, k] for k in range(KW)]
+            if layout.row_mod:
+                cols.append(src_col * layout.row_mod + rows)
+            else:
+                cols += [src_col, rows]
+            return jnp.stack(cols, axis=1)
+
+        # ---------------- stage 0 (optional): bloom prefilter ----------------
+        # Build a per-shard bloom filter over Assert keys, all-reduce(OR) it, and
+        # drop Req messages whose key cannot match — trades one small all-reduce
+        # for forward-shuffle bytes (beyond-paper; see DESIGN.md §7).
+        use_bloom = bloom_bits > 0
+
+        def _assert_keys(local_db):
+            akeys, asigs, amask, afp = [], [], [], []
+            for s_id, sig in enumerate(spec.sigs):
+                rel = local_db[sig.rel]
+                conf, keys, fp, _ = _map_source(spec, P, rel, sig.pattern, sig.keypos, s_id)
+                akeys.append(keys)
+                asigs.append(jnp.full((rel.cap,), s_id, jnp.int32))
+                amask.append(conf)
+                if fingerprint:
+                    afp.append(fp)
+            return (
+                jnp.concatenate(akeys, 0),
+                jnp.concatenate(asigs, 0),
+                jnp.concatenate(amask, 0),
+                jnp.concatenate(afp, 0) if fingerprint else None,
+            )
+
+        def stage_bloom(sid, local_db):
+            from repro.kernels.bloom import ops as bloom_ops
+
+            keys, sigs_arr, mask, fp = _assert_keys(local_db)
+            words = bloom_ops.build(keys, sigs_arr, mask, bloom_bits, fp=fp)
+            # broadcast-by-all_to_all: every destination receives our words;
+            # the next stage ORs over sources == an all-reduce(OR).
+            bcast = jnp.broadcast_to(words[None], (P,) + words.shape)
+            return (bcast,), local_db
+
+        # ---------------- stage 1: map + forward partition ----------------
+        def stage_map(sid, carry_in):
+            if use_bloom:
+                (recv_words,), local_db = carry_in
+                bloom_words = recv_words.max(axis=0)  # OR-reduce over sources
+                from repro.kernels.bloom import ops as bloom_ops
+            else:
+                local_db, bloom_words = carry_in, None
+            msgs_list, valid_list, dest_list = [], [], []
+            conf_by_sj, rep_by_sj = [], []
+
+            # Req messages per semi-join
+            for i, info in enumerate(spec.sj_info):
+                rel = local_db[info.guard_rel]
+                conf, keys, fp, dest = _map_source(
+                    spec, P, rel, info.guard_pattern, info.guard_keypos, info.sig_id
+                )
+                conf_by_sj.append(conf)
+                send = conf
+                if use_bloom:
+                    sig_col = jnp.full((rel.cap,), info.sig_id, jnp.int32)
+                    send = send & bloom_ops.probe(
+                        bloom_words, keys, sig_col, bloom_bits, fp=fp
+                    )
+                if packing:
+                    is_leader, rep = _dedup(spec, fp, keys, send)
+                    rep_by_sj.append(rep)
+                    send = is_leader
+                else:
+                    rep_by_sj.append(jnp.arange(rel.cap, dtype=jnp.int32))
+                rows = jnp.arange(rel.cap, dtype=jnp.int32)
+                src_col = jnp.full((rel.cap,), 0, jnp.int32) + sid
+                msgs_list.append(_msg_stack(KIND_REQ, i, fp, keys, src_col, rows))
+                valid_list.append(send)
+                dest_list.append(dest)
+
+            # Assert messages per signature
+            for s_id, sig in enumerate(spec.sigs):
+                rel = local_db[sig.rel]
+                conf, keys, fp, dest = _map_source(spec, P, rel, sig.pattern, sig.keypos, s_id)
+                send = conf
+                if packing:
+                    is_leader, _ = _dedup(spec, fp, keys, conf)
+                    send = is_leader
+                zeros = jnp.zeros((rel.cap,), jnp.int32)
+                msgs_list.append(_msg_stack(KIND_ASSERT, s_id, fp, keys, zeros, zeros))
+                valid_list.append(send)
+                dest_list.append(dest)
+
+            msgs = jnp.concatenate(msgs_list, 0)
+            valid = jnp.concatenate(valid_list, 0)
+            dest = jnp.concatenate(dest_list, 0)
+            send_count = valid.sum().astype(jnp.int32)
+            buf, bufvalid, ovf, _counts = shuffle.partition(msgs, valid, dest, P, cap_s)
+            carry = (local_db, tuple(conf_by_sj), tuple(rep_by_sj), ovf, send_count, bloom_words)
+            return (buf, bufvalid), carry
+
+        # ---------------- stage 2: probe + backward partition ----------------
+        def stage_probe(sid, args):
+            (recv, recv_valid), carry = args
+            local_db, confs, reps, ovf_fwd, sent_fwd, bloom_words = carry
+            flat, flat_ok = shuffle.flatten_recv(recv, recv_valid)
+            if fingerprint:
+                kindtag = flat[:, 0]
+                kind = kindtag & 1
+                tag = kindtag >> 1
+                fp = flat[:, 1]
+                if spec.fp_exact:
+                    keys = fp[:, None]
+                else:
+                    keys = flat[:, 2 : 2 + KW]
+                if layout.row_mod:
+                    srcrow = flat[:, W - 1]
+                    src = srcrow // layout.row_mod
+                    row = srcrow % layout.row_mod
+                else:
+                    src = flat[:, W - 2]
+                    row = flat[:, W - 1]
+            else:
+                kind = flat[:, 0]
+                tag = flat[:, 1]
+                fp = None
+                keys = flat[:, 2 : 2 + KW]
+                src = flat[:, 2 + KW]
+                row = flat[:, 3 + KW]
+            is_build = flat_ok & (kind == KIND_ASSERT)
+            is_probe = flat_ok & (kind == KIND_REQ)
+            probe_sigs = sig_of_sj[jnp.clip(tag, 0, spec.n_sj - 1)]
+            if pass_fp:
+                hits = probe_fn(
+                    tag, keys, is_build, probe_sigs, keys, is_probe,
+                    build_fp=fp, probe_fp=fp,
+                )
+            else:
+                hits = probe_fn(tag, keys, is_build, probe_sigs, keys, is_probe)
+            back_valid = is_probe & hits
+            back = jnp.stack([row, tag], axis=1)
+            bbuf, bbvalid, ovf_b, _ = shuffle.partition(back, back_valid, src, P, cap_s)
+            recv_count = flat_ok.sum().astype(jnp.int32)
+            hit_count = back_valid.sum().astype(jnp.int32)
+            carry2 = (local_db, confs, reps, ovf_fwd, sent_fwd, recv_count, hit_count)
+            return (bbuf, bbvalid), carry2
+
+        # ---------------- stage 3: scatter + outputs ----------------
+        def stage_out(sid, args):
+            (recv, recv_valid), carry = args
+            local_db, confs, reps, ovf_fwd, sent_fwd, recv_count, hit_count = carry
+            flat, flat_ok = shuffle.flatten_recv(recv, recv_valid)
+            rows, sj_ids = flat[:, 0], flat[:, 1]
+            bits_by_sj = []
+            for i, info in enumerate(spec.sj_info):
+                gcap = local_db[info.guard_rel].cap
+                sel = flat_ok & (sj_ids == i)
+                bm = jnp.zeros((gcap,), bool).at[rows].max(sel, mode="drop")
+                # expand from packing leaders back to all rows of the key group
+                bits = bm[reps[i]] & confs[i]
+                bits_by_sj.append(bits)
+
+            outputs = {}
+            for i, (sj, info) in enumerate(zip(spec.sjs, spec.sj_info)):
+                rel = local_db[info.guard_rel]
+                proj = rel.data[:, list(info.out_pos)]
+                outputs[sj.out] = Relation(sj.out, proj, bits_by_sj[i])
+            for fq in fused:
+                rel = local_db[fq.guard_rel]
+                gconf = conform_mask(rel.data, rel.valid, fq.guard_pattern)
+                leaf = {a: bits_by_sj[idx] for a, idx in fq.atom_to_sj.items()}
+                ok = gconf & eval_cond(fq.cond, leaf) if fq.cond is not None else gconf
+                proj = rel.data[:, list(fq.out_pos)]
+                outputs[fq.name] = Relation(fq.name, proj, ok)
+
+            stats = {
+                "overflow": ovf_fwd,
+                "sent_fwd": sent_fwd,
+                "recv_fwd": recv_count,
+                "hits": hit_count,
+            }
+            return None, (outputs, stats)
+
+        self.stage_bloom = stage_bloom
+        self.stage_map = stage_map
+        self.stage_probe = stage_probe
+        self.stage_out = stage_out
+
+
 def run_msj(
     db: dict[str, Relation],
     sjs: Sequence[SemiJoin],
@@ -523,257 +822,165 @@ def run_msj(
 
     ``tracer`` (DESIGN.md §14) records the per-phase spans — ``msj.count``
     (count exchange), ``msj.bloom``, ``msj.shuffle.fwd`` (map + forward
-    partition), ``msj.probe``, ``msj.scatter`` — each synced so device
-    time lands in the right phase; ``tracer=None`` (the default) runs the
-    exact untraced path.
+    partition), ``msj.probe``, ``msj.scatter``; ``tracer=None`` (the
+    default) runs the exact untraced path.
     """
     spec = make_spec(sjs, fingerprint=fingerprint)
-    P = comm.P
-    KW = spec.key_width
-    layout = make_layout(spec, db, P)
-    W = layout.width
-    if probe_fn is None:
-        probe_fn = probe_sorted
-    pass_fp = fingerprint and _probe_takes_fp(probe_fn)
-
     traced = tracer is not None and getattr(tracer, "enabled", False)
-    counted = False
-    if forward_cap is not None:
-        cap_s = forward_cap
-    elif count_sized:
-        if traced:
-            with tracer.span("msj.count") as _sp:
-                cap_s = count_forward_cap(
-                    spec, db, comm, packing=packing, slack=cap_slack
-                )
-                _sp.args["cap"] = cap_s
-        else:
-            cap_s = count_forward_cap(spec, db, comm, packing=packing, slack=cap_slack)
-        counted = cap_s is not None
-        if cap_s is None:
-            cap_s = default_forward_cap(spec, db, P, cap_slack)
-    else:
-        cap_s = default_forward_cap(spec, db, P, cap_slack)
-
-    rel_names = sorted({i.guard_rel for i in spec.sj_info} | {s.rel for s in spec.sigs})
-    sig_of_sj = jnp.asarray([i.sig_id for i in spec.sj_info], jnp.int32)
-
-    def _msg_stack(kind, tag, fp, keys, src_col, rows):
-        n = rows.shape[0]
-        if not fingerprint:
-            return jnp.stack(
-                [
-                    jnp.full((n,), kind, jnp.int32),
-                    jnp.full((n,), tag, jnp.int32),
-                ]
-                + [keys[:, k] for k in range(KW)]
-                + [src_col, rows],
-                axis=1,
-            )
-        cols = [jnp.full((n,), tag * 2 + kind, jnp.int32), fp]
-        if not spec.fp_exact:
-            cols += [keys[:, k] for k in range(KW)]
-        if layout.row_mod:
-            cols.append(src_col * layout.row_mod + rows)
-        else:
-            cols += [src_col, rows]
-        return jnp.stack(cols, axis=1)
-
-    # ---------------- stage 0 (optional): bloom prefilter ----------------
-    # Build a per-shard bloom filter over Assert keys, all-reduce(OR) it, and
-    # drop Req messages whose key cannot match — trades one small all-reduce
-    # for forward-shuffle bytes (beyond-paper; see DESIGN.md §7).
-    use_bloom = bloom_bits > 0
-
-    def _assert_keys(local_db):
-        akeys, asigs, amask, afp = [], [], [], []
-        for s_id, sig in enumerate(spec.sigs):
-            rel = local_db[sig.rel]
-            conf, keys, fp, _ = _map_source(spec, P, rel, sig.pattern, sig.keypos, s_id)
-            akeys.append(keys)
-            asigs.append(jnp.full((rel.cap,), s_id, jnp.int32))
-            amask.append(conf)
-            if fingerprint:
-                afp.append(fp)
-        return (
-            jnp.concatenate(akeys, 0),
-            jnp.concatenate(asigs, 0),
-            jnp.concatenate(amask, 0),
-            jnp.concatenate(afp, 0) if fingerprint else None,
-        )
-
-    def stage_bloom(sid, local_db):
-        from repro.kernels.bloom import ops as bloom_ops
-
-        keys, sigs_arr, mask, fp = _assert_keys(local_db)
-        words = bloom_ops.build(keys, sigs_arr, mask, bloom_bits, fp=fp)
-        # broadcast-by-all_to_all: every destination receives our words;
-        # the next stage ORs over sources == an all-reduce(OR).
-        bcast = jnp.broadcast_to(words[None], (P,) + words.shape)
-        return (bcast,), local_db
-
-    # ---------------- stage 1: map + forward partition ----------------
-    def stage_map(sid, carry_in):
-        if use_bloom:
-            (recv_words,), local_db = carry_in
-            bloom_words = recv_words.max(axis=0)  # OR-reduce over sources
-            from repro.kernels.bloom import ops as bloom_ops
-        else:
-            local_db, bloom_words = carry_in, None
-        msgs_list, valid_list, dest_list = [], [], []
-        conf_by_sj, rep_by_sj = [], []
-
-        # Req messages per semi-join
-        for i, info in enumerate(spec.sj_info):
-            rel = local_db[info.guard_rel]
-            conf, keys, fp, dest = _map_source(
-                spec, P, rel, info.guard_pattern, info.guard_keypos, info.sig_id
-            )
-            conf_by_sj.append(conf)
-            send = conf
-            if use_bloom:
-                sig_col = jnp.full((rel.cap,), info.sig_id, jnp.int32)
-                send = send & bloom_ops.probe(
-                    bloom_words, keys, sig_col, bloom_bits, fp=fp
-                )
-            if packing:
-                is_leader, rep = _dedup(spec, fp, keys, send)
-                rep_by_sj.append(rep)
-                send = is_leader
-            else:
-                rep_by_sj.append(jnp.arange(rel.cap, dtype=jnp.int32))
-            rows = jnp.arange(rel.cap, dtype=jnp.int32)
-            src_col = jnp.full((rel.cap,), 0, jnp.int32) + sid
-            msgs_list.append(_msg_stack(KIND_REQ, i, fp, keys, src_col, rows))
-            valid_list.append(send)
-            dest_list.append(dest)
-
-        # Assert messages per signature
-        for s_id, sig in enumerate(spec.sigs):
-            rel = local_db[sig.rel]
-            conf, keys, fp, dest = _map_source(spec, P, rel, sig.pattern, sig.keypos, s_id)
-            send = conf
-            if packing:
-                is_leader, _ = _dedup(spec, fp, keys, conf)
-                send = is_leader
-            zeros = jnp.zeros((rel.cap,), jnp.int32)
-            msgs_list.append(_msg_stack(KIND_ASSERT, s_id, fp, keys, zeros, zeros))
-            valid_list.append(send)
-            dest_list.append(dest)
-
-        msgs = jnp.concatenate(msgs_list, 0)
-        valid = jnp.concatenate(valid_list, 0)
-        dest = jnp.concatenate(dest_list, 0)
-        send_count = valid.sum().astype(jnp.int32)
-        buf, bufvalid, ovf, _counts = shuffle.partition(msgs, valid, dest, P, cap_s)
-        carry = (local_db, tuple(conf_by_sj), tuple(rep_by_sj), ovf, send_count, bloom_words)
-        return (buf, bufvalid), carry
-
-    # ---------------- stage 2: probe + backward partition ----------------
-    def stage_probe(sid, args):
-        (recv, recv_valid), carry = args
-        local_db, confs, reps, ovf_fwd, sent_fwd, bloom_words = carry
-        flat, flat_ok = shuffle.flatten_recv(recv, recv_valid)
-        if fingerprint:
-            kindtag = flat[:, 0]
-            kind = kindtag & 1
-            tag = kindtag >> 1
-            fp = flat[:, 1]
-            if spec.fp_exact:
-                keys = fp[:, None]
-            else:
-                keys = flat[:, 2 : 2 + KW]
-            if layout.row_mod:
-                srcrow = flat[:, W - 1]
-                src = srcrow // layout.row_mod
-                row = srcrow % layout.row_mod
-            else:
-                src = flat[:, W - 2]
-                row = flat[:, W - 1]
-        else:
-            kind = flat[:, 0]
-            tag = flat[:, 1]
-            fp = None
-            keys = flat[:, 2 : 2 + KW]
-            src = flat[:, 2 + KW]
-            row = flat[:, 3 + KW]
-        is_build = flat_ok & (kind == KIND_ASSERT)
-        is_probe = flat_ok & (kind == KIND_REQ)
-        probe_sigs = sig_of_sj[jnp.clip(tag, 0, spec.n_sj - 1)]
-        if pass_fp:
-            hits = probe_fn(
-                tag, keys, is_build, probe_sigs, keys, is_probe,
-                build_fp=fp, probe_fp=fp,
-            )
-        else:
-            hits = probe_fn(tag, keys, is_build, probe_sigs, keys, is_probe)
-        back_valid = is_probe & hits
-        back = jnp.stack([row, tag], axis=1)
-        bbuf, bbvalid, ovf_b, _ = shuffle.partition(back, back_valid, src, P, cap_s)
-        recv_count = flat_ok.sum().astype(jnp.int32)
-        hit_count = back_valid.sum().astype(jnp.int32)
-        carry2 = (local_db, confs, reps, ovf_fwd, sent_fwd, recv_count, hit_count)
-        return (bbuf, bbvalid), carry2
-
-    # ---------------- stage 3: scatter + outputs ----------------
-    def stage_out(sid, args):
-        (recv, recv_valid), carry = args
-        local_db, confs, reps, ovf_fwd, sent_fwd, recv_count, hit_count = carry
-        flat, flat_ok = shuffle.flatten_recv(recv, recv_valid)
-        rows, sj_ids = flat[:, 0], flat[:, 1]
-        bits_by_sj = []
-        for i, info in enumerate(spec.sj_info):
-            gcap = local_db[info.guard_rel].cap
-            sel = flat_ok & (sj_ids == i)
-            bm = jnp.zeros((gcap,), bool).at[rows].max(sel, mode="drop")
-            # expand from packing leaders back to all rows of the key group
-            bits = bm[reps[i]] & confs[i]
-            bits_by_sj.append(bits)
-
-        outputs = {}
-        for i, (sj, info) in enumerate(zip(spec.sjs, spec.sj_info)):
-            rel = local_db[info.guard_rel]
-            proj = rel.data[:, list(info.out_pos)]
-            outputs[sj.out] = Relation(sj.out, proj, bits_by_sj[i])
-        for fq in fused:
-            rel = local_db[fq.guard_rel]
-            gconf = conform_mask(rel.data, rel.valid, fq.guard_pattern)
-            leaf = {a: bits_by_sj[idx] for a, idx in fq.atom_to_sj.items()}
-            ok = gconf & eval_cond(fq.cond, leaf) if fq.cond is not None else gconf
-            proj = rel.data[:, list(fq.out_pos)]
-            outputs[fq.name] = Relation(fq.name, proj, ok)
-
-        stats = {
-            "overflow": ovf_fwd,
-            "sent_fwd": sent_fwd,
-            "recv_fwd": recv_count,
-            "hits": hit_count,
-        }
-        return None, (outputs, stats)
-
-    stacked = {name: db[name] for name in rel_names}
-    stages = ([stage_bloom] if use_bloom else []) + [stage_map, stage_probe, stage_out]
-    names = (["msj.bloom"] if use_bloom else []) + [
+    cap_s, counted = _sized_cap(
+        spec, db, comm,
+        packing=packing, forward_cap=forward_cap,
+        count_sized=count_sized, cap_slack=cap_slack, tracer=tracer,
+    )
+    kit = _MSJKit(
+        db, spec, comm, cap_s,
+        packing=packing, fused=fused, probe_fn=probe_fn,
+        bloom_bits=bloom_bits, fingerprint=fingerprint,
+    )
+    stages = ([kit.stage_bloom] if kit.use_bloom else []) + [
+        kit.stage_map, kit.stage_probe, kit.stage_out,
+    ]
+    names = (["msj.bloom"] if kit.use_bloom else []) + [
         "msj.shuffle.fwd", "msj.probe", "msj.scatter",
     ]
     phase_spans = tracer.current() if traced else []
     base = len(phase_spans)
-    outputs, stats = run_pipeline(comm, stages, stacked, tracer=tracer, names=names)
+    outputs, stats = run_pipeline(comm, stages, kit.stacked, tracer=tracer, names=names)
     # aggregate stats over shards (sim mode leaves a leading P axis)
     stats = {k: jnp.asarray(v).sum() for k, v in stats.items()}
     # the count phase ships one int32 per (src, dest) pair before the data
     # exchange; account for it so count-sizing can't hide traffic
-    bytes_count = P * P * 4 if counted else 0
-    stats["bytes_fwd"] = stats["sent_fwd"] * W * 4 + bytes_count
+    bytes_count = comm.P * comm.P * 4 if counted else 0
+    stats["bytes_fwd"] = stats["sent_fwd"] * kit.W * 4 + bytes_count
     stats["bytes_bwd"] = stats["hits"] * 2 * 4
     stats["forward_cap"] = cap_s
     if traced:
         # annotate the just-recorded stage spans with the shuffled bytes
-        # (known only after the shard-summed stats materialize; syncing
-        # here is fine — tracing already syncs per stage)
+        # (known only after the shard-summed stats materialize; the sync
+        # is bounded to the scalar stats, not the output relations)
         by_name = {sp.name: sp for sp in phase_spans[base:]}
         if "msj.shuffle.fwd" in by_name:
             by_name["msj.shuffle.fwd"].args["bytes"] = int(stats["bytes_fwd"])
+        if "msj.scatter" in by_name:
+            by_name["msj.scatter"].args["bytes"] = int(stats["bytes_bwd"])
+        if "msj.probe" in by_name:
+            by_name["msj.probe"].args["hits"] = int(stats["hits"])
+    return outputs, stats
+
+
+def run_msj_transfer(
+    name: str,
+    db: dict[str, Relation],
+    sjs: Sequence[SemiJoin],
+    comm: Comm,
+    *,
+    packing: bool = True,
+    forward_cap: int | None = None,
+    bloom_bits: int = 0,
+    fingerprint: bool = True,
+    count_sized: bool = True,
+    cap_slack: float = 1.0,
+    tracer=None,
+):
+    """Overlap-mode transfer half of one MSJ job (DESIGN.md §16): the
+    count exchange plus map + forward ``all_to_all``, i.e. everything that
+    puts bytes on the interconnect before the probe.  Returns
+    ``(XferBuffer, stats)``; the buffer is published under ``name`` and
+    consumed by :func:`run_msj_compute`.
+
+    Stats carry the forward-side counters only (``overflow``, ``sent_fwd``,
+    ``bytes_fwd``, ``forward_cap``); the compute half reports the rest, so
+    per-report totals match the unsplit operator exactly.
+
+    Traced runs record the forward exchange as an ``msj.xfer`` span (the
+    comm-track phase name) rather than ``msj.shuffle.fwd``.
+    """
+    spec = make_spec(sjs, fingerprint=fingerprint)
+    traced = tracer is not None and getattr(tracer, "enabled", False)
+    cap_s, counted = _sized_cap(
+        spec, db, comm,
+        packing=packing, forward_cap=forward_cap,
+        count_sized=count_sized, cap_slack=cap_slack, tracer=tracer,
+    )
+    kit = _MSJKit(
+        db, spec, comm, cap_s,
+        packing=packing, bloom_bits=bloom_bits, fingerprint=fingerprint,
+    )
+    stages = ([kit.stage_bloom] if kit.use_bloom else []) + [kit.stage_map]
+    names = (["msj.bloom"] if kit.use_bloom else []) + ["msj.xfer"]
+    phase_spans = tracer.current() if traced else []
+    base = len(phase_spans)
+    carry = run_pipeline(comm, stages, kit.stacked, tracer=tracer, names=names)
+    # carry == ((recv, recv_valid), map_carry); the map carry holds the
+    # per-shard forward overflow + send-count scalars at fixed positions
+    (_, map_carry) = carry
+    ovf_fwd, sent_fwd = map_carry[3], map_carry[4]
+    stats = {
+        "overflow": jnp.asarray(ovf_fwd).sum(),
+        "sent_fwd": jnp.asarray(sent_fwd).sum(),
+    }
+    bytes_count = comm.P * comm.P * 4 if counted else 0
+    stats["bytes_fwd"] = stats["sent_fwd"] * kit.W * 4 + bytes_count
+    stats["bytes_bwd"] = jnp.asarray(0, jnp.int32)
+    stats["forward_cap"] = cap_s
+    if traced:
+        by_name = {sp.name: sp for sp in phase_spans[base:]}
+        if "msj.xfer" in by_name:
+            by_name["msj.xfer"].args["bytes"] = int(stats["bytes_fwd"])
+    buf = XferBuffer(
+        name=name,
+        sjs=tuple(sjs),
+        data=carry,
+        cap=cap_s,
+        counted=counted,
+        packing=packing,
+        fingerprint=fingerprint,
+        bloom_bits=bloom_bits,
+    )
+    return buf, stats
+
+
+def run_msj_compute(
+    db: dict[str, Relation],
+    buf: XferBuffer,
+    comm: Comm,
+    *,
+    fused: Sequence[FusedQuery] = (),
+    probe_fn: Callable | None = None,
+    tracer=None,
+):
+    """Overlap-mode compute half of one MSJ job: probe + route-back +
+    scatter over an exchanged :class:`XferBuffer`.  Returns
+    ``(outputs, stats)`` exactly like :func:`run_msj` minus the forward
+    counters (those were reported by the transfer).
+
+    The message spec/layout are rebuilt from the *buffer's* semi-joins —
+    never from a (possibly narrowed) compute job — so the decode always
+    matches the tags the transfer actually shuffled; the executor filters
+    the outputs down to the compute node's write set."""
+    spec = make_spec(list(buf.sjs), fingerprint=buf.fingerprint)
+    traced = tracer is not None and getattr(tracer, "enabled", False)
+    kit = _MSJKit(
+        db, spec, comm, buf.cap,
+        packing=buf.packing, fused=fused, probe_fn=probe_fn,
+        bloom_bits=buf.bloom_bits, fingerprint=buf.fingerprint,
+    )
+    phase_spans = tracer.current() if traced else []
+    base = len(phase_spans)
+    outputs, stats = run_pipeline(
+        comm, [kit.stage_probe, kit.stage_out], buf.data,
+        tracer=tracer, names=["msj.probe", "msj.scatter"],
+    )
+    stats = {k: jnp.asarray(v).sum() for k, v in stats.items()}
+    # forward-side counters were accounted by the transfer node; zero them
+    # here so Report totals (bytes, overflow) don't double-count
+    stats["overflow"] = jnp.asarray(0, jnp.int32)
+    stats["sent_fwd"] = jnp.asarray(0, jnp.int32)
+    stats["bytes_fwd"] = jnp.asarray(0, jnp.int32)
+    stats["bytes_bwd"] = stats["hits"] * 2 * 4
+    stats["forward_cap"] = buf.cap
+    if traced:
+        by_name = {sp.name: sp for sp in phase_spans[base:]}
         if "msj.scatter" in by_name:
             by_name["msj.scatter"].args["bytes"] = int(stats["bytes_bwd"])
         if "msj.probe" in by_name:

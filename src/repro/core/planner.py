@@ -54,7 +54,9 @@ from repro.core.costmodel import (
     BYTES_PER_CELL,
     eval_job_cost,
     lpt_makespan,
+    msj_compute_cost,
     msj_job_cost,
+    msj_transfer_cost,
 )
 
 MB = 1e6
@@ -85,7 +87,50 @@ class EvalJob:
         return f"EVAL({[q.name for q in self.queries]})"
 
 
-Job = MSJJob | EvalJob
+#: prefix of the synthetic buffer relations a :class:`TransferJob`
+#: publishes.  ``%`` cannot appear in a schema or pooled ``X<i>@...``
+#: name, so buffer names never collide with real relations and are
+#: ignored by the service's partial-commit bookkeeping.
+XFER_PREFIX = "%xfer"
+
+
+def is_xfer_rel(name: str) -> bool:
+    """True for the synthetic shuffle-buffer relations of overlap mode."""
+    return name.startswith(XFER_PREFIX)
+
+
+@dataclass(frozen=True)
+class TransferJob:
+    """Overlap-mode sub-node owning an MSJ job's count exchange + forward
+    ``all_to_all`` (DESIGN.md §16).  It reads the base job's inputs and
+    publishes one synthetic buffer relation (the exchanged messages plus
+    the map-side carry) that the paired :class:`ComputeJob` consumes.  A
+    narrowed *dropped* part with an empty ``buffer`` writes nothing: the
+    kept part still produces the buffer, so partial taint must not kill
+    the paired compute wholesale."""
+
+    base: MSJJob
+    buffer: str
+
+    def __repr__(self):
+        return f"XFER({self.buffer}:{[s.out for s in self.base.sjs]})"
+
+
+@dataclass(frozen=True)
+class ComputeJob:
+    """Overlap-mode sub-node owning an MSJ job's probe + route-back +
+    scatter.  Reads the paired transfer's buffer (and the base inputs,
+    which the scatter gathers from) and writes the base job's outputs."""
+
+    base: MSJJob
+    buffer: str
+
+    def __repr__(self):
+        f = f" fused={[q.name for q in self.base.fused]}" if self.base.fused else ""
+        return f"PROBE({self.buffer}:{[s.out for s in self.base.sjs]}{f})"
+
+
+Job = MSJJob | EvalJob | TransferJob | ComputeJob
 
 
 @dataclass(frozen=True)
@@ -146,6 +191,13 @@ def job_reads(job: Job) -> frozenset[str]:
             rels.add(q.guard.rel)
             rels.update(a.rel for a in q.atoms)
         return frozenset(rels)
+    if isinstance(job, TransferJob):
+        return job_reads(job.base)
+    if isinstance(job, ComputeJob):
+        # the probe decodes the buffer; the scatter gathers from the base
+        # inputs (guard rows project through reps/confs), so a compute
+        # node reads both
+        return job_reads(job.base) | frozenset({job.buffer})
     rels = {q.guard.rel for q in job.queries}
     for xin in job.atom_inputs:
         rels.update(xin)
@@ -158,6 +210,10 @@ def job_writes(job: Job) -> frozenset[str]:
     outputs of an EVAL job (mirrors run_msj / run_eval return keys)."""
     if isinstance(job, MSJJob):
         return frozenset({sj.out for sj in job.sjs} | {q.name for q in job.fused})
+    if isinstance(job, TransferJob):
+        return frozenset({job.buffer}) if job.buffer else frozenset()
+    if isinstance(job, ComputeJob):
+        return job_writes(job.base)
     return frozenset(q.name for q in job.queries)
 
 
@@ -165,7 +221,9 @@ def job_writes(job: Job) -> frozenset[str]:
 DAG_EDGE_MODES = ("relations", "strata")
 
 
-def job_dag(plan: Plan, edges: str = "relations") -> tuple[JobNode, ...]:
+def job_dag(
+    plan: Plan, edges: str = "relations", *, overlap: bool = False
+) -> tuple[JobNode, ...]:
     """Job-level dependency DAG of a plan.
 
     ``edges="relations"`` (default) derives edges from read/write sets:
@@ -184,11 +242,27 @@ def job_dag(plan: Plan, edges: str = "relations") -> tuple[JobNode, ...]:
     barriers, every job depends on all jobs of the previous round.  With
     W=∞ slots and ``execution_mode="waves"`` the admitted waves then
     coincide exactly with the plan's rounds.
+
+    ``overlap=True`` (DESIGN.md §16) splits every MSJ job into a
+    :class:`TransferJob` (count exchange + forward ``all_to_all``) and a
+    :class:`ComputeJob` (probe + route-back + scatter).  The pair shares
+    one synthetic ``%xfer<idx>`` buffer relation; the buffer RAW edge
+    (transfer → compute) is the one *intentional* same-round edge in the
+    DAG — everything else still crosses a round boundary — so a job's
+    probe becomes ready the moment its own exchange lands, not when the
+    whole round's shuffle completes.
     """
     if edges not in DAG_EDGE_MODES:
         raise ValueError(
             f"unknown dag edge mode {edges!r}; valid names: {', '.join(DAG_EDGE_MODES)}"
         )
+
+    def split(job: Job, at: int) -> tuple[Job, ...]:
+        if overlap and isinstance(job, MSJJob):
+            buf = f"{XFER_PREFIX}{at}"
+            return (TransferJob(job, buf), ComputeJob(job, buf))
+        return (job,)
+
     nodes: list[JobNode] = []
     idx = 0
     if edges == "strata":
@@ -196,11 +270,15 @@ def job_dag(plan: Plan, edges: str = "relations") -> tuple[JobNode, ...]:
         for ri, rnd in enumerate(plan.rounds):
             cur: list[int] = []
             for job in rnd.jobs:
-                nodes.append(
-                    JobNode(idx, job, ri, prev, job_reads(job), job_writes(job))
-                )
-                cur.append(idx)
-                idx += 1
+                for sub in split(job, idx):
+                    deps = prev
+                    if isinstance(sub, ComputeJob):
+                        deps = prev + (idx - 1,)  # buffer RAW on the transfer
+                    nodes.append(
+                        JobNode(idx, sub, ri, deps, job_reads(sub), job_writes(sub))
+                    )
+                    cur.append(idx)
+                    idx += 1
             prev = tuple(cur)
         return tuple(nodes)
     last_writer: dict[str, int] = {}
@@ -208,20 +286,28 @@ def job_dag(plan: Plan, edges: str = "relations") -> tuple[JobNode, ...]:
     for ri, rnd in enumerate(plan.rounds):
         staged: list[tuple[int, frozenset, frozenset]] = []
         for job in rnd.jobs:
-            reads, writes = job_reads(job), job_writes(job)
-            deps: set[int] = set()
-            for r in reads:
-                if r in last_writer:  # flow (RAW): producer of what we read
-                    deps.add(last_writer[r])
-            for r in writes:
-                if r in last_writer:  # output (WAW): don't clobber early
-                    deps.add(last_writer[r])
-                deps.update(readers.get(r, ()))  # anti (WAR)
-            nodes.append(JobNode(idx, job, ri, tuple(sorted(deps)), reads, writes))
-            staged.append((idx, reads, writes))
-            idx += 1
+            xfer_idx: int | None = None
+            for sub in split(job, idx):
+                reads, writes = job_reads(sub), job_writes(sub)
+                deps: set[int] = set()
+                for r in reads:
+                    if r in last_writer:  # flow (RAW): producer of what we read
+                        deps.add(last_writer[r])
+                for r in writes:
+                    if r in last_writer:  # output (WAW): don't clobber early
+                        deps.add(last_writer[r])
+                    deps.update(readers.get(r, ()))  # anti (WAR)
+                if isinstance(sub, ComputeJob):
+                    deps.add(xfer_idx)  # buffer RAW on the paired transfer
+                elif isinstance(sub, TransferJob):
+                    xfer_idx = idx
+                nodes.append(JobNode(idx, sub, ri, tuple(sorted(deps)), reads, writes))
+                staged.append((idx, reads, writes))
+                idx += 1
         # commit the whole round at once: same-round jobs never see each
-        # other (the IR contract: jobs of a round may run in parallel)
+        # other (the IR contract: jobs of a round may run in parallel;
+        # the transfer→compute buffer edge above is the sole exception
+        # and is added explicitly rather than through the bookkeeping)
         for i, reads, _ in staged:
             for r in reads:
                 readers.setdefault(r, []).append(i)
@@ -349,6 +435,26 @@ def narrow_job(job: Job, tainted: Iterable[str]) -> tuple[Job | None, Job | None
     makes ``Report.tainted_relations`` transitively exact.
     """
     rels = set(tainted)
+    if isinstance(job, TransferJob):
+        kept_b, dropped_b = narrow_job(job.base, rels)
+        kept = TransferJob(kept_b, job.buffer) if kept_b is not None else None
+        # a partially-narrowed transfer still produces the buffer from its
+        # kept units, so the dropped part must not write (= taint) the
+        # buffer name; only a fully-dropped transfer takes the buffer with
+        # it, which in turn drops the paired compute via its buffer read
+        dropped = (
+            TransferJob(dropped_b, "" if kept_b is not None else job.buffer)
+            if dropped_b is not None
+            else None
+        )
+        return kept, dropped
+    if isinstance(job, ComputeJob):
+        if job.buffer in rels:  # exchange never landed: nothing to probe
+            return None, ComputeJob(job.base, job.buffer)
+        kept_b, dropped_b = narrow_job(job.base, rels)
+        kept = ComputeJob(kept_b, job.buffer) if kept_b is not None else None
+        dropped = ComputeJob(dropped_b, job.buffer) if dropped_b is not None else None
+        return kept, dropped
     if isinstance(job, MSJJob):
         bad_sj = lambda sj: sj.guard.rel in rels or sj.cond_atom.rel in rels  # noqa: E731
         bad_q = lambda q: q.guard.rel in rels or any(  # noqa: E731
@@ -796,6 +902,19 @@ def job_cost(
                 q.name, stats.rel(q.guard.rel).rows * stats.default_sel, len(q.out_vars)
             )
         for sj in job.sjs:
+            stats.register_output(sj.out, stats.out_rows(sj), len(sj.out_vars))
+        return c
+    if isinstance(job, TransferJob):
+        # priced before the paired compute in node order; registers
+        # nothing — the outputs only exist once the compute publishes
+        return msj_transfer_cost(list(job.base.sjs), stats, consts, model=model)
+    if isinstance(job, ComputeJob):
+        c = msj_compute_cost(list(job.base.sjs), stats, consts, model=model)
+        for q in job.base.fused:
+            stats.register_output(
+                q.name, stats.rel(q.guard.rel).rows * stats.default_sel, len(q.out_vars)
+            )
+        for sj in job.base.sjs:
             stats.register_output(sj.out, stats.out_rows(sj), len(sj.out_vars))
         return c
     # EVAL: X0 (guard projection) + the X_i inputs per query

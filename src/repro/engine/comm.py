@@ -120,14 +120,20 @@ def run_pipeline(
 
     ``tracer`` (a :class:`repro.obs.Tracer`, DESIGN.md §14) records one
     phase span per stage (named by ``names``, falling back to the stage
-    function's name), blocking on the carry after each stage + exchange so
-    device time is attributed to the phase that spent it.  The sync only
-    happens when tracing is enabled — ``tracer=None`` executes the exact
-    untraced instruction stream — and only on the SimComm path (MeshComm
-    runs inside ``shard_map``, where blocking is impossible; spans there
-    would be trace-side noise, so the tracer is ignored).
+    function's name).  Tracing must not perturb the dispatch stream it
+    measures: spans bracket the *dispatch* of each stage and the carry is
+    NOT synced between stages — an identical instruction stream to the
+    untraced path, so traced and untraced runs are bit-identical and
+    shuffle/compute overlap (DESIGN.md §16) survives under tracing.  Per
+    stage *device*-time attribution needs a barrier after every stage;
+    opt in via ``Tracer(trace_sync=True)``, which restores the old
+    sync-per-stage behaviour (and serializes any overlap — a measurement
+    mode, never the default).  MeshComm runs inside ``shard_map``, where
+    blocking is impossible; spans there would be trace-side noise, so the
+    tracer is ignored.
     """
     traced = tracer is not None and getattr(tracer, "enabled", False)
+    trace_sync = traced and getattr(tracer, "trace_sync", False)
     if isinstance(comm, SimComm):
         carry = stacked_args
         for i, stage in enumerate(stages):
@@ -140,7 +146,8 @@ def run_pipeline(
                     if send is not None:
                         recv = jax.tree.map(comm.all_to_all, send)
                         carry = (recv, carry)
-                    carry = jax.block_until_ready(carry)
+                    if trace_sync:
+                        carry = jax.block_until_ready(carry)
             else:
                 send, carry = jax.vmap(stage)(comm.shard_ids(), carry)
                 if send is not None:

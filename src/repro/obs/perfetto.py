@@ -40,6 +40,10 @@ def _label(rec: "JobRecord") -> str:
         return f"MSJ x{len(job.sjs)}"
     if kind == "EvalJob":
         return f"EVAL x{len(job.queries)}"
+    if kind == "TransferJob":
+        return f"XFER x{len(job.base.sjs)}"
+    if kind == "ComputeJob":
+        return f"PROBE x{len(job.base.sjs)}"
     return kind
 
 
@@ -86,9 +90,16 @@ def trace_events(report: Report, *, title: str = "msj") -> list[dict]:
         {"ph": "M", "name": "process_name", "pid": 0, "tid": 0,
          "args": {"name": title}},
     ]
+    from repro.core.executor import COMM_SLOT
+
     tids = sorted({_tid(r) for r in report.records})
     for tid in tids:
-        name = "tainted" if tid == TAINT_TID else f"slot {tid}"
+        if tid == TAINT_TID:
+            name = "tainted"
+        elif tid == COMM_SLOT:
+            name = "comm"  # the dedicated transfer track (DESIGN.md §16)
+        else:
+            name = f"slot {tid}"
         events.append(
             {"ph": "M", "name": "thread_name", "pid": 0, "tid": tid,
              "args": {"name": name}}

@@ -13,10 +13,13 @@ keeping every child interval inside its parent.
 The contract with the hot path: *every* tracing call site guards on
 ``tracer is None`` (or ``tracer.enabled``) before doing any work, so the
 untraced build executes the identical instruction stream — bench numbers
-and outputs are bit-identical with ``tracer=None``.  When enabled, the
-pipeline runner blocks after each stage to attribute device time to the
-right phase; traced walls are therefore *honest but slower* (the sync
-cost lands inside the span that caused it).
+and outputs are bit-identical with ``tracer=None``.  A *traced* run also
+executes the identical instruction stream by default: spans bracket
+dispatch without syncing between stages, so enabling the tracer cannot
+serialize shuffle/compute overlap (DESIGN.md §16) or change what it
+measures.  ``Tracer(trace_sync=True)`` opts into the old
+block-until-ready-per-stage behaviour when honest per-phase *device*
+walls matter more than fidelity of the schedule being observed.
 """
 from __future__ import annotations
 
@@ -74,8 +77,13 @@ class Tracer:
     on this container, so one stack suffices.
     """
 
-    def __init__(self, enabled: bool = True):
+    def __init__(self, enabled: bool = True, *, trace_sync: bool = False):
         self.enabled = enabled
+        #: opt-in per-stage barrier in the pipeline runner: attributes
+        #: device time to phases at the cost of serializing the dispatch
+        #: stream (and any comm/compute overlap).  Default off — tracing
+        #: must not perturb the schedule it measures.
+        self.trace_sync = trace_sync
         self._stack: list[list[Span]] = []
 
     def current(self) -> list[Span]:

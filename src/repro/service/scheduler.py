@@ -72,7 +72,14 @@ class SlotScheduler:
         max_restarts: int = 0,
         wall_scale: Callable | None = None,
     ) -> tuple[dict, Report]:
-        est = self._estimate(job_dag(plan, edges=self.executor.config.dag_edges))
+        # must mirror the executor's own node set exactly — under overlap
+        # the DAG holds transfer/compute sub-nodes whose costs the model
+        # prices separately (msj_transfer_cost / msj_compute_cost)
+        est = self._estimate(job_dag(
+            plan,
+            edges=self.executor.config.dag_edges,
+            overlap=self.executor.config.overlap,
+        ))
         env, report = self.executor.execute(
             plan, slots=self.slots, est=est, on_job=on_job,
             max_restarts=max_restarts, wall_scale=wall_scale,

@@ -182,12 +182,14 @@ def test_waves_unbounded_reproduces_seed_rounds():
 
 
 def test_async_dispatch_in_flight_outputs_identical():
-    """sync_per_job=False keeps jax async dispatch in flight across jobs;
-    results must not change (only the wall attribution does)."""
+    """sync_per_job=False (the default) keeps jax async dispatch in flight
+    across jobs; results must not change versus the blanket per-job
+    barrier (only the wall attribution does)."""
     qs = Q.make_queries("A3")
     db_np = Q.gen_db(qs, n_guard=96, n_cond=96)
     env0, _ = execute_plan(
-        db_from_dict(db_np, P=P), plan_par(qs), SimComm(P), ExecutorConfig()
+        db_from_dict(db_np, P=P), plan_par(qs), SimComm(P),
+        ExecutorConfig(sync_per_job=True),
     )
     env1, _ = execute_plan(
         db_from_dict(db_np, P=P), plan_par(qs), SimComm(P),
