@@ -48,6 +48,9 @@ KERNEL_TIME_TOL = 3.0
 
 _MSJ_EXACT = ("bytes_shuffled", "input_rows", "jobs", "forward_cap")
 _MSJ_TIMED = ("net_s", "total_s")
+_ZIPF_EXACT = ("bytes_shuffled", "forward_cap", "R", "hot_keys",
+               "replicated", "bit_identical")
+_ZIPF_TIMED = ("net_s", "total_s")
 _SRV_EXACT = ("jobs", "msj_jobs", "bytes_shuffled", "warm_queries", "deduped")
 _RPT_EXACT = ("jobs", "bytes_shuffled", "warm_queries", "cold_queries",
               "x_hits", "plan_hits")
@@ -129,6 +132,19 @@ def gate_msj(current: dict, baseline: dict, *, time_tol: float = TIME_TOL
         baseline.get("probe_kernel", []), current.get("probe_kernel", []),
         lambda r: (r["backend"], r["n"], r["kw"]), (), ("ms",),
         max(time_tol, KERNEL_TIME_TOL),
+    )
+    # the skew-defense ladder (DESIGN.md §17): routing/capacity/replication
+    # metrics are deterministic functions of the seeded Zipf data, and the
+    # acceptance block's flatness + bit-identity flags must never be lost
+    _check_rows(
+        problems, "zipf_skew",
+        baseline.get("zipf_skew", []), current.get("zipf_skew", []),
+        lambda r: (r["exponent"], r["variant"]), _ZIPF_EXACT, _ZIPF_TIMED,
+        time_tol,
+    )
+    _check_bools(
+        problems, "acceptance",
+        baseline.get("acceptance", {}), current.get("acceptance", {}),
     )
     return problems
 

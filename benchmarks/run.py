@@ -20,6 +20,7 @@ from benchmarks import (
     selectivity,
     service_throughput,
     sgf_strategies,
+    zipf_skew,
 )
 from benchmarks.common import HEADER
 
@@ -95,13 +96,25 @@ def main(argv=None) -> None:
         for r in kernel_rows:
             print(f"# probe-kernel {r['backend']}: {r['ms']} ms "
                   f"(n={r['n']}, kw={r['kw']})", flush=True)
+        # the skew-defense acceptance ladder (DESIGN.md §17) rides with
+        # the roofline: forward capacity must stay flat under Zipf skew
+        # and every defended run must match its undefended twin bitwise
+        zipf_rows = zipf_skew.run(n_guard=1024 if args.quick else 4096)
+        zipf_acc = zipf_skew.acceptance(zipf_rows)
+        print("# zipf_skew (heavy-hitter splitting acceptance ladder):")
+        print("# " + ",".join(zipf_skew.COLS))
+        for r in zipf_rows:
+            print("# " + ",".join(str(r[k]) for k in zipf_skew.COLS),
+                  flush=True)
+        print(f"# zipf acceptance: {zipf_acc}")
         if args.json:
             import json
 
             with open(args.json, "w") as f:
                 json.dump(
                     {"n_guard": n * 2, "msj_roofline": rows,
-                     "probe_kernel": kernel_rows},
+                     "probe_kernel": kernel_rows,
+                     "zipf_skew": zipf_rows, "acceptance": zipf_acc},
                     f, indent=2,
                 )
             print(f"# wrote {args.json}", file=sys.stderr)

@@ -35,6 +35,7 @@ from repro.core import queries as Q
 from repro.core.costmodel import HADOOP, stats_of_db
 from repro.core.planner import (
     Plan,
+    annotate_skew,
     conflict_rels,
     job_dag,
     plan_greedy,
@@ -100,6 +101,16 @@ def corpus():
         yield f"svc:{label}/one_round", plan_one_round(canon), schema, True
 
 
+def _skewed(plan: Plan) -> Plan:
+    """The plan with every MSJ job annotated for heavy-hitter splitting.
+
+    ``force_R`` skips the hitter-evidence gate: the corpus checks the
+    *mechanism* (profile → salted-transfer → compute sub-DAG, DESIGN.md
+    §17), not the cost-model's annotation decision, so every plan gets
+    the triple regardless of its synthetic key distribution."""
+    return annotate_skew(plan, None, 4, packing=False, force_R=2)
+
+
 def _print(findings, label: str) -> int:
     for f in findings:
         print(f"  {label}: {f}")
@@ -119,7 +130,19 @@ def run_corpus() -> int:
             plan, schema=schema, canonical=canonical, nodes=ov_nodes
         )
         n_err += _print(findings, f"{label}+overlap")
-        n_plans += 2
+        # and under the skew defense (DESIGN.md §17): the annotated plan's
+        # profile/transfer/compute triple adds the %salt publication and a
+        # second sanctioned same-round RAW (profile→transfer), both of
+        # which the verifier must accept — with and without overlap, since
+        # skew transfers ride the comm track even when overlap is off
+        skewed = _skewed(plan)
+        for ov, tag in ((False, "+skew"), (True, "+skew+overlap")):
+            sk_nodes = job_dag(skewed, edges="relations", overlap=ov, skew=True)
+            findings = verify_plan(
+                skewed, schema=schema, canonical=canonical, nodes=sk_nodes
+            )
+            n_err += _print(findings, f"{label}{tag}")
+        n_plans += 4
     print(f"corpus: {n_plans} plans verified, {n_err} error findings")
     return 1 if n_err else 0
 
@@ -199,7 +222,13 @@ def _corrupt_node(nodes, rng: random.Random):
 
 def run_mutate(n: int, seed: int) -> int:
     rng = random.Random(seed)
-    plans = [(label, plan) for label, plan, _, _ in corpus()]
+    plans = [(label, plan, False) for label, plan, _, _ in corpus()]
+    # skew-annotated variants double the corpus: their DAGs carry the
+    # profile→transfer salt edge and the salted transfer→compute buffer
+    # edge — the two couplings whose deletion the skew property suite
+    # counts on the verifier to kill (DESIGN.md §17)
+    plans += [(f"{label}+skew", _skewed(plan), True)
+              for label, plan, _, _ in corpus()]
 
     # -- edge deletions ----------------------------------------------------
     # both DAG flavors: the overlap variant adds the transfer→compute
@@ -207,9 +236,9 @@ def run_mutate(n: int, seed: int) -> int:
     # RAW on the exchange buffer is exactly the race the overlapped ready
     # queue would expose)
     edge_pool = []
-    for label, plan in plans:
+    for label, plan, sk in plans:
         for ov in (False, True):
-            nodes = job_dag(plan, edges="relations", overlap=ov)
+            nodes = job_dag(plan, edges="relations", overlap=ov, skew=sk)
             tag = f"{label}+overlap" if ov else label
             for idx, dep in _edge_mutations(nodes):
                 edge_pool.append((tag, nodes, idx, dep))
@@ -235,8 +264,10 @@ def run_mutate(n: int, seed: int) -> int:
     # -- read/write-set corruptions ----------------------------------------
     c_killed = c_total = 0
     for _ in range(n):
-        label, plan = rng.choice(plans)
-        nodes = job_dag(plan, edges="relations", overlap=rng.random() < 0.5)
+        label, plan, sk = rng.choice(plans)
+        nodes = job_dag(
+            plan, edges="relations", overlap=rng.random() < 0.5, skew=sk
+        )
         mutated, kind, idx = _corrupt_node(nodes, rng)
         c_total += 1
         if errors(verify_plan(plan, nodes=mutated)):

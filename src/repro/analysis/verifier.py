@@ -54,11 +54,13 @@ from repro.core.planner import (
     JobNode,
     MSJJob,
     Plan,
+    SkewProfileJob,
     TransferJob,
     conflict_rels,
     conflicting_pairs,
     dag_closure,
     full_guard_vars,
+    is_salt_rel,
     is_xfer_rel,
     job_dag,
 )
@@ -125,12 +127,25 @@ def derive_accesses(job: Job) -> tuple[frozenset[str], frozenset[str]]:
             writes.add(q.name)
     elif isinstance(job, TransferJob):
         # transfer sub-node (DESIGN.md §16): reads everything the base MSJ
-        # job reads (the map stage stacks every input relation), writes
+        # job reads (the map stage stacks every input relation) plus, when
+        # salted, the profile pass's salt table (DESIGN.md §17); writes
         # only the in-flight exchange buffer — never the base outputs
         base_reads, _ = derive_accesses(job.base)
         reads.update(base_reads)
+        if job.salt:
+            reads.add(job.salt)
         if job.buffer:
             writes.add(job.buffer)
+    elif isinstance(job, SkewProfileJob):
+        # profile sub-node (DESIGN.md §17): scans only the base job's
+        # *guard* relations (hotness is a probe-side property — the build
+        # side is replicated, never salted) and writes the salt table
+        for sj in job.base.sjs:
+            reads.add(sj.guard.rel)
+        for q in job.base.fused:
+            reads.add(q.guard.rel)
+        if job.salt:
+            writes.add(job.salt)
     elif isinstance(job, ComputeJob):
         # compute sub-node: the base accesses plus a RAW read of the
         # exchange buffer its transfer twin produced in the *same* round
@@ -152,6 +167,15 @@ def _atom_uses(job: Job) -> list[tuple[str, int, str]]:
     probe/scatter side materializes the ``X_i``/fused outputs)."""
     if isinstance(job, ComputeJob):
         return _atom_uses(job.base)
+    if isinstance(job, SkewProfileJob):
+        # the sketch scans guard relations only; the salt table it writes
+        # is routing metadata without an arity
+        uses = []
+        for sj in job.base.sjs:
+            uses.append((sj.guard.rel, sj.guard.arity, "guard"))
+        for q in job.base.fused:
+            uses.append((q.guard.rel, q.guard.arity, "guard"))
+        return uses
     if isinstance(job, TransferJob):
         uses = []
         for sj in job.base.sjs:
@@ -184,20 +208,40 @@ def _atom_uses(job: Job) -> list[tuple[str, int, str]]:
 
 
 def _sub_edge(a: JobNode, b: JobNode) -> bool:
-    """True when ``a -> b`` is the intentional same-round transfer→compute
-    sub-edge of one split MSJ job (DESIGN.md §16): the buffer RAW pair is
-    ordered by an explicit DAG edge even though both halves share the base
-    job's round."""
-    return (
+    """True when ``a -> b`` is an intentional same-round sub-edge of one
+    split MSJ job: the transfer→compute buffer RAW pair (DESIGN.md §16) or
+    the profile→transfer salt RAW pair (DESIGN.md §17) — ordered by an
+    explicit DAG edge even though the sub-nodes share the base job's
+    round."""
+    if (
         isinstance(a.job, TransferJob)
         and isinstance(b.job, ComputeJob)
         and bool(a.job.buffer)
         and a.job.buffer == b.job.buffer
         and a.round_idx == b.round_idx
+    ):
+        return True
+    return (
+        isinstance(a.job, SkewProfileJob)
+        and isinstance(b.job, TransferJob)
+        and bool(a.job.salt)
+        and a.job.salt == b.job.salt
+        and a.round_idx == b.round_idx
     )
 
 
+def _sub_edge_rels(a: JobNode) -> set[str]:
+    """The relation a sanctioned same-round sub-edge is allowed to carry:
+    the producer's buffer or salt name, nothing else."""
+    if isinstance(a.job, TransferJob):
+        return {a.job.buffer}
+    if isinstance(a.job, SkewProfileJob):
+        return {a.job.salt}
+    return set()
+
+
 _XFER_NAME = re.compile(r"^%xfer\d+$")
+_SALT_NAME = re.compile(r"^%salt\d+$")
 
 
 # --------------------------------------------------------------------------
@@ -274,11 +318,12 @@ def verify_plan(
             producers = [
                 i for i in written_by.get(r, ())
                 if by_idx[i].round_idx < n.round_idx
-                # an exchange buffer is produced by the transfer twin in
-                # the SAME round; that is sound only because an explicit
-                # dep edge orders the pair, so demand the edge here
+                # an exchange buffer (or salt table) is produced by a
+                # sub-node twin in the SAME round; that is sound only
+                # because an explicit dep edge orders the pair, so demand
+                # the edge here
                 or (
-                    is_xfer_rel(r)
+                    (is_xfer_rel(r) or is_salt_rel(r))
                     and i in n.deps
                     and by_idx[i].round_idx == n.round_idx
                 )
@@ -328,6 +373,20 @@ def verify_plan(
                     "error", "namespace", n.idx, (job.buffer,),
                     f"exchange buffer {job.buffer!r} is not "
                     "%xfer<i>-shaped",
+                ))
+            if job.salt and not _SALT_NAME.match(job.salt):
+                add(Finding(
+                    "error", "namespace", n.idx, (job.salt,),
+                    f"salt table {job.salt!r} is not %salt<i>-shaped",
+                ))
+            continue
+        if isinstance(job, SkewProfileJob):
+            # the profile half's one name is the salt table it publishes;
+            # the % sigil keeps it clear of schema and pooled names
+            if job.salt and not _SALT_NAME.match(job.salt):
+                add(Finding(
+                    "error", "namespace", n.idx, (job.salt,),
+                    f"salt table {job.salt!r} is not %salt<i>-shaped",
                 ))
             continue
         if isinstance(job, ComputeJob):
@@ -394,13 +453,14 @@ def verify_plan(
     for i, j, rels in conflicting_pairs(nodes):
         a, b = by_idx[i], by_idx[j]
         if a.round_idx == b.round_idx:
-            # one sanctioned same-round conflict exists: the buffer RAW
-            # pair of a split MSJ job — and only when the explicit
-            # transfer→compute edge actually covers it (a mutated DAG
-            # with that edge deleted must fail here)
+            # the sanctioned same-round conflicts are the sub-edges of a
+            # split MSJ job: the transfer→compute buffer RAW pair and the
+            # profile→transfer salt RAW pair — and only when the explicit
+            # edge actually covers the pair (a mutated DAG with that edge
+            # deleted must fail here)
             if (
                 _sub_edge(a, b)
-                and rels <= {a.job.buffer}
+                and rels <= _sub_edge_rels(a)
                 and i in closure.get(j, frozenset())
             ):
                 continue

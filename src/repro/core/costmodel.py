@@ -278,10 +278,21 @@ def choose_backend(
 class RelStats:
     rows: float
     arity: int
+    #: bounded top-k heavy-hitter evidence: ``((col, value, count), ...)``
+    #: from the shuffle sketch (engine/shuffle.py::topk_fp_counts), empty
+    #: when hitters were not collected.  Counts are per-value row counts
+    #: over the whole relation; ``col`` is the column index the value
+    #: appears in.  The skew planner (annotate_skew / choose_skew) reads
+    #: only the columns that are join-key positions.
+    heavy_hitters: tuple = ()
 
     @property
     def mb(self) -> float:
         return self.rows * self.arity * BYTES_PER_CELL / MB
+
+    def hitters_for(self, col: int) -> tuple:
+        """``((value, count), ...)`` for one column, count descending."""
+        return tuple((v, n) for cc, v, n in self.heavy_hitters if cc == col)
 
 
 class Stats:
@@ -316,13 +327,44 @@ class Stats:
         self.rels[name] = RelStats(rows=rows, arity=arity)
 
 
-def stats_of_db(db, sel=None, default_sel: float = 0.5) -> Stats:
-    """Exact row counts from a materialized database."""
+def stats_of_db(db, sel=None, default_sel: float = 0.5, *,
+                heavy_hitters: int = 0) -> Stats:
+    """Exact row counts from a materialized database.
+
+    ``heavy_hitters=k > 0`` additionally runs the bounded top-k sketch
+    (engine/shuffle.py) over every column of every relation and surfaces
+    the merged per-value counts as ``RelStats.heavy_hitters`` — the
+    evidence :func:`choose_skew` prices the skew defense from.
+    """
+    hh_of = _heavy_hitters_of if heavy_hitters > 0 else (lambda r, k: ())
     rels = {
-        name: RelStats(rows=float(r.count()), arity=r.arity)
+        name: RelStats(
+            rows=float(r.count()),
+            arity=r.arity,
+            heavy_hitters=hh_of(r, heavy_hitters),
+        )
         for name, r in db.items()
     }
     return Stats(rels, sel, default_sel)
+
+
+def _heavy_hitters_of(r, k: int) -> tuple:
+    """Per-column merged top-k of one sharded relation via the shuffle
+    sketch: vmap the per-shard sketch over the P leading axis, merge on
+    host.  Exactly the map-side pass the SkewProfileJob runs at execution
+    time, so plan-time and run-time hotness agree."""
+    import jax
+
+    from repro.engine import shuffle as _shuffle
+
+    out = []
+    for col in range(r.arity):
+        vals, counts = jax.vmap(
+            lambda d, v, _c=col: _shuffle.topk_fp_counts(d[:, _c], v, k)
+        )(r.data, r.valid)
+        for value, count in _shuffle.merge_topk(vals, counts, k):
+            out.append((col, value, count))
+    return tuple(out)
 
 
 def sample_stats(db, sjs: Sequence[SemiJoin], *, sample: int = 1024) -> Stats:
@@ -364,6 +406,103 @@ def sample_stats(db, sjs: Sequence[SemiJoin], *, sample: int = 1024) -> Stats:
 
 
 # --------------------------------------------------------------------------
+# Skew defense (DESIGN.md §17): heavy-hitter splitting with replication
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SkewDefense:
+    """Plan-time skew annotation for one MSJ job.
+
+    ``R`` is the replication factor: a hot probe (Req) key is salted
+    across R consecutive reducers while every matching build (Assert) row
+    is replicated to all R — the theta-join skew lever of Afrati/Ullman's
+    *Efficient Multi-way Theta-Join Processing* with the replication-rate
+    vs reducer-size tradeoff from *Upper and Lower Bounds on the Cost of
+    a Map-Reduce Computation* (both PAPERS.md; derivation in DESIGN.md
+    §17).  ``threshold`` is the run-time per-key count above which the
+    profile pass declares a key hot; ``hot`` carries the plan-time
+    ``((value, count), ...)`` evidence the decision was made from (it
+    pins plan-cache keys; the executed hot set comes from the profile
+    pass, not from here).
+    """
+
+    R: int
+    threshold: int
+    hot: tuple = ()
+
+
+#: a key is "hot" when its per-reducer load exceeds this multiple of the
+#: fair share rows/P — below it, the count-sized forward caps absorb the
+#: imbalance without splitting
+SKEW_FACTOR = 2.0
+
+
+def choose_skew(
+    probe_rows: float,
+    build_rows: float,
+    probe_hitters: Sequence[tuple],
+    P: int,
+    *,
+    build_hitters: Sequence[tuple] = (),
+    packing: bool = True,
+    skew_factor: float = SKEW_FACTOR,
+) -> SkewDefense | None:
+    """Replication-vs-overflow tradeoff for one MSJ job (DESIGN.md §17).
+
+    Returns ``None`` when splitting cannot pay:
+
+    * fewer than 2 shards, or no per-key count exceeds
+      ``skew_factor × probe_rows/P`` (the fair share) — the count-sized
+      caps already absorb it;
+    * ``packing=True`` — leader dedup bounds any key's forward load to
+      ≤ 1 message per map shard, so effective hot counts clamp to P and
+      almost never cross the fair-share bar;
+    * the replicated build bytes exceed the forward bytes the split
+      removes from the hottest bucket (the Afrati/Ullman bound: total
+      replicated communication (R−1)·Σ_hot b̂(k) must stay under the
+      straggler mass hot_max·(1−1/R) it dissolves).
+
+    Otherwise R levels the hottest key's residual into the forward
+    buffers.  ``R_level = ceil(hot_max / fair)`` brings the residual down
+    to the *mean* bucket — but the forward buffers are per-(src, dest),
+    and the salted residual lands on buckets that already hold their base
+    load, so the max bucket still overshoots by up to the residual
+    itself.  The preferred choice is therefore the aggressive
+    ``2 × R_level`` (residual ≈ half the fair share, disappearing into
+    bucket variance); when the replication guard rejects the doubled
+    factor the minimal ``R_level`` is tried before giving up.  Per-hot-key
+    build multiplicity ``b̂`` is read from ``build_hitters`` when the
+    build side has its own sketch evidence, else floored at 1 row per hot
+    key (a semi-join build needs only one matching row to assert
+    membership).
+    """
+    P = int(P)
+    if P < 2 or probe_rows <= 0 or not probe_hitters:
+        return None
+    fair = float(probe_rows) / P
+    # packing dedups to ≤1 leader per key per map shard -> ≤P forwards/key
+    eff = tuple(
+        (v, min(int(n), P) if packing else int(n)) for v, n in probe_hitters
+    )
+    bar = skew_factor * fair
+    hot = tuple((v, n) for v, n in eff if n > bar)
+    if not hot:
+        return None
+    hot_max = max(n for _, n in hot)
+    R_level = max(2, min(P, math.ceil(hot_max / max(fair, 1.0))))
+    build_by_val = {v: n for v, n in build_hitters}
+    b_hot = sum(max(build_by_val.get(v, 0), 1) for v, _ in hot)
+    threshold = max(1, math.ceil(bar))
+    for R in dict.fromkeys((min(P, 2 * R_level), R_level)):
+        saved_rows = hot_max * (1.0 - 1.0 / R)
+        extra_rows = (R - 1) * float(b_hot)
+        if extra_rows < saved_rows:
+            return SkewDefense(R=R, threshold=threshold, hot=hot)
+    return None
+
+
+# --------------------------------------------------------------------------
 # Job costing (Eqs. 5–7)
 # --------------------------------------------------------------------------
 
@@ -374,13 +513,24 @@ def _msj_parts(
     *,
     packing: bool = True,
     fingerprint: bool = True,
+    skew: "SkewDefense | None" = None,
 ) -> tuple[list[tuple[float, float, float]], float, float]:
     """Shared sizing of one MSJ job: map input partitions ``(N, M, records)``,
-    total intermediate MB, and output MB (the inputs to Eqs. 5–7)."""
+    total intermediate MB, and output MB (the inputs to Eqs. 5–7).
+
+    With a ``skew`` annotation, each Assert partition carries the
+    replicated-build mass: ``(R−1)`` extra copies of the build rows
+    matching the hot keys (floored at one row per hot key)."""
     from repro.core.msj import make_spec
 
     spec = make_spec(list(sjs), fingerprint=fingerprint)
     msg_mb_per_row = spec.msg_width * BYTES_PER_CELL / MB
+    # replicated-build mass: (R−1) copies of ~1 build row per hot key
+    # (skew.hot carries PROBE counts — build multiplicity is what gets
+    # replicated, floored at one matching row per hot key)
+    rep_rows = 0.0
+    if skew is not None and skew.R > 1:
+        rep_rows = float((skew.R - 1) * max(len(skew.hot), 1))
 
     parts: list[tuple[float, float, float]] = []
     # one partition per distinct guard relation
@@ -394,10 +544,14 @@ def _msj_parts(
         else:
             m = rs.rows * n_req * max(msg_mb_per_row, rs.mb / max(rs.rows, 1))
         parts.append((rs.mb, m, rs.rows * n_req))
-    # one partition per distinct Assert signature
+    # one partition per distinct Assert signature; replication is priced
+    # as extra emitted rows, clamped so a wildly-hot annotation cannot
+    # claim more replicas than the build actually has rows to copy
     for sig in spec.sigs:
         rs = stats.rel(sig.rel)
-        parts.append((rs.mb, rs.rows * msg_mb_per_row, rs.rows))
+        extra = min(rep_rows, rs.rows * max(skew.R - 1, 0)) if skew else 0.0
+        rows = rs.rows + extra
+        parts.append((rs.mb, rows * msg_mb_per_row, rows))
 
     m_total = sum(p[1] for p in parts)
     k_mb = sum(
@@ -414,6 +568,7 @@ def msj_job_cost(
     model: str = "gumbo",
     packing: bool = True,
     fingerprint: bool = True,
+    skew: "SkewDefense | None" = None,
 ) -> float:
     """Cost of evaluating the set S in ONE MSJ job (Eq. 5, generalized).
 
@@ -429,7 +584,7 @@ def msj_job_cost(
     ``cost_h`` (it is orders of magnitude below the data exchange).
     """
     parts, m_total, k_mb = _msj_parts(
-        sjs, stats, packing=packing, fingerprint=fingerprint
+        sjs, stats, packing=packing, fingerprint=fingerprint, skew=skew
     )
     return c.cost_h + map_phase_cost(parts, c, model=model) + cost_red(m_total, k_mb, c)
 
@@ -442,15 +597,18 @@ def msj_transfer_cost(
     model: str = "gumbo",
     packing: bool = True,
     fingerprint: bool = True,
+    skew: "SkewDefense | None" = None,
 ) -> float:
     """Cost of an overlap-mode **transfer** sub-node (DESIGN.md §16): the
     map scan/emit/merge plus the network term ``t·M`` of ``cost_red`` —
     everything up to and including the forward ``all_to_all``.  The split
     keys the same Eq. 5 sizing as :func:`msj_job_cost`, so
     ``transfer + compute == msj_job_cost + cost_h`` (each sub-node is its
-    own dispatch and pays its own startup overhead)."""
+    own dispatch and pays its own startup overhead).  A skew-split
+    transfer additionally carries the replicated-build mass in its map
+    and network terms (the replicas travel in the forward exchange)."""
     parts, m_total, _ = _msj_parts(
-        sjs, stats, packing=packing, fingerprint=fingerprint
+        sjs, stats, packing=packing, fingerprint=fingerprint, skew=skew
     )
     return c.cost_h + map_phase_cost(parts, c, model=model) + c.t * m_total
 
@@ -463,14 +621,32 @@ def msj_compute_cost(
     model: str = "gumbo",
     packing: bool = True,
     fingerprint: bool = True,
+    skew: "SkewDefense | None" = None,
 ) -> float:
     """Cost of an overlap-mode **compute** sub-node: the reduce-side merge,
     probe and output write of ``cost_red`` — everything after the forward
     exchange landed (the ``t·M`` term belongs to the transfer)."""
     _, m_total, k_mb = _msj_parts(
-        sjs, stats, packing=packing, fingerprint=fingerprint
+        sjs, stats, packing=packing, fingerprint=fingerprint, skew=skew
     )
     return c.cost_h + cost_red(m_total, k_mb, c) - c.t * m_total
+
+
+def msj_profile_cost(
+    sjs: Sequence[SemiJoin],
+    stats: Stats,
+    c: CostConstants = HADOOP,
+    *,
+    fingerprint: bool = True,
+) -> float:
+    """Cost of a skew **profile** sub-node (DESIGN.md §17): one map-side
+    scan of each guard relation to run the heavy-hitter sketch — no
+    shuffle, no reduce, host-side top-k merge folded into ``cost_h``."""
+    from repro.core.msj import make_spec
+
+    spec = make_spec(list(sjs), fingerprint=fingerprint)
+    guards = {info.guard_rel for info in spec.sj_info}
+    return c.cost_h + sum(c.h_r * stats.rel(rel).mb for rel in guards)
 
 
 def eval_job_cost(

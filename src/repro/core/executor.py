@@ -58,12 +58,15 @@ from repro.core.costmodel import Stats, choose_backend, speculation_deadline
 from repro.core.eval_op import EvalUnit, query_salt, run_eval
 from repro.core.msj import (
     FusedQuery,
+    SaltTable,
     XferBuffer,
+    collect_salt_table,
     conform_mask,
     make_spec,
     run_msj,
     run_msj_compute,
     run_msj_transfer,
+    skew_route_of,
 )
 from repro.core.planner import (
     DAG_EDGE_MODES,
@@ -72,6 +75,7 @@ from repro.core.planner import (
     Job,
     MSJJob,
     Plan,
+    SkewProfileJob,
     TransferJob,
     job_dag,
     job_reads,
@@ -503,6 +507,18 @@ class ExecutorConfig:
     #: start once buffer k - xfer_buffers has been released by its
     #: compute sub-node.
     xfer_buffers: int = 2
+    #: heavy-hitter skew defense (DESIGN.md §17): split each
+    #: skew-annotated MSJ job (``MSJJob.skew``, planner.annotate_skew)
+    #: into a *profile* sub-node (map-side top-k sketch over the guard
+    #: relations, publishing a SaltTable), a salted *transfer* (hot Req
+    #: rows spread across R consecutive reducers, matching Assert rows
+    #: replicated to all R), and the ordinary compute.  Outputs are
+    #: bit-identical to the undefended path — replicas are bitwise-equal
+    #: builds and the rid-dedup scatter keeps ≤ 1 back message per (row,
+    #: tag) — only the forward load distribution changes.  Unannotated
+    #: jobs run unsplit; async mode only (the split rides the same
+    #: sub-node machinery as ``overlap``).
+    skew_defense: bool = False
     #: happens-before schedule sanitizer (repro.analysis.sanitizer,
     #: DESIGN.md §15): clock every JobRecord the async walk emits —
     #: speculative attempts, failed/tainted records, narrow_job
@@ -566,6 +582,12 @@ class ExecutorConfig:
                     "overlap=True requires execution_mode='async': the "
                     "barrier-wave walk joins every wave, so a transfer "
                     "sub-node could never ride under another job's probe"
+                )
+            if self.skew_defense:
+                raise ValueError(
+                    "skew_defense=True requires execution_mode='async': "
+                    "the profile/transfer/compute split rides the same "
+                    "sub-node dispatch as overlap, which waves lack"
                 )
         if self.xfer_buffers < 1:
             raise ValueError(
@@ -730,6 +752,36 @@ class Executor:
             )
             stats["backend"] = backend
             return outs, stats
+        if isinstance(job, SkewProfileJob):
+            # profile sub-node (DESIGN.md §17): the map-side top-k sketch
+            # over the base job's guard relations, merged on host into the
+            # SaltTable the paired salted transfer routes by.  No
+            # communication, no Relation output — the table is routing
+            # metadata, published raw under the %salt name.
+            ann = job.base.skew
+            if ann is None:
+                raise RuntimeError(
+                    f"{job}: base job carries no skew annotation (was the "
+                    "plan re-annotated after the DAG was built?)"
+                )
+            table = collect_salt_table(
+                self.env,
+                list(job.base.sjs),
+                R=ann.R,
+                threshold=ann.threshold,
+                fingerprint=self.config.fingerprint,
+            )
+            stats = {
+                "overflow": 0,
+                "hot_keys": sum(
+                    1 for _, fps in table.counts
+                    for _, n in fps if n >= table.threshold
+                ),
+                "input_rows": sum(
+                    int(self.env[r].count()) for r in job_reads(job)
+                ),
+            }
+            return {job.salt: table}, stats
         if isinstance(job, TransferJob):
             # transfer sub-node (DESIGN.md §16): count exchange + forward
             # all_to_all of the base MSJ job; publishes the in-flight
@@ -738,6 +790,20 @@ class Executor:
             # property of the forward shuffle, so the retry state's learned
             # cap/slack land on this sub-node (satellite: a prefetched
             # transfer's CapacityFault blames *its own* RetryState).
+            skew = None
+            if job.salt:
+                table = self.env.get(job.salt)
+                if not isinstance(table, SaltTable):
+                    raise RuntimeError(
+                        f"{job}: environment entry {job.salt!r} is not a "
+                        "salt table (was the profile sub-node skipped?)"
+                    )
+                skew = skew_route_of(
+                    table,
+                    make_spec(
+                        list(job.base.sjs), fingerprint=self.config.fingerprint
+                    ),
+                )
             buf, stats = run_msj_transfer(
                 job.buffer,
                 self.env,
@@ -750,6 +816,7 @@ class Executor:
                 count_sized=self.config.count_sized,
                 cap_slack=self.config.cap_slack if cap_slack is None else cap_slack,
                 tracer=self.tracer,
+                skew=skew,
             )
             stats["input_rows"] = sum(
                 int(self.env[r].count()) for r in _msj_input_rels(job.base, self.env)
@@ -986,9 +1053,9 @@ class Executor:
 
     def _publish(self, outs: dict) -> None:
         for name, rel in outs.items():
-            # XferBuffers are in-flight exchange state, not relations:
-            # never compacted, never committed, dropped from the env once
-            # their compute sub-node consumes them
+            # XferBuffers and SaltTables are in-flight sub-node state, not
+            # relations: never compacted, never committed, dropped from the
+            # env once their consumer sub-node completes
             if self.config.compact and isinstance(rel, Relation):
                 rel = rel.compacted()
             self.env[name] = rel
@@ -1065,7 +1132,10 @@ class Executor:
             raise ValueError(f"slots must be >= 1 or None (unbounded), got {slots}")
         if nodes is None:
             nodes = job_dag(
-                plan, edges=self.config.dag_edges, overlap=self.config.overlap
+                plan,
+                edges=self.config.dag_edges,
+                overlap=self.config.overlap,
+                skew=self.config.skew_defense,
             )
         else:
             nodes = tuple(nodes)
@@ -1284,6 +1354,11 @@ class Executor:
                         # the buffer is dead either way: release its pool
                         # slot (end_at above) and drop the exchange state
                         self.env.pop(node.job.buffer, None)
+                    elif isinstance(node.job, TransferJob) and node.job.salt:
+                        # a fully-failed salted transfer was the salt's
+                        # only consumer; a narrowed remainder (kept above)
+                        # still needs it and keeps it live
+                        self.env.pop(node.job.salt, None)
                 else:
                     pending[node.idx] = replace(
                         node, job=kept, reads=job_reads(kept),
@@ -1399,10 +1474,15 @@ class Executor:
             if san is not None:
                 san.complete(node.idx, win_end)
             if overlapped:
-                if isinstance(node.job, TransferJob) and node.job.buffer:
-                    buf_computes.append(
-                        compute_of.get(node.job.buffer, node.idx)
-                    )
+                if isinstance(node.job, TransferJob):
+                    if node.job.buffer:
+                        buf_computes.append(
+                            compute_of.get(node.job.buffer, node.idx)
+                        )
+                    # the salt table has exactly one consumer — this
+                    # transfer — so it is dead once the exchange completed
+                    if node.job.salt:
+                        self.env.pop(node.job.salt, None)
                 elif isinstance(node.job, ComputeJob):
                     self.env.pop(node.job.buffer, None)
             maybe_shrink(recov0)

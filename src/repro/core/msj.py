@@ -404,6 +404,164 @@ def _probe_takes_fp(probe_fn: Callable) -> bool:
 
 
 # --------------------------------------------------------------------------
+# Skew defense (DESIGN.md §17): heavy-hitter salting + build replication
+# --------------------------------------------------------------------------
+
+#: fixed salt for the *skew* fingerprint.  Hotness must be a pure function
+#: of (signature triple, key) — the forward-message fingerprint is salted
+#: by sig_id and therefore unstable under ``narrow_job``'s signature
+#: renumbering, so the skew path derives its own fingerprint with this
+#: constant salt (for single-column keys it is the key itself, exact).
+SKEW_SALT = 0x5EED
+
+
+def _skew_fp(spec: MSJSpec, keys: jnp.ndarray) -> jnp.ndarray:
+    """Salt-independent key fingerprint used only for hot-key detection.
+    Collisions can only over-replicate / over-salt (both exactness-
+    preserving), never corrupt results."""
+    return hashing.fingerprint(keys, salt=SKEW_SALT, exact=spec.fp_exact)
+
+
+def sig_key_of(sig: _SigInfo) -> tuple:
+    """Stable identity of an Assert signature: ``(rel, pattern, keypos)``.
+    Unlike the positional sig_id, this survives ``narrow_job`` dropping
+    semi-joins and renumbering the survivors — the SaltTable is keyed by
+    it so a narrowed transfer can still look its signatures up."""
+    return (sig.rel, sig.pattern, sig.keypos)
+
+
+@dataclass(frozen=True)
+class SaltTable:
+    """What a :class:`~repro.core.planner.SkewProfileJob` publishes under
+    its ``%salt<i>`` name: merged per-signature heavy-hitter counts from
+    the map-side sketch, plus the R/threshold the plan annotation chose.
+    ``counts`` is ``((sig_key, ((skew_fp, count), ...)), ...)``."""
+
+    R: int
+    threshold: int
+    counts: tuple
+
+    def __repr__(self):
+        n_hot = sum(
+            1 for _, fps in self.counts for _, n in fps if n >= self.threshold
+        )
+        return f"SaltTable(R={self.R}, thr={self.threshold}, hot={n_hot})"
+
+
+@dataclass(frozen=True)
+class SkewRoute:
+    """Resolved hot-key routing for ONE msj run: ``hot[s_id]`` is the
+    tuple of hot skew-fingerprints for the spec's signature ``s_id`` (spec
+    order).  Hot Req rows are salted across R consecutive reducers
+    ``(dest + row) mod R``-style; hot Assert rows are replicated to all R
+    (DESIGN.md §17)."""
+
+    R: int
+    hot: tuple
+
+    def live(self, *, packing: bool, P: int) -> "SkewRoute | None":
+        """Normalize to the route the kit will actually apply, or ``None``
+        when salting is a no-op or unsound:
+
+        * ``P < 2`` or ``R < 2`` or an empty hot set — nothing to split;
+        * ``packing`` — leader dedup already bounds any key's forward
+          fan-in to ≤ 1 message per map shard, and row-salted destinations
+          are incompatible with leader-based count sizing (the count and
+          data phases may elect different leader *rows* under bloom
+          filtering), so packed jobs are never salted
+          (:func:`~repro.core.costmodel.choose_skew` never defends them).
+        """
+        if packing or P < 2 or self.R < 2 or not any(self.hot):
+            return None
+        if self.R <= P:
+            return self
+        return SkewRoute(R=P, hot=self.hot)
+
+
+def skew_route_of(table: SaltTable, spec: MSJSpec) -> SkewRoute:
+    """Resolve a published :class:`SaltTable` against THIS run's spec.
+    Signatures absent from the table (e.g. after the profile was narrowed
+    around a fault) get an empty hot set — plain routing, still exact."""
+    by_key = dict(table.counts)
+    hot = []
+    for sig in spec.sigs:
+        fps = by_key.get(sig_key_of(sig), ())
+        hot.append(tuple(int(v) for v, n in fps if n >= table.threshold))
+    return SkewRoute(R=int(table.R), hot=tuple(hot))
+
+
+def collect_salt_table(
+    db: dict[str, Relation],
+    sjs: Sequence[SemiJoin],
+    *,
+    R: int,
+    threshold: int,
+    top_k: int = 8,
+    fingerprint: bool = True,
+) -> SaltTable:
+    """The skew-profile pass: run the bounded top-k sketch
+    (``shuffle.topk_fp_counts``) over each guard relation's conforming key
+    fingerprints — map-side only, vmapped over the P shard axis, merged on
+    host.  No communication: this is the same scan ``stage_map`` performs,
+    minus message materialization."""
+    spec = make_spec(list(sjs), fingerprint=fingerprint)
+    entries = []
+    for s_id, sig in enumerate(spec.sigs):
+        vals_l, cnts_l = [], []
+        for info in spec.sj_info:
+            if info.sig_id != s_id:
+                continue
+            rel = db[info.guard_rel]
+
+            def one_shard(data, valid, _pat=info.guard_pattern,
+                          _kp=info.guard_keypos):
+                conf = conform_mask(data, valid, _pat)
+                keys = _pad_keys(
+                    data[:, list(_kp)]
+                    if _kp
+                    else jnp.zeros((data.shape[0], 0), jnp.int32),
+                    spec.key_width,
+                )
+                return shuffle.topk_fp_counts(_skew_fp(spec, keys), conf, top_k)
+
+            vals, cnts = jax.vmap(one_shard)(rel.data, rel.valid)
+            vals_l.append(vals.reshape(-1))
+            cnts_l.append(cnts.reshape(-1))
+        merged = (
+            shuffle.merge_topk(
+                jnp.concatenate(vals_l), jnp.concatenate(cnts_l), top_k
+            )
+            if vals_l
+            else ()
+        )
+        entries.append((sig_key_of(sig), tuple(merged)))
+    return SaltTable(R=int(R), threshold=int(threshold), counts=tuple(entries))
+
+
+def _skew_hot_mask(spec: MSJSpec, skew: SkewRoute, sig_id: int, keys):
+    """Per-row hot flag for one map source, or ``None`` when the source's
+    signature has no hot keys.  Computed identically in the count phase
+    and the data phase — the count-sizing invariant extends to salted
+    destinations only because both phases share this mask."""
+    fps = skew.hot[sig_id] if sig_id < len(skew.hot) else ()
+    if not fps:
+        return None
+    fp = _skew_fp(spec, keys)
+    table = jnp.asarray(fps, jnp.int32)
+    return (fp[:, None] == table[None, :]).any(axis=1)
+
+
+def _skew_req_dest(dest, hot, R: int, P: int):
+    """Salted destination for hot Req rows: row i of a hot key goes to
+    ``(base_dest + i mod R) mod P``.  Every Req still reaches exactly ONE
+    reducer (≤ 1 back message per (row, tag) — the rid-dedup invariant);
+    the matching build rows are replicated to all R so the probe stays
+    exact."""
+    rows = jnp.arange(dest.shape[0], dtype=jnp.int32)
+    return jnp.where(hot, (dest + rows % R) % P, dest)
+
+
+# --------------------------------------------------------------------------
 # The MSJ job
 # --------------------------------------------------------------------------
 
@@ -421,7 +579,10 @@ class FusedQuery:
     out_pos: tuple[int, ...]
 
 
-def default_forward_cap(spec: MSJSpec, db: dict, P: int, slack: float = 1.0) -> int:
+def default_forward_cap(
+    spec: MSJSpec, db: dict, P: int, slack: float = 1.0,
+    skew: SkewRoute | None = None,
+) -> int:
     """Worst-case per-destination bucket capacity for the forward shuffle.
 
     ``slack=1.0`` is the no-assumption bound (everything to one shard);
@@ -429,13 +590,15 @@ def default_forward_cap(spec: MSJSpec, db: dict, P: int, slack: float = 1.0) -> 
     handles by retrying with a larger capacity.  The count-sized path
     (:func:`count_forward_cap`) replaces this bound with the observed max
     bucket occupancy and only falls back here when counts cannot be read
-    (e.g. under tracing).
+    (e.g. under tracing).  A live skew route adds the worst-case
+    replicated-build mass: ``(R−1)`` extra copies of every Assert source.
     """
     total = 0
     for info in spec.sj_info:
         total += db[info.guard_rel].cap
+    rep = (min(skew.R, P) - 1) if skew is not None and skew.R > 1 else 0
     for sig in spec.sigs:
-        total += db[sig.rel].cap
+        total += db[sig.rel].cap * (1 + rep)
     if slack >= 1.0 or P == 1:
         return max(total, 1)
     # slack < 1 undersizes buckets proportionally (memory saving, overflow
@@ -450,6 +613,7 @@ def count_forward_cap(
     *,
     packing: bool = True,
     slack: float = 1.0,
+    skew: SkewRoute | None = None,
 ) -> int | None:
     """Phase one of the two-phase count-sized shuffle (DESIGN.md §6).
 
@@ -459,25 +623,46 @@ def count_forward_cap(
     message counts to the max bucket occupancy.  Returns ``None`` when the
     counts are traced values (inside jit/shard_map) — the caller then falls
     back to :func:`default_forward_cap`.
+
+    A live ``skew`` route is mirrored exactly: hot Req rows are counted at
+    their salted destinations and hot Assert rows are counted once per
+    replica, so count-sizing stays an upper bound under the defense.
     """
     P = comm.P
 
     def stage_count(sid, local_db):
         total = jnp.zeros((P,), jnp.int32)
         sources = [
-            (info.guard_rel, info.guard_pattern, info.guard_keypos, info.sig_id)
+            (info.guard_rel, info.guard_pattern, info.guard_keypos,
+             info.sig_id, True)
             for info in spec.sj_info
-        ] + [(s.rel, s.pattern, s.keypos, s_id) for s_id, s in enumerate(spec.sigs)]
-        for rel_name, pattern, keypos, salt in sources:
+        ] + [
+            (s.rel, s.pattern, s.keypos, s_id, False)
+            for s_id, s in enumerate(spec.sigs)
+        ]
+        for rel_name, pattern, keypos, sig_id, is_req in sources:
             conf, keys, fp, dest = _map_source(
-                spec, P, local_db[rel_name], pattern, keypos, salt
+                spec, P, local_db[rel_name], pattern, keypos, sig_id
             )
             send = conf
             if packing:
                 is_leader, _ = _dedup(spec, fp, keys, conf)
                 send = is_leader
+            hot = (
+                _skew_hot_mask(spec, skew, sig_id, keys)
+                if skew is not None
+                else None
+            )
+            if hot is not None and is_req:
+                dest = _skew_req_dest(dest, hot, skew.R, P)
             d = jnp.where(send, dest, P)
             total = total + jnp.bincount(d, length=P + 1)[:P].astype(jnp.int32)
+            if hot is not None and not is_req:
+                for r in range(1, skew.R):
+                    d_r = jnp.where(send & hot, (dest + r) % P, P)
+                    total = total + jnp.bincount(d_r, length=P + 1)[:P].astype(
+                        jnp.int32
+                    )
         return None, total
 
     rel_names = sorted({i.guard_rel for i in spec.sj_info} | {s.rel for s in spec.sigs})
@@ -501,6 +686,7 @@ def _sized_cap(
     count_sized: bool,
     cap_slack: float,
     tracer=None,
+    skew: SkewRoute | None = None,
 ) -> tuple[int, bool]:
     """Resolve the forward-shuffle bucket capacity: explicit override,
     count-sized (two-phase, DESIGN.md §6), or worst-case bound.  Returns
@@ -514,16 +700,18 @@ def _sized_cap(
         if traced:
             with tracer.span("msj.count") as _sp:
                 cap_s = count_forward_cap(
-                    spec, db, comm, packing=packing, slack=cap_slack
+                    spec, db, comm, packing=packing, slack=cap_slack, skew=skew
                 )
                 _sp.args["cap"] = cap_s
         else:
-            cap_s = count_forward_cap(spec, db, comm, packing=packing, slack=cap_slack)
+            cap_s = count_forward_cap(
+                spec, db, comm, packing=packing, slack=cap_slack, skew=skew
+            )
         counted = cap_s is not None
         if cap_s is None:
-            cap_s = default_forward_cap(spec, db, comm.P, cap_slack)
+            cap_s = default_forward_cap(spec, db, comm.P, cap_slack, skew=skew)
     else:
-        cap_s = default_forward_cap(spec, db, comm.P, cap_slack)
+        cap_s = default_forward_cap(spec, db, comm.P, cap_slack, skew=skew)
     return cap_s, counted
 
 
@@ -571,11 +759,15 @@ class _MSJKit:
         probe_fn: Callable | None = None,
         bloom_bits: int = 0,
         fingerprint: bool = True,
+        skew: SkewRoute | None = None,
     ):
         if probe_fn is None:
             probe_fn = probe_sorted
         self.spec = spec
         self.cap_s = cap_s
+        # callers pass the already-normalized route (SkewRoute.live); the
+        # probe/out stages never consult it — only stage_map routes
+        self.skew = skew
         self.use_bloom = use_bloom = bloom_bits > 0
         P = comm.P
         KW = spec.key_width
@@ -655,8 +847,10 @@ class _MSJKit:
                 local_db, bloom_words = carry_in, None
             msgs_list, valid_list, dest_list = [], [], []
             conf_by_sj, rep_by_sj = [], []
+            rep_count = jnp.zeros((), jnp.int32)
 
-            # Req messages per semi-join
+            # Req messages per semi-join; hot rows are salted across the
+            # route's R consecutive reducers (count phase mirrors this)
             for i, info in enumerate(spec.sj_info):
                 rel = local_db[info.guard_rel]
                 conf, keys, fp, dest = _map_source(
@@ -675,13 +869,20 @@ class _MSJKit:
                     send = is_leader
                 else:
                     rep_by_sj.append(jnp.arange(rel.cap, dtype=jnp.int32))
+                if skew is not None:
+                    hot = _skew_hot_mask(spec, skew, info.sig_id, keys)
+                    if hot is not None:
+                        dest = _skew_req_dest(dest, hot, skew.R, P)
                 rows = jnp.arange(rel.cap, dtype=jnp.int32)
                 src_col = jnp.full((rel.cap,), 0, jnp.int32) + sid
                 msgs_list.append(_msg_stack(KIND_REQ, i, fp, keys, src_col, rows))
                 valid_list.append(send)
                 dest_list.append(dest)
 
-            # Assert messages per signature
+            # Assert messages per signature; hot build rows are replicated
+            # to all R sub-shards so every salted Req finds its build side
+            # (the replicas are bitwise-identical messages — the probe is
+            # an existence test, so duplicates cannot change any hit bit)
             for s_id, sig in enumerate(spec.sigs):
                 rel = local_db[sig.rel]
                 conf, keys, fp, dest = _map_source(spec, P, rel, sig.pattern, sig.keypos, s_id)
@@ -690,22 +891,37 @@ class _MSJKit:
                     is_leader, _ = _dedup(spec, fp, keys, conf)
                     send = is_leader
                 zeros = jnp.zeros((rel.cap,), jnp.int32)
-                msgs_list.append(_msg_stack(KIND_ASSERT, s_id, fp, keys, zeros, zeros))
+                msg = _msg_stack(KIND_ASSERT, s_id, fp, keys, zeros, zeros)
+                msgs_list.append(msg)
                 valid_list.append(send)
                 dest_list.append(dest)
+                if skew is not None:
+                    hot = _skew_hot_mask(spec, skew, s_id, keys)
+                    if hot is not None:
+                        rep_valid = send & hot
+                        for r in range(1, skew.R):
+                            msgs_list.append(msg)
+                            valid_list.append(rep_valid)
+                            dest_list.append((dest + r) % P)
+                        rep_count = rep_count + rep_valid.sum().astype(
+                            jnp.int32
+                        ) * (skew.R - 1)
 
             msgs = jnp.concatenate(msgs_list, 0)
             valid = jnp.concatenate(valid_list, 0)
             dest = jnp.concatenate(dest_list, 0)
             send_count = valid.sum().astype(jnp.int32)
             buf, bufvalid, ovf, _counts = shuffle.partition(msgs, valid, dest, P, cap_s)
-            carry = (local_db, tuple(conf_by_sj), tuple(rep_by_sj), ovf, send_count, bloom_words)
+            carry = (
+                local_db, tuple(conf_by_sj), tuple(rep_by_sj),
+                ovf, send_count, rep_count, bloom_words,
+            )
             return (buf, bufvalid), carry
 
         # ---------------- stage 2: probe + backward partition ----------------
         def stage_probe(sid, args):
             (recv, recv_valid), carry = args
-            local_db, confs, reps, ovf_fwd, sent_fwd, bloom_words = carry
+            local_db, confs, reps, ovf_fwd, sent_fwd, rep_fwd, bloom_words = carry
             flat, flat_ok = shuffle.flatten_recv(recv, recv_valid)
             if fingerprint:
                 kindtag = flat[:, 0]
@@ -745,13 +961,17 @@ class _MSJKit:
             bbuf, bbvalid, ovf_b, _ = shuffle.partition(back, back_valid, src, P, cap_s)
             recv_count = flat_ok.sum().astype(jnp.int32)
             hit_count = back_valid.sum().astype(jnp.int32)
-            carry2 = (local_db, confs, reps, ovf_fwd, sent_fwd, recv_count, hit_count)
+            carry2 = (
+                local_db, confs, reps, ovf_fwd, sent_fwd, rep_fwd,
+                recv_count, hit_count,
+            )
             return (bbuf, bbvalid), carry2
 
         # ---------------- stage 3: scatter + outputs ----------------
         def stage_out(sid, args):
             (recv, recv_valid), carry = args
-            local_db, confs, reps, ovf_fwd, sent_fwd, recv_count, hit_count = carry
+            (local_db, confs, reps, ovf_fwd, sent_fwd, rep_fwd,
+             recv_count, hit_count) = carry
             flat, flat_ok = shuffle.flatten_recv(recv, recv_valid)
             rows, sj_ids = flat[:, 0], flat[:, 1]
             bits_by_sj = []
@@ -779,6 +999,7 @@ class _MSJKit:
             stats = {
                 "overflow": ovf_fwd,
                 "sent_fwd": sent_fwd,
+                "replicated": rep_fwd,
                 "recv_fwd": recv_count,
                 "hits": hit_count,
             }
@@ -804,6 +1025,7 @@ def run_msj(
     count_sized: bool = True,
     cap_slack: float = 1.0,
     tracer=None,
+    skew: SkewRoute | None = None,
 ):
     """Evaluate MSJ(S). Returns ``(outputs, stats)``.
 
@@ -824,18 +1046,26 @@ def run_msj(
     (count exchange), ``msj.bloom``, ``msj.shuffle.fwd`` (map + forward
     partition), ``msj.probe``, ``msj.scatter``; ``tracer=None`` (the
     default) runs the exact untraced path.
+
+    ``skew`` (DESIGN.md §17) salts hot Req keys across R sub-shards and
+    replicates the matching builds; exactness is unchanged (every Req
+    reaches exactly one reducer, duplicate builds cannot flip an
+    existence bit), so results are bit-identical with or without it.
     """
     spec = make_spec(sjs, fingerprint=fingerprint)
+    if skew is not None:
+        skew = skew.live(packing=packing, P=comm.P)
     traced = tracer is not None and getattr(tracer, "enabled", False)
     cap_s, counted = _sized_cap(
         spec, db, comm,
         packing=packing, forward_cap=forward_cap,
         count_sized=count_sized, cap_slack=cap_slack, tracer=tracer,
+        skew=skew,
     )
     kit = _MSJKit(
         db, spec, comm, cap_s,
         packing=packing, fused=fused, probe_fn=probe_fn,
-        bloom_bits=bloom_bits, fingerprint=fingerprint,
+        bloom_bits=bloom_bits, fingerprint=fingerprint, skew=skew,
     )
     stages = ([kit.stage_bloom] if kit.use_bloom else []) + [
         kit.stage_map, kit.stage_probe, kit.stage_out,
@@ -881,6 +1111,7 @@ def run_msj_transfer(
     count_sized: bool = True,
     cap_slack: float = 1.0,
     tracer=None,
+    skew: SkewRoute | None = None,
 ):
     """Overlap-mode transfer half of one MSJ job (DESIGN.md §16): the
     count exchange plus map + forward ``all_to_all``, i.e. everything that
@@ -894,17 +1125,25 @@ def run_msj_transfer(
 
     Traced runs record the forward exchange as an ``msj.xfer`` span (the
     comm-track phase name) rather than ``msj.shuffle.fwd``.
+
+    ``skew`` (DESIGN.md §17): the salted/replicated routing lives entirely
+    in this half — the compute half probes whatever landed, so a skew
+    transfer pairs with an unmodified :func:`run_msj_compute`.
     """
     spec = make_spec(sjs, fingerprint=fingerprint)
+    if skew is not None:
+        skew = skew.live(packing=packing, P=comm.P)
     traced = tracer is not None and getattr(tracer, "enabled", False)
     cap_s, counted = _sized_cap(
         spec, db, comm,
         packing=packing, forward_cap=forward_cap,
         count_sized=count_sized, cap_slack=cap_slack, tracer=tracer,
+        skew=skew,
     )
     kit = _MSJKit(
         db, spec, comm, cap_s,
         packing=packing, bloom_bits=bloom_bits, fingerprint=fingerprint,
+        skew=skew,
     )
     stages = ([kit.stage_bloom] if kit.use_bloom else []) + [kit.stage_map]
     names = (["msj.bloom"] if kit.use_bloom else []) + ["msj.xfer"]
@@ -912,12 +1151,14 @@ def run_msj_transfer(
     base = len(phase_spans)
     carry = run_pipeline(comm, stages, kit.stacked, tracer=tracer, names=names)
     # carry == ((recv, recv_valid), map_carry); the map carry holds the
-    # per-shard forward overflow + send-count scalars at fixed positions
+    # per-shard forward overflow + send/replica-count scalars at fixed
+    # positions
     (_, map_carry) = carry
-    ovf_fwd, sent_fwd = map_carry[3], map_carry[4]
+    ovf_fwd, sent_fwd, rep_fwd = map_carry[3], map_carry[4], map_carry[5]
     stats = {
         "overflow": jnp.asarray(ovf_fwd).sum(),
         "sent_fwd": jnp.asarray(sent_fwd).sum(),
+        "replicated": jnp.asarray(rep_fwd).sum(),
     }
     bytes_count = comm.P * comm.P * 4 if counted else 0
     stats["bytes_fwd"] = stats["sent_fwd"] * kit.W * 4 + bytes_count
@@ -973,9 +1214,11 @@ def run_msj_compute(
     )
     stats = {k: jnp.asarray(v).sum() for k, v in stats.items()}
     # forward-side counters were accounted by the transfer node; zero them
-    # here so Report totals (bytes, overflow) don't double-count
+    # here so Report totals (bytes, overflow, replication) don't
+    # double-count
     stats["overflow"] = jnp.asarray(0, jnp.int32)
     stats["sent_fwd"] = jnp.asarray(0, jnp.int32)
+    stats["replicated"] = jnp.asarray(0, jnp.int32)
     stats["bytes_fwd"] = jnp.asarray(0, jnp.int32)
     stats["bytes_bwd"] = stats["hits"] * 2 * 4
     stats["forward_cap"] = buf.cap

@@ -50,12 +50,16 @@ from repro.core.costmodel import (
     CostConstants,
     HADOOP,
     RelStats,
+    SKEW_FACTOR,
+    SkewDefense,
     Stats,
     BYTES_PER_CELL,
+    choose_skew,
     eval_job_cost,
     lpt_makespan,
     msj_compute_cost,
     msj_job_cost,
+    msj_profile_cost,
     msj_transfer_cost,
 )
 
@@ -71,10 +75,18 @@ MB = 1e6
 class MSJJob:
     sjs: tuple[SemiJoin, ...]
     fused: tuple[BSGF, ...] = ()
+    #: skew-defense annotation (DESIGN.md §17), attached by
+    #: :func:`annotate_skew`.  Inert unless the executor runs with
+    #: ``skew_defense=True`` — an annotated plan executes identically to
+    #: an unannotated one otherwise (the differential seam the property
+    #: suite exploits).  Part of the frozen identity, so plan-cache keys
+    #: pin the skew decision.
+    skew: SkewDefense | None = None
 
     def __repr__(self):
         f = f" fused={[q.name for q in self.fused]}" if self.fused else ""
-        return f"MSJ({[s.out for s in self.sjs]}{f})"
+        s = f" skew=R{self.skew.R}" if self.skew is not None else ""
+        return f"MSJ({[s_.out for s_ in self.sjs]}{f}{s})"
 
 
 @dataclass(frozen=True)
@@ -99,6 +111,17 @@ def is_xfer_rel(name: str) -> bool:
     return name.startswith(XFER_PREFIX)
 
 
+#: prefix of the synthetic salt-table relations a :class:`SkewProfileJob`
+#: publishes (DESIGN.md §17).  Same namespace rules as ``%xfer``: ``%``
+#: keeps them out of schemas, pooled names, and partial-commit bookkeeping.
+SALT_PREFIX = "%salt"
+
+
+def is_salt_rel(name: str) -> bool:
+    """True for the synthetic salt-table relations of the skew defense."""
+    return name.startswith(SALT_PREFIX)
+
+
 @dataclass(frozen=True)
 class TransferJob:
     """Overlap-mode sub-node owning an MSJ job's count exchange + forward
@@ -107,13 +130,20 @@ class TransferJob:
     the map-side carry) that the paired :class:`ComputeJob` consumes.  A
     narrowed *dropped* part with an empty ``buffer`` writes nothing: the
     kept part still produces the buffer, so partial taint must not kill
-    the paired compute wholesale."""
+    the paired compute wholesale.
+
+    A skew-split transfer (DESIGN.md §17) additionally reads ``salt`` —
+    the :class:`~repro.core.msj.SaltTable` its paired
+    :class:`SkewProfileJob` published; hot keys from the table are salted
+    across sub-shards during the forward exchange."""
 
     base: MSJJob
     buffer: str
+    salt: str = ""
 
     def __repr__(self):
-        return f"XFER({self.buffer}:{[s.out for s in self.base.sjs]})"
+        s = f"<~{self.salt}" if self.salt else ""
+        return f"XFER({self.buffer}{s}:{[sj.out for sj in self.base.sjs]})"
 
 
 @dataclass(frozen=True)
@@ -130,7 +160,24 @@ class ComputeJob:
         return f"PROBE({self.buffer}:{[s.out for s in self.base.sjs]}{f})"
 
 
-Job = MSJJob | EvalJob | TransferJob | ComputeJob
+@dataclass(frozen=True)
+class SkewProfileJob:
+    """Skew-defense sub-node owning one MSJ job's heavy-hitter profile
+    pass (DESIGN.md §17): scan the guard relations map-side, run the
+    bounded top-k sketch per signature, and publish the merged
+    :class:`~repro.core.msj.SaltTable` under ``salt``.  No communication
+    — the sketch merge is host-side — so it runs on a compute slot, not
+    the comm track.  Reads only the base job's *guard* relations (hotness
+    is a probe-side property)."""
+
+    base: MSJJob
+    salt: str
+
+    def __repr__(self):
+        return f"SKEW({self.salt}:{[sj.out for sj in self.base.sjs]})"
+
+
+Job = MSJJob | EvalJob | TransferJob | ComputeJob | SkewProfileJob
 
 
 @dataclass(frozen=True)
@@ -192,12 +239,19 @@ def job_reads(job: Job) -> frozenset[str]:
             rels.update(a.rel for a in q.atoms)
         return frozenset(rels)
     if isinstance(job, TransferJob):
-        return job_reads(job.base)
+        salt = frozenset({job.salt}) if job.salt else frozenset()
+        return job_reads(job.base) | salt
     if isinstance(job, ComputeJob):
         # the probe decodes the buffer; the scatter gathers from the base
         # inputs (guard rows project through reps/confs), so a compute
         # node reads both
         return job_reads(job.base) | frozenset({job.buffer})
+    if isinstance(job, SkewProfileJob):
+        # the sketch scans the probe side only: guard relations
+        return frozenset(
+            {sj.guard.rel for sj in job.base.sjs}
+            | {q.guard.rel for q in job.base.fused}
+        )
     rels = {q.guard.rel for q in job.queries}
     for xin in job.atom_inputs:
         rels.update(xin)
@@ -214,6 +268,8 @@ def job_writes(job: Job) -> frozenset[str]:
         return frozenset({job.buffer}) if job.buffer else frozenset()
     if isinstance(job, ComputeJob):
         return job_writes(job.base)
+    if isinstance(job, SkewProfileJob):
+        return frozenset({job.salt}) if job.salt else frozenset()
     return frozenset(q.name for q in job.queries)
 
 
@@ -222,7 +278,8 @@ DAG_EDGE_MODES = ("relations", "strata")
 
 
 def job_dag(
-    plan: Plan, edges: str = "relations", *, overlap: bool = False
+    plan: Plan, edges: str = "relations", *, overlap: bool = False,
+    skew: bool = False,
 ) -> tuple[JobNode, ...]:
     """Job-level dependency DAG of a plan.
 
@@ -251,6 +308,17 @@ def job_dag(
     DAG — everything else still crosses a round boundary — so a job's
     probe becomes ready the moment its own exchange lands, not when the
     whole round's shuffle completes.
+
+    ``skew=True`` (DESIGN.md §17) splits every MSJ job carrying a
+    ``skew`` annotation into a *triple*: :class:`SkewProfileJob` (sketch →
+    ``%salt<idx>``) → :class:`TransferJob` (salted/replicated forward
+    exchange, reading the salt table) → :class:`ComputeJob`.  The salt
+    RAW edge (profile → transfer) and the buffer RAW edge (transfer →
+    compute) are the two intentional same-round edges.  Annotated jobs
+    split regardless of ``overlap``; unannotated jobs follow the overlap
+    setting — and with ``skew=False`` an annotated plan degenerates to
+    plain (or overlap-pair) nodes, the differential seam the property
+    suite executes both sides of.
     """
     if edges not in DAG_EDGE_MODES:
         raise ValueError(
@@ -258,6 +326,13 @@ def job_dag(
         )
 
     def split(job: Job, at: int) -> tuple[Job, ...]:
+        if skew and isinstance(job, MSJJob) and job.skew is not None:
+            buf, salt = f"{XFER_PREFIX}{at}", f"{SALT_PREFIX}{at}"
+            return (
+                SkewProfileJob(job, salt),
+                TransferJob(job, buf, salt),
+                ComputeJob(job, buf),
+            )
         if overlap and isinstance(job, MSJJob):
             buf = f"{XFER_PREFIX}{at}"
             return (TransferJob(job, buf), ComputeJob(job, buf))
@@ -274,6 +349,8 @@ def job_dag(
                     deps = prev
                     if isinstance(sub, ComputeJob):
                         deps = prev + (idx - 1,)  # buffer RAW on the transfer
+                    elif isinstance(sub, TransferJob) and sub.salt:
+                        deps = prev + (idx - 1,)  # salt RAW on the profile
                     nodes.append(
                         JobNode(idx, sub, ri, deps, job_reads(sub), job_writes(sub))
                     )
@@ -287,6 +364,7 @@ def job_dag(
         staged: list[tuple[int, frozenset, frozenset]] = []
         for job in rnd.jobs:
             xfer_idx: int | None = None
+            salt_idx: int | None = None
             for sub in split(job, idx):
                 reads, writes = job_reads(sub), job_writes(sub)
                 deps: set[int] = set()
@@ -300,14 +378,19 @@ def job_dag(
                 if isinstance(sub, ComputeJob):
                     deps.add(xfer_idx)  # buffer RAW on the paired transfer
                 elif isinstance(sub, TransferJob):
+                    if sub.salt:
+                        deps.add(salt_idx)  # salt RAW on the paired profile
                     xfer_idx = idx
+                elif isinstance(sub, SkewProfileJob):
+                    salt_idx = idx
                 nodes.append(JobNode(idx, sub, ri, tuple(sorted(deps)), reads, writes))
                 staged.append((idx, reads, writes))
                 idx += 1
         # commit the whole round at once: same-round jobs never see each
         # other (the IR contract: jobs of a round may run in parallel;
-        # the transfer→compute buffer edge above is the sole exception
-        # and is added explicitly rather than through the bookkeeping)
+        # the profile→transfer salt edge and transfer→compute buffer edge
+        # above are the sole exceptions and are added explicitly rather
+        # than through the bookkeeping)
         for i, reads, _ in staged:
             for r in reads:
                 readers.setdefault(r, []).append(i)
@@ -436,14 +519,38 @@ def narrow_job(job: Job, tainted: Iterable[str]) -> tuple[Job | None, Job | None
     """
     rels = set(tainted)
     if isinstance(job, TransferJob):
+        if job.salt and job.salt in rels:
+            # the profile pass never published the salt table: the salted
+            # exchange cannot run at all (its routing input is poisoned),
+            # so the whole transfer drops and takes the buffer with it —
+            # which in turn drops the paired compute via its buffer read
+            return None, TransferJob(job.base, job.buffer, job.salt)
         kept_b, dropped_b = narrow_job(job.base, rels)
-        kept = TransferJob(kept_b, job.buffer) if kept_b is not None else None
+        kept = (
+            TransferJob(kept_b, job.buffer, job.salt)
+            if kept_b is not None
+            else None
+        )
         # a partially-narrowed transfer still produces the buffer from its
         # kept units, so the dropped part must not write (= taint) the
         # buffer name; only a fully-dropped transfer takes the buffer with
         # it, which in turn drops the paired compute via its buffer read
         dropped = (
-            TransferJob(dropped_b, "" if kept_b is not None else job.buffer)
+            TransferJob(
+                dropped_b, "" if kept_b is not None else job.buffer, job.salt
+            )
+            if dropped_b is not None
+            else None
+        )
+        return kept, dropped
+    if isinstance(job, SkewProfileJob):
+        # narrows like its base: the surviving units' sketch is still
+        # valid for the (separately narrowed) transfer because the salt
+        # table is keyed by signature triple, not positional sig_id
+        kept_b, dropped_b = narrow_job(job.base, rels)
+        kept = SkewProfileJob(kept_b, job.salt) if kept_b is not None else None
+        dropped = (
+            SkewProfileJob(dropped_b, "" if kept_b is not None else job.salt)
             if dropped_b is not None
             else None
         )
@@ -888,6 +995,87 @@ def _register_stratum_outputs(queries: Sequence[BSGF], stats: Stats) -> None:
 
 
 # --------------------------------------------------------------------------
+# Skew-defense annotation (DESIGN.md §17)
+# --------------------------------------------------------------------------
+
+
+def annotate_skew(
+    plan: Plan,
+    stats: Stats,
+    P: int,
+    *,
+    packing: bool = True,
+    skew_factor: float = SKEW_FACTOR,
+    force_R: int | None = None,
+    threshold: int | None = None,
+) -> Plan:
+    """Annotate each MSJ job whose heavy-hitter evidence justifies
+    splitting with a :class:`~repro.core.costmodel.SkewDefense`.
+
+    Evidence comes from ``RelStats.heavy_hitters`` (``stats_of_db(...,
+    heavy_hitters=k)`` or catalog plumbing): per single-key semi-join, the
+    guard's key-column hitters are the probe side and the cond atom's the
+    build side.  Multi-key signatures carry no per-column evidence — the
+    run-time profile pass still defends them once annotated, but the
+    plan-time decision stays conservative and skips them.
+
+    ``force_R`` annotates every MSJ job unconditionally (corpus / test
+    plumbing — exercises the profile→transfer→compute split without
+    needing hitter evidence); ``threshold`` overrides the run-time
+    hot-count bar in either mode.
+    """
+    rounds = []
+    for r in plan.rounds:
+        jobs = []
+        for job in r.jobs:
+            if not isinstance(job, MSJJob) or not job.sjs:
+                jobs.append(job)
+                continue
+            if force_R is not None:
+                ann = SkewDefense(
+                    R=int(force_R), threshold=int(threshold or 1), hot=()
+                )
+                jobs.append(replace(job, skew=ann))
+                continue
+            probe_rows, build_rows = 0.0, 0.0
+            probe_h: dict[int, int] = {}
+            build_h: dict[int, int] = {}
+            for sj in job.sjs:
+                try:
+                    gs = stats.rel(sj.guard.rel)
+                    bs = stats.rel(sj.cond_atom.rel)
+                except KeyError:
+                    continue
+                probe_rows = max(probe_rows, gs.rows)
+                build_rows += bs.rows
+                kv = sj.key_vars
+                if len(kv) != 1:
+                    continue
+                gcol = sj.guard.positions_of(kv[0])[0]
+                bcol = sj.cond_atom.positions_of(kv[0])[0]
+                for v, n in gs.hitters_for(gcol):
+                    probe_h[v] = max(probe_h.get(v, 0), int(n))
+                for v, n in bs.hitters_for(bcol):
+                    build_h[v] = max(build_h.get(v, 0), int(n))
+            ann = choose_skew(
+                probe_rows,
+                build_rows,
+                tuple(sorted(probe_h.items(), key=lambda vn: (-vn[1], vn[0]))),
+                P,
+                build_hitters=tuple(
+                    sorted(build_h.items(), key=lambda vn: (-vn[1], vn[0]))
+                ),
+                packing=packing,
+                skew_factor=skew_factor,
+            )
+            if ann is not None and threshold is not None:
+                ann = replace(ann, threshold=int(threshold))
+            jobs.append(replace(job, skew=ann) if ann is not None else job)
+        rounds.append(Round(tuple(jobs)))
+    return Plan(tuple(rounds))
+
+
+# --------------------------------------------------------------------------
 # Modeled plan cost (total / net) — what the experiments report
 # --------------------------------------------------------------------------
 
@@ -896,7 +1084,7 @@ def job_cost(
     job: Job, stats: Stats, consts: CostConstants = HADOOP, *, model: str = "gumbo"
 ) -> float:
     if isinstance(job, MSJJob):
-        c = msj_job_cost(list(job.sjs), stats, consts, model=model)
+        c = msj_job_cost(list(job.sjs), stats, consts, model=model, skew=job.skew)
         for q in job.fused:
             stats.register_output(
                 q.name, stats.rel(q.guard.rel).rows * stats.default_sel, len(q.out_vars)
@@ -904,12 +1092,20 @@ def job_cost(
         for sj in job.sjs:
             stats.register_output(sj.out, stats.out_rows(sj), len(sj.out_vars))
         return c
+    if isinstance(job, SkewProfileJob):
+        # one scan over the guard inputs to sketch hot keys; registers
+        # nothing — the salt table is routing metadata, not a relation
+        return msj_profile_cost(list(job.base.sjs), stats, consts)
     if isinstance(job, TransferJob):
         # priced before the paired compute in node order; registers
         # nothing — the outputs only exist once the compute publishes
-        return msj_transfer_cost(list(job.base.sjs), stats, consts, model=model)
+        return msj_transfer_cost(
+            list(job.base.sjs), stats, consts, model=model, skew=job.base.skew
+        )
     if isinstance(job, ComputeJob):
-        c = msj_compute_cost(list(job.base.sjs), stats, consts, model=model)
+        c = msj_compute_cost(
+            list(job.base.sjs), stats, consts, model=model, skew=job.base.skew
+        )
         for q in job.base.fused:
             stats.register_output(
                 q.name, stats.rel(q.guard.rel).rows * stats.default_sel, len(q.out_vars)

@@ -44,6 +44,8 @@ def _label(rec: "JobRecord") -> str:
         return f"XFER x{len(job.base.sjs)}"
     if kind == "ComputeJob":
         return f"PROBE x{len(job.base.sjs)}"
+    if kind == "SkewProfileJob":
+        return f"SKEW x{len(job.base.sjs)}"
     return kind
 
 

@@ -41,7 +41,9 @@ from repro.core.planner import (
     Plan,
     Round,
     _register_stratum_outputs,
+    annotate_skew,
     concat_plans,
+    job_dag,
     levels_of,
     plan_greedy,
 )
@@ -502,10 +504,14 @@ class SGFService:
         # the epoch key also pins *which queries* occupy the warm slots the
         # cold batch reads (their closure blobs): an identical-looking cold
         # batch fed by a differently-defined warm upstream must not reuse a
-        # plan costed with the old upstream's cardinality
+        # plan costed with the old upstream's cardinality.  It also pins
+        # the skew decision (DESIGN.md §17): the defense annotates the
+        # trimmed plan per tick from hitter evidence, so a config/sketch
+        # flip must not serve a plan whose annotation era differs
         epoch_key = (
             self.catalog.dep_epochs(cold_deps),
             tuple(sorted((n, meta[n][0]) for n in warm_read)),
+            ("skew", self.config.skew_defense, self.catalog.heavy_hitters),
         )
         plan, _hit = self.cache.get_or_plan(
             cold,
@@ -517,6 +523,19 @@ class SGFService:
         local_names = set(warm) | {q.name for q in cold}
         plan, injected = self._trim_plan(plan, local_names)
         info["x_injected"] = len(injected)
+        if self.config.skew_defense:
+            # annotate AFTER trimming — _trim_plan rebuilds MSJ jobs from
+            # their surviving equations, which would drop any earlier
+            # annotation; the evidence is the catalog's heavy-hitter
+            # sketch (Catalog(heavy_hitters=k)), absent which no job ever
+            # qualifies and the defense is a structural no-op
+            plan = annotate_skew(
+                plan, stats, self.catalog.P, packing=self.config.packing
+            )
+            info["skew_defended"] = sum(
+                1 for rnd in plan.rounds for job in rnd.jobs
+                if isinstance(job, MSJJob) and job.skew is not None
+            )
         self._verify_plan(plan, warm, injected)
         # injected X relations must be visible to the scheduler's LPT cost
         # estimates; ``stats`` is tick-private (the planner lambda took its
@@ -565,8 +584,18 @@ class SGFService:
         schema = {n: r.arity for n, r in self.catalog.db().items()}
         schema.update({n: r.arity for n, r in warm.items()})
         schema.update({n: r.arity for n, r in injected.items()})
+        # verify the DAG shape that will actually execute: overlap and the
+        # skew defense add sub-nodes with their own sanctioned same-round
+        # RAW edges, which must be covered in the executed node set
+        nodes = job_dag(
+            plan,
+            self.config.dag_edges,
+            overlap=self.config.overlap,
+            skew=self.config.skew_defense,
+        )
         findings = verify_plan(
-            plan, schema=schema, edges=self.config.dag_edges, canonical=True
+            plan, schema=schema, nodes=nodes, edges=self.config.dag_edges,
+            canonical=True,
         )
         self.verify_findings += len(findings)
         errs = _errors(findings)

@@ -23,7 +23,7 @@ from typing import Iterable, Mapping, Sequence
 import numpy as np
 
 from repro.core.algebra import BSGF, SGF
-from repro.core.costmodel import RelStats, Stats
+from repro.core.costmodel import RelStats, Stats, stats_of_db
 from repro.core.relation import Relation
 
 
@@ -44,9 +44,18 @@ _RESERVED = re.compile(r"^[qv]\d+$")
 class Catalog:
     """Named resident relations, all sharded over the same ``P``."""
 
-    def __init__(self, *, P: int = 8, default_sel: float = 0.5):
+    def __init__(
+        self, *, P: int = 8, default_sel: float = 0.5, heavy_hitters: int = 0
+    ):
         self.P = P
         self.default_sel = default_sel
+        #: per-column top-k heavy-hitter sketch depth carried on the
+        #: memoized Stats (``RelStats.heavy_hitters``) — the plan-time
+        #: evidence ``planner.annotate_skew`` decides from (DESIGN.md §17).
+        #: 0 (default) skips the sketch pass entirely: hitter collection
+        #: scans every resident column, which the hot path must only pay
+        #: when the service actually runs the skew defense.
+        self.heavy_hitters = int(heavy_hitters)
         self._rels: dict[str, Relation] = {}
         #: selectivity estimates, keyed (guard_rel, cond_rel) as in Stats
         self.sel: dict[tuple, float] = {}
@@ -145,11 +154,19 @@ class Catalog:
         """
         if self._stats_cache is not None and self._stats_cache[0] == self.epoch:
             return self._stats_cache[1]
-        rels = {
-            name: RelStats(rows=float(r.count()), arity=r.arity)
-            for name, r in self._rels.items()
-        }
-        st = Stats(rels, dict(self.sel), self.default_sel)
+        if self.heavy_hitters > 0:
+            # same memoization discipline, plus the per-column top-k
+            # sketch the skew annotation consumes (DESIGN.md §17)
+            st = stats_of_db(
+                self._rels, dict(self.sel), self.default_sel,
+                heavy_hitters=self.heavy_hitters,
+            )
+        else:
+            rels = {
+                name: RelStats(rows=float(r.count()), arity=r.arity)
+                for name, r in self._rels.items()
+            }
+            st = Stats(rels, dict(self.sel), self.default_sel)
         self._stats_cache = (self.epoch, st)
         return st
 

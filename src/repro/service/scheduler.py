@@ -73,12 +73,14 @@ class SlotScheduler:
         wall_scale: Callable | None = None,
     ) -> tuple[dict, Report]:
         # must mirror the executor's own node set exactly — under overlap
-        # the DAG holds transfer/compute sub-nodes whose costs the model
-        # prices separately (msj_transfer_cost / msj_compute_cost)
+        # (and the skew defense) the DAG holds sub-nodes whose costs the
+        # model prices separately (msj_transfer_cost / msj_compute_cost /
+        # msj_profile_cost)
         est = self._estimate(job_dag(
             plan,
             edges=self.executor.config.dag_edges,
             overlap=self.executor.config.overlap,
+            skew=self.executor.config.skew_defense,
         ))
         env, report = self.executor.execute(
             plan, slots=self.slots, est=est, on_job=on_job,

@@ -19,6 +19,7 @@ from repro.core.executor import (
     Executor,
     ExecutorConfig,
     PROBE_BACKENDS,
+    RetryState,
     execute_plan,
 )
 from repro.core.planner import MSJJob, plan_par
@@ -116,6 +117,76 @@ def test_backends_agree_through_overflow_retry(backend):
     env, rep = execute_plan(db, plan_par([q]), SimComm(4), cfg)
     assert env["Z"].to_set() == _oracle(db_np, q), backend
     assert any(r.attempts > 1 for r in rep.records), backend
+
+
+def test_pallas_overflow_retry_consults_learned_cap():
+    """The corpus above proves the retry *outcome* converges on every
+    backend, but never pins WHICH capacity the bucketed pallas path re-runs
+    with.  Drive ``run_job_ft`` with an explicit :class:`RetryState` and
+    assert each rung of the learned-cap ladder is consulted verbatim:
+
+    rung 1 (deliberate undersizing, ``cap_slack`` << 1): the first overflow
+    clears the slack and re-sizes from exact counts — ``cap=None``,
+    ``slack=1.0``;
+    rung 2 (stale counts, synthetic): ``on_overflow`` doubles the observed
+    capacity and a re-dispatch with that state must size its forward
+    buffers to exactly the learned cap.
+    """
+    rng = np.random.default_rng(11)
+    q = BSGF("Z", XYZW, Atom("R", *XYZW),
+             all_of(Atom("S", "x"), Atom("T", "y")))
+    db_np = {"R": rng.integers(0, 32, (192, 4)).astype(np.int32),
+             "S": rng.integers(0, 32, (128, 1)).astype(np.int32),
+             "T": rng.integers(0, 32, (128, 1)).astype(np.int32)}
+    db = db_from_dict(db_np, P=4)
+    cfg = ExecutorConfig(probe_backend="pallas", cap_slack=0.02, max_retries=3)
+    ex = Executor(dict(db), SimComm(4), cfg)
+    plan = plan_par([q])
+    msj_jobs = [j for r in plan.rounds for j in r.jobs if isinstance(j, MSJJob)]
+    job = msj_jobs[0]
+
+    # rung 1: undersized first attempt overflows, ladder clears the slack
+    state = RetryState()
+    outs, stats, attempts = ex.run_job_ft(job, None, state=state)
+    assert stats["backend"] == "pallas"
+    assert attempts >= 2
+    assert state.overflow_retries >= 1
+    assert state.cap is None and state.slack == 1.0
+    assert int(stats["overflow"]) == 0
+
+    # the converged retry is bit-identical to a never-undersized run
+    clean = Executor(dict(db), SimComm(4),
+                     ExecutorConfig(probe_backend="pallas"))
+    outs_clean, stats_clean = clean.run_job(job)
+    assert set(outs) == set(outs_clean)
+    for k in outs:
+        assert outs[k].to_set() == outs_clean[k].to_set(), k
+
+    # rung 2: a further (synthetic) overflow doubles the observed capacity
+    # and the learned cap must be consulted verbatim on the re-dispatch
+    learned = int(stats["forward_cap"])
+    state.on_overflow(cfg, stats)
+    assert state.cap == max(learned, 1) * 2
+    assert state.overflow_retries >= 2
+    outs2, stats2 = ex.run_job(job, cap_override=state.cap,
+                               cap_slack=state.slack)
+    assert int(stats2["forward_cap"]) == state.cap
+    assert int(stats2["overflow"]) == 0
+
+    # end-to-end: publish the MSJ outputs (every sibling job rides the same
+    # undersized-config ladder) and finish the plan — the ladder path must
+    # still agree with the set-semantics oracle
+    ex.env.update(outs)
+    for rnd in plan.rounds:
+        for j in rnd.jobs:
+            if isinstance(j, MSJJob):
+                if j is not job:
+                    jouts, _, _ = ex.run_job_ft(j, None, state=RetryState())
+                    ex.env.update(jouts)
+            else:
+                eouts, _ = ex.run_job(j)
+                ex.env.update(eouts)
+    assert ex.env["Z"].to_set() == _oracle(db_np, q)
 
 
 def test_choose_backend_cost_model():

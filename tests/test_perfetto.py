@@ -10,8 +10,8 @@ from pathlib import Path
 import pytest
 
 from repro.core.algebra import Atom, SemiJoin
-from repro.core.executor import JobRecord, Report
-from repro.core.planner import MSJJob
+from repro.core.executor import COMM_SLOT, JobRecord, Report
+from repro.core.planner import ComputeJob, MSJJob, SkewProfileJob, TransferJob
 from repro.obs import (
     phase_breakdown,
     report_from_trace,
@@ -41,13 +41,16 @@ def _mk_job(out: str, guard_rel: str, cond_rel: str) -> MSJJob:
 def straggler_report() -> Report:
     """Deterministic 2-slot straggler timeline: one long job on slot 0,
     three shorts backfilling slot 1, a round-1 dependent of a short (→ a
-    DAG flow arrow), and a speculation pair on a round-1 job (→ a
-    loser → winner arrow) — every field hand-fixed so the exported trace
-    is byte-stable (the golden file)."""
+    DAG flow arrow), a speculation pair on a round-1 job (→ a
+    loser → winner arrow), and a skew-split triple on slot 2 / the comm
+    track (profile → salted transfer → compute, DESIGN.md §17, with the
+    %salt and %xfer RAW arrows) — every field hand-fixed so the exported
+    trace is byte-stable (the golden file)."""
     big = _mk_job("XB", "RBIG", "S")
     shorts = [_mk_job(f"X{i}", f"G{i}", "S") for i in range(1, 4)]
     dep = _mk_job("XD", "X1", "T")  # reads short 1's output
     spec = _mk_job("XS", "XB", "T")  # reads the straggler's output
+    hot = _mk_job("XK", "RHOT", "S")  # skew-annotated at plan time
     recs = [
         JobRecord(big, 0, 4.0, {"bytes_fwd": 4096, "bytes_bwd": 512},
                   backend="sorted", start=0.0, end=4.0, slot=0,
@@ -60,6 +63,15 @@ def straggler_report() -> Report:
         JobRecord(shorts[0], 0, 1.0, {}, start=0.0, end=1.0, slot=1),
         JobRecord(shorts[1], 0, 1.0, {}, start=1.0, end=2.0, slot=1),
         JobRecord(shorts[2], 0, 1.0, {}, start=2.0, end=3.0, slot=1),
+        # skew-split triple: the profile publishes the salt table, the
+        # salted transfer rides the dedicated comm track, the compute half
+        # consumes the buffer back on a cluster slot
+        JobRecord(SkewProfileJob(hot, "%salt0"), 0, 0.5, {},
+                  start=0.0, end=0.5, slot=2),
+        JobRecord(TransferJob(hot, "%xfer0", "%salt0"), 0, 1.0,
+                  {"bytes_fwd": 1024}, start=0.5, end=1.5, slot=COMM_SLOT),
+        JobRecord(ComputeJob(hot, "%xfer0"), 0, 1.0, {"bytes_bwd": 128},
+                  backend="sorted", start=1.5, end=2.5, slot=2),
         # round 1: dependent of short 1, dispatched on the freed slot
         JobRecord(dep, 1, 2.0, {}, start=3.0, end=5.0, slot=1),
         # round 1: speculation pair — original loses, clone wins (the two
@@ -94,6 +106,25 @@ class TestGoldenTrace:
             if ev["ph"] in ("s", "f"):
                 assert isinstance(ev["id"], int)
 
+    def test_golden_carries_skew_split_slices(self):
+        """The skew-split triple exports with its own labels, the salted
+        transfer on the comm track, access sets including the %salt/%xfer
+        state, and DAG arrows for both sanctioned same-round RAWs."""
+        golden = json.loads(GOLDEN.read_text())
+        jobs = {e["name"]: e for e in golden["traceEvents"]
+                if e.get("ph") == "X" and e.get("cat") == "job"}
+        assert {"SKEW x1", "XFER x1", "PROBE x1"} <= set(jobs)
+        assert jobs["SKEW x1"]["args"]["writes"] == ["%salt0"]
+        assert "%salt0" in jobs["XFER x1"]["args"]["reads"]
+        assert jobs["XFER x1"]["tid"] == COMM_SLOT
+        assert "%xfer0" in jobs["PROBE x1"]["args"]["reads"]
+        arrows = {e["name"] for e in golden["traceEvents"]
+                  if e.get("ph") == "s" and e.get("cat") == "dag"}
+        assert {"dep:%salt0", "dep:%xfer0"} <= arrows
+        from repro.obs.perfetto import audit_trace
+
+        assert audit_trace(golden) == []
+
     def test_golden_replay_bit_exact(self):
         rep = straggler_report()
         rep2 = report_from_trace(json.loads(GOLDEN.read_text()))
@@ -108,7 +139,8 @@ class TestExporter:
         events = trace_events(straggler_report())
         thread_names = {e["tid"]: e["args"]["name"] for e in events
                         if e.get("ph") == "M" and e["name"] == "thread_name"}
-        assert thread_names == {0: "slot 0", 1: "slot 1"}
+        assert thread_names == {0: "slot 0", 1: "slot 1", 2: "slot 2",
+                                COMM_SLOT: "comm"}
         phases = [e for e in events
                   if e.get("ph") == "X" and e.get("cat") == "phase"]
         assert [e["name"] for e in phases] == [
